@@ -1,0 +1,36 @@
+"""Paper Fig. 10: prefill/decode arrangement ablation — RelServe (adaptive ABA)
+vs RelServe(PP) (always-prefill) vs RelServe(DP) (always-decode)."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import BenchCell, csv_row, run_cell, shared_trace
+
+SCHEDS = ("relserve", "relserve_pp", "relserve_dp")
+
+
+def run(datasets=("amazon", "pdmx"), rates=(0.5, 1.0),
+        regimes=("opt13b", "llama70b"), num_relqueries=100, seed=0,
+        quiet=False) -> List[str]:
+    rows = []
+    for regime in regimes:
+        for ds in datasets:
+            for rate in rates:
+                trace = shared_trace(ds, rate, num_relqueries, seed)
+                base = None
+                for s in SCHEDS:
+                    rep = run_cell(BenchCell(s, ds, rate, regime,
+                                             num_relqueries, seed), trace)
+                    if s == "relserve":
+                        base = rep.avg_latency
+                    rows.append(csv_row(
+                        f"fig10/{regime}/{ds}/rate{rate}/{s}",
+                        rep.avg_latency * 1e6,
+                        f"normalized={rep.avg_latency / base:.3f}"))
+                    if not quiet:
+                        print(rows[-1], flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,67 @@
+"""Shared benchmark harness: run (scheduler x dataset x rate) cells on the
+simulated clock with the paper-regime cost model."""
+from __future__ import annotations
+
+import copy
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.latency_model import BatchLatencyModel, a100_opt13b
+from repro.core.policies import SCHEDULERS
+from repro.core.priority import BatchLimits, DPUConfig
+from repro.data.datasets import make_dataset
+from repro.data.trace import TraceConfig, build_trace
+from repro.engine.engine import ServiceReport, ServingEngine
+from repro.engine.prefix_cache import PrefixCache
+from repro.engine.simulator import SimulatedExecutor
+
+# model-size regimes: batch-cost scale relative to OPT-13B on 1xA100
+MODEL_REGIMES = {
+    "opt13b": 1.0,       # paper's OPT-13B, 1 GPU
+    "qwen32b": 1.8,      # paper's Qwen2.5-32B, 2 GPUs
+    "llama70b": 3.2,     # paper's Llama2-70B, 4 GPUs
+}
+
+
+@dataclass
+class BenchCell:
+    scheduler: str
+    dataset: str
+    rate: float
+    regime: str = "opt13b"
+    num_relqueries: int = 100
+    seed: int = 0
+    starvation_threshold: Optional[float] = None
+
+
+def run_cell(cell: BenchCell, trace=None) -> ServiceReport:
+    lm = a100_opt13b().scaled(MODEL_REGIMES[cell.regime])
+    if trace is None:
+        ds = make_dataset(cell.dataset, num_rows=10_000, seed=cell.seed)
+        trace = build_trace(ds, TraceConfig(num_relqueries=cell.num_relqueries,
+                                            rate=cell.rate, seed=cell.seed))
+    else:
+        trace = copy.deepcopy(trace)
+    pc = PrefixCache(block_size=16)
+    kw = dict(limits=BatchLimits(), latency_model=lm, prefix_cache=pc)
+    if cell.scheduler.startswith("relserve"):
+        kw["dpu_config"] = DPUConfig(starvation_threshold=cell.starvation_threshold)
+    sched = SCHEDULERS[cell.scheduler](**kw)
+    ex = SimulatedExecutor(lm, prefix_cache=pc, seed=cell.seed)
+    engine = ServingEngine(sched, ex)
+    report = engine.run_trace(trace)
+    report.scheduler = sched           # benchmarks inspect stats
+    report.executor = ex
+    return report
+
+
+def shared_trace(dataset: str, rate: float, num_relqueries: int = 100,
+                 seed: int = 0):
+    ds = make_dataset(dataset, num_rows=10_000, seed=seed)
+    return build_trace(ds, TraceConfig(num_relqueries=num_relqueries,
+                                       rate=rate, seed=seed))
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,73 @@
+"""Paper Fig. 7: batch-duration linearity. Profiles the *real* JAX executor on
+a smoke model and shows R²(duration ~ uncached tokens) > R²(duration ~ total
+tokens) once the prefix cache is active — the observation that motivates
+utok-based cost prediction."""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+
+from benchmarks.common import csv_row
+from repro.configs import get_smoke_config
+from repro.core.latency_model import fit, r_squared
+from repro.core.policies import SCHEDULERS
+from repro.core.priority import BatchLimits
+from repro.data.datasets import make_dataset
+from repro.data.trace import TraceConfig, build_trace
+from repro.engine.engine import ServingEngine
+from repro.engine.executor import RealExecutor
+from repro.engine.prefix_cache import PrefixCache
+from repro.engine.tokenizer import HashTokenizer
+from repro.models.registry import build_model
+
+
+def run(arch="qwen3-1.7b", quiet=False) -> List[str]:
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    tok = HashTokenizer(vocab_size=cfg.vocab_size - 2)
+    ds = make_dataset("rotten", num_rows=400, seed=0, items_per_catalog=12)
+    trace = build_trace(ds, TraceConfig(num_relqueries=8, rate=4.0, seed=1,
+                                        max_requests=6), tokenizer=tok)
+    for rq in trace:
+        rq.max_output_tokens = 4
+        for r in rq.requests:
+            r.max_output_tokens = 4
+            r.sim_output_len = 4
+    pc = PrefixCache(block_size=16)
+    sched = SCHEDULERS["vllm"](limits=BatchLimits(cap=200_000), prefix_cache=pc)
+    ex = RealExecutor(model, params, max_slots=32, max_len=512, prefix_cache=pc)
+    # track total tokens alongside measured utok samples
+    totals = []
+    orig = ex.execute
+
+    def wrapped(batch, now):
+        if batch.kind == "prefill":
+            totals.append(sum(r.num_prompt_tokens for r in batch.requests))
+        return orig(batch, now)
+
+    ex.execute = wrapped
+    ServingEngine(sched, ex).run_trace(trace)
+
+    pre = [s for s in ex.prefill_samples[1:]]       # drop compile-time sample
+    tot = list(zip(totals[1:], [d for _, d in pre]))
+    fitted = fit(pre, ex.decode_samples[1:] or ex.decode_samples)
+    r2_utok = r_squared(pre, fitted.alpha_p, fitted.beta_p) if len(pre) > 2 else 0.0
+    ftot = fit(tot, [])
+    r2_tot = r_squared(tot, ftot.alpha_p, ftot.beta_p) if len(tot) > 2 else 0.0
+    rows = [
+        csv_row("fig7/prefill_linearity", fitted.alpha_p * 1e6,
+                f"r2_uncached={r2_utok:.3f};r2_total={r2_tot:.3f};"
+                f"alpha_p={fitted.alpha_p:.2e};beta_p={fitted.beta_p:.3f}"),
+        csv_row("fig7/decode_linearity", fitted.alpha_d * 1e6,
+                f"alpha_d={fitted.alpha_d:.2e};beta_d={fitted.beta_d:.3f}"),
+    ]
+    if not quiet:
+        for r in rows:
+            print(r, flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

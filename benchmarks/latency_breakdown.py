@@ -1,0 +1,29 @@
+"""Paper Fig. 11: waiting / core-running / tail-running breakdown,
+vLLM-SP vs RelServe (Beer + OPT regime, as in the paper)."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import BenchCell, csv_row, run_cell, shared_trace
+
+
+def run(dataset="beer", rates=(0.6, 0.8, 1.0), num_relqueries=100, seed=0,
+        quiet=False) -> List[str]:
+    rows = []
+    for rate in rates:
+        trace = shared_trace(dataset, rate, num_relqueries, seed)
+        for s in ("vllm", "vllm_sp", "relserve"):
+            rep = run_cell(BenchCell(s, dataset, rate, "opt13b",
+                                     num_relqueries, seed), trace)
+            w, c, t = rep.phase_means()
+            rows.append(csv_row(
+                f"fig11/{dataset}/rate{rate}/{s}",
+                rep.avg_latency * 1e6,
+                f"waiting={w:.2f}s;core={c:.2f}s;tail={t:.2f}s"))
+            if not quiet:
+                print(rows[-1], flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,36 @@
+"""Paper Fig. 9: average relQuery latency — RelServe vs vLLM / Sarathi /
+vLLM-SP across datasets, workloads (arrival rates), and model regimes."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import BenchCell, csv_row, run_cell, shared_trace
+
+SCHEDS = ("vllm", "sarathi", "vllm_sp", "relserve")
+
+
+def run(datasets=("amazon", "rotten", "beer", "pdmx"), rates=(0.5, 0.75, 1.0),
+        regimes=("opt13b",), num_relqueries=100, seed=0, quiet=False) -> List[str]:
+    rows = []
+    for regime in regimes:
+        for ds in datasets:
+            for rate in rates:
+                trace = shared_trace(ds, rate, num_relqueries, seed)
+                base = None
+                for s in SCHEDS:
+                    rep = run_cell(BenchCell(s, ds, rate, regime,
+                                             num_relqueries, seed), trace)
+                    if s == "vllm":
+                        base = rep.avg_latency
+                    speedup = base / rep.avg_latency if rep.avg_latency else 0.0
+                    rows.append(csv_row(
+                        f"fig9/{regime}/{ds}/rate{rate}/{s}",
+                        rep.avg_latency * 1e6,
+                        f"speedup_vs_vllm={speedup:.2f}x"))
+                    if not quiet:
+                        print(rows[-1], flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+"""Paper Table 6: DPU / ABA wall-clock overhead vs end-to-end service time.
+
+The scheduler runs on the host in real time while the executor clock is
+simulated, so the comparison baseline is the simulated E2E duration — the same
+ratio the paper reports (their Table 6: <1%)."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import BenchCell, csv_row, run_cell, shared_trace
+
+
+def run(dataset="beer", rates=(0.5, 0.6, 0.7, 0.8, 0.9, 1.0),
+        num_relqueries=100, seed=0, quiet=False) -> List[str]:
+    rows = []
+    for rate in rates:
+        trace = shared_trace(dataset, rate, num_relqueries, seed)
+        rep = run_cell(BenchCell("relserve", dataset, rate, "opt13b",
+                                 num_relqueries, seed), trace)
+        e2e = rep.end_to_end
+        frac = (rep.dpu_time + rep.aba_time) / e2e if e2e else 0.0
+        rows.append(csv_row(
+            f"table6/{dataset}/rate{rate}",
+            (rep.dpu_time + rep.aba_time) * 1e6,
+            f"dpu={rep.dpu_time:.3f}s;aba={rep.aba_time:.3f}s;"
+            f"e2e={e2e:.1f}s;frac={frac:.4f}"))
+        if not quiet:
+            print(rows[-1], flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,94 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Roofline harness (deliverable g): derives the three roofline terms per
+(arch x shape) from the compiled single-pod dry-run, with scan-body-corrected
+FLOPs/bytes/collectives (see repro.launch.roofline). Run standalone —
+
+  PYTHONPATH=src python -m benchmarks.roofline [--arch A] [--shape S]
+
+— results land in experiments/roofline.json; `benchmarks.run` summarizes them
+without re-lowering (the 512 placeholder devices live only in this process).
+"""
+
+import argparse
+import json
+import traceback
+
+from repro.configs import ARCH_IDS, get_config, get_shape
+from repro.configs.base import ALL_SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import corrected_stats, roofline_row
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "roofline.json")
+DRYRUN_PATH = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                           "dryrun_results.json")
+
+
+def load_dryrun_rows():
+    if not os.path.exists(DRYRUN_PATH):
+        return {}
+    with open(DRYRUN_PATH) as f:
+        rows = json.load(f)
+    return {(r["arch"], r["shape"]): r for r in rows
+            if r.get("status") == "ok" and r.get("mesh") == "16x16"
+            and "dot_flops_per_device" in r}
+
+
+def fmt_row(r):
+    return (f"{r['arch']:22s} {r['shape']:12s} {r['bottleneck']:10s} "
+            f"C={r['compute_term_s']*1e3:9.3f}ms "
+            f"M={r['memory_term_s']*1e3:9.3f}ms "
+            f"X={r['collective_term_s']*1e3:9.3f}ms "
+            f"useful={r['useful_ratio']:.2f} mfu@bound={r['mfu_at_bound']:.2%}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=False)
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else [s.name for s in ALL_SHAPES]
+
+    out_path = os.path.abspath(args.out)
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    rows = []
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            rows = json.load(f)
+    keyed = {(r["arch"], r["shape"]): r for r in rows}
+
+    dryrun = load_dryrun_rows()
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape_name in shapes:
+            shape = get_shape(shape_name)
+            if not cfg.supports_shape(shape):
+                keyed[(arch, shape_name)] = {
+                    "arch": arch, "shape": shape_name, "status": "skipped",
+                    "reason": "full-attention arch skips long_500k"}
+                print(f"{arch:22s} {shape_name:12s} skipped")
+                continue
+            try:
+                row = roofline_row(arch, shape_name, mesh,
+                                   dryrun_row=dryrun.get((arch, shape_name)))
+                row["status"] = "ok"
+                keyed[(arch, shape_name)] = row
+                print(fmt_row(row), flush=True)
+            except Exception as e:  # noqa: BLE001
+                keyed[(arch, shape_name)] = {
+                    "arch": arch, "shape": shape_name, "status": "failed",
+                    "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc(limit=6)}
+                print(f"{arch:22s} {shape_name:12s} FAILED {e}", flush=True)
+            with open(out_path, "w") as f:
+                json.dump(list(keyed.values()), f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Benchmark runner — one section per paper table/figure. Prints
+``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--full]
+
+Roofline terms come from experiments/roofline.json (produced by
+``python -m benchmarks.roofline``, which needs its own process for the 512
+placeholder devices); if present they are summarized here.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+from benchmarks import (
+    ablation_arrangement, cost_model_fit, latency_breakdown,
+    latency_comparison, motivation, overhead, starvation,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced matrix for CI (2 datasets, 1 rate, 40 rqs)")
+    ap.add_argument("--full", action="store_true",
+                    help="full paper matrix incl. llama70b/qwen32b regimes")
+    args = ap.parse_args()
+
+    t0 = time.time()
+    rows = ["name,us_per_call,derived"]
+    print(rows[0])
+
+    if args.quick:
+        rows += latency_comparison.run(datasets=("rotten", "beer"), rates=(1.0,),
+                                       num_relqueries=40)
+        rows += ablation_arrangement.run(datasets=("pdmx",), rates=(1.0,),
+                                         regimes=("opt13b",), num_relqueries=40)
+        rows += latency_breakdown.run(rates=(1.0,), num_relqueries=40)
+        rows += overhead.run(rates=(1.0,), num_relqueries=40)
+        rows += starvation.run(thresholds=(None, 0.05), num_relqueries=40)
+        rows += motivation.run(num_relqueries=40)
+    elif args.full:
+        rows += latency_comparison.run(regimes=("opt13b", "qwen32b", "llama70b"))
+        rows += ablation_arrangement.run()
+        rows += latency_breakdown.run()
+        rows += overhead.run()
+        rows += starvation.run()
+        rows += motivation.run()
+        rows += cost_model_fit.run()
+    else:
+        rows += latency_comparison.run()
+        rows += ablation_arrangement.run()
+        rows += latency_breakdown.run()
+        rows += overhead.run()
+        rows += starvation.run()
+        rows += motivation.run()
+        rows += cost_model_fit.run()
+
+    # roofline summary (precomputed by benchmarks.roofline in its own process)
+    rl = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                      "roofline.json")
+    if os.path.exists(rl):
+        with open(rl) as f:
+            for r in json.load(f):
+                if r.get("status") != "ok":
+                    continue
+                line = (f"roofline/{r['arch']}/{r['shape']},"
+                        f"{r['step_time_bound_s']*1e6:.1f},"
+                        f"bottleneck={r['bottleneck']};"
+                        f"useful={r['useful_ratio']:.2f};"
+                        f"mfu_bound={r['mfu_at_bound']:.3f}")
+                rows.append(line)
+                print(line)
+    else:
+        print("# roofline.json missing — run: PYTHONPATH=src python -m benchmarks.roofline",
+              file=sys.stderr)
+
+    print(f"# {len(rows)-1} rows in {time.time()-t0:.0f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

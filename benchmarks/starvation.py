@@ -1,0 +1,29 @@
+"""Paper Fig. 12: starvation-threshold sweep — lower thresholds bound the
+maximum latency at some cost in average latency."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import BenchCell, csv_row, run_cell, shared_trace
+
+
+def run(dataset="beer", rate=0.8, thresholds=(None, 0.5, 0.1, 0.02),
+        num_relqueries=100, seed=0, quiet=False) -> List[str]:
+    rows = []
+    trace = shared_trace(dataset, rate, num_relqueries, seed)
+    for th in thresholds:
+        rep = run_cell(BenchCell("relserve", dataset, rate, "opt13b",
+                                 num_relqueries, seed,
+                                 starvation_threshold=th), trace)
+        name = "off" if th is None else f"{th:g}s"
+        rows.append(csv_row(
+            f"fig12/{dataset}/threshold_{name}",
+            rep.avg_latency * 1e6,
+            f"max={rep.max_latency:.1f}s;p99={rep.percentile(99):.1f}s"))
+        if not quiet:
+            print(rows[-1], flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

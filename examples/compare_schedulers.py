@@ -1,0 +1,44 @@
+"""Paper-scale scheduler comparison on the simulated clock (Fig. 9 in
+miniature): all six policies, one dataset, one load point.
+
+  PYTHONPATH=src python examples/compare_schedulers.py [--rate 1.0]
+"""
+import argparse
+import copy
+
+from repro.core.latency_model import a100_opt13b
+from repro.core.policies import SCHEDULERS
+from repro.core.priority import BatchLimits
+from repro.data.trace import quick_trace
+from repro.engine.engine import ServingEngine
+from repro.engine.prefix_cache import PrefixCache
+from repro.engine.simulator import SimulatedExecutor
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="rotten")
+    ap.add_argument("--rate", type=float, default=1.0)
+    ap.add_argument("--num-relqueries", type=int, default=60)
+    args = ap.parse_args()
+
+    lm = a100_opt13b()
+    base = quick_trace(args.dataset, num_relqueries=args.num_relqueries,
+                       rate=args.rate, seed=7, num_rows=10_000, max_requests=100)
+    print(f"{args.dataset} @ {args.rate} relQueries/s, "
+          f"{sum(len(r.requests) for r in base)} requests total\n")
+    print(f"{'scheduler':12s} {'avg':>8s} {'p99':>8s} {'max':>8s} "
+          f"{'wait':>7s} {'core':>7s} {'tail':>7s}")
+    for name in SCHEDULERS:
+        pc = PrefixCache(block_size=16)
+        sched = SCHEDULERS[name](limits=BatchLimits(), latency_model=lm,
+                                 prefix_cache=pc)
+        eng = ServingEngine(sched, SimulatedExecutor(lm, prefix_cache=pc))
+        rep = eng.run_trace(copy.deepcopy(base))
+        w, c, t = rep.phase_means()
+        print(f"{name:12s} {rep.avg_latency:7.2f}s {rep.percentile(99):7.2f}s "
+              f"{rep.max_latency:7.2f}s {w:6.2f}s {c:6.2f}s {t:6.2f}s")
+
+
+if __name__ == "__main__":
+    main()

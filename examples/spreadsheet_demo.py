@@ -1,0 +1,62 @@
+"""AI-spreadsheet scenario (paper Fig. 1): a user drags an LLM cell function
+down a column; each drag is one relQuery. A second user's shorter column
+arrives while the first is running — RelServe's DPU lets it bypass the long
+one (preemption), and ABA balances finishing the first against starting the
+second.
+
+  PYTHONPATH=src python examples/spreadsheet_demo.py
+"""
+import jax
+
+from repro.configs import get_smoke_config
+from repro.core.policies import RelServeScheduler, VLLMScheduler
+from repro.core.priority import BatchLimits
+from repro.core.relquery import make_relquery
+from repro.data.datasets import make_dataset
+from repro.engine.engine import ServingEngine
+from repro.engine.executor import RealExecutor
+from repro.engine.prefix_cache import PrefixCache
+from repro.engine.tokenizer import HashTokenizer
+from repro.models.registry import build_model
+
+
+def build_workload(tok, ds):
+    tpl_sum = ds.templates[3]    # summarize: the long job (24 rows)
+    tpl_cls = ds.templates[1]    # classify: the short job (4 rows)
+    big = make_relquery(
+        "user1/summarize_column",
+        [tok.encode(tpl_sum.render(r)) for r in ds.table.rows[:24]],
+        arrival=0.0, max_output_tokens=6, template_id=tpl_sum.template_id)
+    small = make_relquery(
+        "user2/classify_column",
+        [tok.encode(tpl_cls.render(r)) for r in ds.table.rows[24:28]],
+        arrival=0.05, max_output_tokens=3, template_id=tpl_cls.template_id)
+    return [big, small]
+
+
+def run(scheduler_cls, name, model, params, tok, ds):
+    pc = PrefixCache(block_size=16)
+    sched = scheduler_cls(limits=BatchLimits(cap=100_000), prefix_cache=pc)
+    ex = RealExecutor(model, params, max_slots=32, max_len=512, prefix_cache=pc)
+    trace = build_workload(tok, ds)
+    ServingEngine(sched, ex).run_trace(trace)
+    big, small = trace
+    print(f"{name:10s}: user2 (4 cells)  latency {small.latency():.2f}s | "
+          f"user1 (24 cells) latency {big.latency():.2f}s")
+    return small.latency()
+
+
+def main():
+    cfg = get_smoke_config("qwen2-0.5b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    tok = HashTokenizer(vocab_size=cfg.vocab_size - 2)
+    ds = make_dataset("amazon", num_rows=64, seed=0)
+    l_fcfs = run(VLLMScheduler, "vLLM-FCFS", model, params, tok, ds)
+    l_rel = run(RelServeScheduler, "RelServe", model, params, tok, ds)
+    print(f"\nthe short column returned {l_fcfs / max(l_rel, 1e-9):.1f}x faster "
+          f"under RelServe (no head-of-line blocking behind the big column)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Adaptive Batch Arranger (paper §4.3, Eq. 14-17).
+
+Given the candidate decode batch (all running requests) and the candidate
+prefill batch (head of the priority-ordered waiting queue, single relQuery),
+ABA picks which to execute this iteration:
+
+- m⁺ > m⁻  → *preemption*: a shorter relQuery is waiting; prefill it.
+- m⁺ = m⁻  → *internal*: same relQuery on both sides; prefill first to
+             maximize the eventual combined decode batch.
+- m⁺ < m⁻  → *transitional*: the running relQuery finished its prefills; price
+             the latency trade-off Δ = Δ⁺ + Δ⁻ and prefill only when Δ < 0.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+from repro.core.latency_model import BatchLatencyModel
+from repro.core.relquery import RelQuery, Request
+
+
+@dataclass
+class CandidateBatch:
+    requests: List[Request]
+    uncached_tokens: int = 0      # prefill candidates: utok(p)
+    relquery: Optional[RelQuery] = None
+
+    @property
+    def num_requests(self) -> int:
+        return len(self.requests)
+
+    def min_priority(self, prio_of) -> float:
+        return min(prio_of(r) for r in self.requests)
+
+
+@dataclass
+class ArrangerDecision:
+    kind: str          # 'prefill' | 'decode'
+    case: str          # 'preempt' | 'internal' | 'transitional' | 'forced'
+    delta: Optional[float] = None
+
+
+class AdaptiveBatchArranger:
+    def __init__(self, latency_model: BatchLatencyModel):
+        self.lm = latency_model
+        self.stats = {"preempt": 0, "internal": 0, "transitional_prefill": 0,
+                      "transitional_decode": 0, "forced": 0}
+
+    def choose(
+        self,
+        p_cand: Optional[CandidateBatch],
+        d_cand: Optional[CandidateBatch],
+        running_rqs: Sequence[RelQuery],      # R_t^+
+        waiting_rqs: Sequence[RelQuery],      # R_t^-
+        prio_of,                              # Request -> priority value
+        now: float = 0.0,
+    ) -> ArrangerDecision:
+        if p_cand is None and d_cand is None:
+            raise ValueError("both candidates empty — engine should idle instead")
+        if d_cand is None or not d_cand.requests:
+            self.stats["forced"] += 1
+            return ArrangerDecision("prefill", "forced")
+        if p_cand is None or not p_cand.requests:
+            self.stats["forced"] += 1
+            return ArrangerDecision("decode", "forced")
+
+        m_plus = d_cand.min_priority(prio_of)
+        m_minus = p_cand.min_priority(prio_of)
+        if m_plus > m_minus:
+            self.stats["preempt"] += 1
+            return ArrangerDecision("prefill", "preempt")
+        if m_plus == m_minus:
+            self.stats["internal"] += 1
+            return ArrangerDecision("prefill", "internal")
+
+        delta = self.delta_latency(p_cand, running_rqs, waiting_rqs)
+        if delta < 0:
+            self.stats["transitional_prefill"] += 1
+            return ArrangerDecision("prefill", "transitional", delta)
+        self.stats["transitional_decode"] += 1
+        return ArrangerDecision("decode", "transitional", delta)
+
+    # ------------------------------------------------------------- Eq. 15-17
+    def delta_latency(self, p_cand: CandidateBatch, running_rqs: Sequence[RelQuery],
+                      waiting_rqs: Sequence[RelQuery]) -> float:
+        """Projected total-latency change of executing p_cand before d_cand."""
+        lm = self.lm
+        ol_p = p_cand.relquery.max_output_tokens if p_cand.relquery else \
+            max((r.max_output_tokens for r in p_cand.requests), default=0)
+
+        # Δ⁺ (Eq. 15): every running relQuery is delayed by the prefill pass and
+        # by the larger decode batches it will share with the newcomers.
+        rem_out = {rq.rel_id: max((r.remaining_output for r in rq.running_requests()),
+                                  default=0) for rq in running_rqs}
+        delta_plus = lm.prefill_time(p_cand.uncached_tokens) * len(running_rqs)
+        delta_plus += sum(
+            lm.alpha_d * p_cand.num_requests * min(rem_out[rq.rel_id], ol_p)
+            for rq in running_rqs)
+
+        # Δ⁻ (Eq. 16): waiting relQueries gain from combined decoding — every
+        # decode iteration the newcomer shares with a running relQuery is one
+        # batch overhead β_d the queue does not pay twice.
+        max_run_out = max([rem_out[rq.rel_id] for rq in running_rqs], default=0)
+        delta_minus = -len(waiting_rqs) * lm.beta_d * min(ol_p, max_run_out)
+        return delta_plus + delta_minus

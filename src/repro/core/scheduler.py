@@ -1,0 +1,266 @@
+"""Iteration-level schedulers. ``SchedulerBase`` owns queue mechanics, KV-cap
+accounting and latency-phase bookkeeping (Definition 2.2); ``RelServeScheduler``
+adds the paper's DPU + ABA pipeline (Fig. 6 steps 2-3). Baselines live in
+``repro.core.policies``.
+
+Queues are maintained *incrementally* (per-relQuery waiting lists + a running
+list) so one scheduling iteration costs O(#relQueries + batch size), not
+O(total requests) — at paper scale (~5k requests, tens of thousands of
+iterations) this is the difference between seconds and hours.
+
+The engine contract:
+  batch = scheduler.schedule(now)              # None -> idle
+  ... engine executes batch ...
+  scheduler.complete_batch(batch, results, start_ts, end_ts)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.arranger import AdaptiveBatchArranger, ArrangerDecision, CandidateBatch
+from repro.core.latency_model import BatchLatencyModel
+from repro.core.priority import (
+    BatchLimits, DPUConfig, DynamicPriorityUpdater, PrefixCacheView,
+)
+from repro.core.relquery import RelQuery, Request, RequestState
+
+
+@dataclass
+class ScheduledBatch:
+    kind: str                        # 'prefill' | 'decode' | 'mixed'
+    requests: List[Request]          # prefill targets (or decode requests)
+    uncached_tokens: int = 0         # prefill compute (engine refines w/ real cache)
+    decode_requests: List[Request] = field(default_factory=list)  # mixed batches
+    prefill_chunks: Dict[str, int] = field(default_factory=dict)  # req_id -> chunk len
+    decision: Optional[ArrangerDecision] = None
+
+    @property
+    def num_requests(self) -> int:
+        return len(self.requests) + len(self.decode_requests)
+
+
+@dataclass
+class BatchResult:
+    """Engine-reported outcome: req_id -> (new_token, finished)."""
+    outputs: Dict[str, Tuple[int, bool]]
+    uncached_tokens: Optional[int] = None   # engine-measured true utok
+
+
+class SchedulerBase:
+    def __init__(self, limits: Optional[BatchLimits] = None,
+                 latency_model: Optional[BatchLatencyModel] = None,
+                 prefix_cache: Optional[PrefixCacheView] = None):
+        from repro.core.latency_model import a100_opt13b
+        self.limits = limits or BatchLimits()
+        self.lm = latency_model or a100_opt13b()
+        self.prefix_cache = prefix_cache
+        self.relqueries: Dict[str, RelQuery] = {}
+        self.tokens_in_use = 0
+        self.iteration = 0
+        self.finished_relqueries: List[RelQuery] = []
+        # incremental queues
+        self._waiting_of: Dict[str, List[Request]] = {}
+        self._running: List[Request] = []
+        self._unfinished = 0
+
+    # ------------------------------------------------------------- queue state
+    def add_relquery(self, rq: RelQuery, now: float) -> None:
+        self.relqueries[rq.rel_id] = rq
+        self._waiting_of[rq.rel_id] = list(rq.requests)
+        self._unfinished += 1
+        self.on_relquery_added(rq, now)
+
+    def on_relquery_added(self, rq: RelQuery, now: float) -> None:
+        pass
+
+    def active_relqueries(self) -> List[RelQuery]:
+        return [rq for rq in self.relqueries.values() if not rq.is_finished()]
+
+    def waiting_requests(self) -> List[Request]:
+        out = []
+        for rel_id in self._waiting_of:
+            out.extend(self._waiting_of[rel_id])
+        return out
+
+    def running_requests(self) -> List[Request]:
+        return list(self._running)
+
+    def running_rqs(self) -> List[RelQuery]:
+        seen, out = set(), []
+        for r in self._running:
+            if r.rel_id not in seen:
+                seen.add(r.rel_id)
+                out.append(self.relqueries[r.rel_id])
+        return out
+
+    def waiting_rqs(self) -> List[RelQuery]:
+        running = {r.rel_id for r in self._running}
+        return [self.relqueries[rel_id] for rel_id, lst in self._waiting_of.items()
+                if lst and rel_id not in running]
+
+    def has_work(self) -> bool:
+        return self._unfinished > 0
+
+    # ------------------------------------------------------------- candidates
+    def rq_sort_key(self, rq: RelQuery):
+        """Waiting-queue order: ascending priority, FCFS tie-break."""
+        return (rq.priority, rq.arrival_time, rq.rel_id)
+
+    def sorted_waiting_rqs(self) -> List[RelQuery]:
+        rqs = [self.relqueries[rel_id] for rel_id, lst in self._waiting_of.items() if lst]
+        rqs.sort(key=self.rq_sort_key)
+        return rqs
+
+    def build_decode_candidate(self) -> Optional[CandidateBatch]:
+        if not self._running:
+            return None
+        return CandidateBatch(requests=self._running[: self.limits.max_num_seqs])
+
+    def estimated_utok(self, r: Request) -> int:
+        rq = self.relqueries[r.rel_id]
+        return max(1, round(r.num_prompt_tokens * rq.cache_miss_ratio))
+
+    def build_prefill_candidate(self, single_relquery: bool = True) -> Optional[CandidateBatch]:
+        order = self.sorted_waiting_rqs()
+        if not order:
+            return None
+        if single_relquery:
+            order = order[:1]
+        chosen: List[Request] = []
+        utok_sum, full_tok_sum = 0, 0
+        for rq in order:
+            for r in self._waiting_of[rq.rel_id]:
+                u = self.estimated_utok(r)
+                if chosen and utok_sum + u > self.limits.max_num_batched_tokens:
+                    break
+                if len(chosen) + 1 > self.limits.max_num_seqs:
+                    break
+                needed = r.num_prompt_tokens + r.max_output_tokens
+                if self.tokens_in_use + full_tok_sum + needed > self.limits.cap:
+                    if chosen:
+                        break
+                    return None  # not even one request fits right now
+                chosen.append(r)
+                utok_sum += u
+                full_tok_sum += needed
+            else:
+                continue
+            break
+        if not chosen:
+            return None
+        rel = self.relqueries[order[0].rel_id] if single_relquery else None
+        return CandidateBatch(requests=chosen, uncached_tokens=utok_sum, relquery=rel)
+
+    # ------------------------------------------------------------- lifecycle
+    def schedule(self, now: float) -> Optional[ScheduledBatch]:
+        raise NotImplementedError
+
+    def complete_batch(self, batch: ScheduledBatch, result: BatchResult,
+                       start_ts: float, end_ts: float) -> None:
+        self.iteration += 1
+        touched_rels = set()
+        if batch.kind in ("prefill", "mixed"):
+            for r in batch.requests:
+                rq = self.relqueries[r.rel_id]
+                if rq.first_prefill_start is None:
+                    rq.first_prefill_start = start_ts
+                if batch.kind == "mixed":
+                    continue  # chunk bookkeeping handled by the policy
+                self._finish_prefill(r, rq, result, end_ts)
+                touched_rels.add(r.rel_id)
+        decode_reqs = batch.requests if batch.kind == "decode" else batch.decode_requests
+        if batch.kind in ("decode", "mixed"):
+            for r in decode_reqs:
+                tok, finished = result.outputs.get(r.req_id, (0, False))
+                r.output_tokens.append(tok)
+                self.tokens_in_use += 1
+                if finished or r.remaining_output <= 0:
+                    self._finish_request(r, end_ts)
+                touched_rels.add(r.rel_id)
+        for rel_id in touched_rels:
+            self._maybe_finish_relquery(self.relqueries[rel_id], end_ts)
+
+    def _finish_prefill(self, r: Request, rq: RelQuery, result: BatchResult,
+                        end_ts: float) -> None:
+        r.prefilled = True
+        r.state = RequestState.RUNNING
+        wl = self._waiting_of.get(r.rel_id)
+        if wl is not None and r in wl:
+            wl.remove(r)
+            if not wl:
+                del self._waiting_of[r.rel_id]
+        self._running.append(r)
+        self.tokens_in_use += r.num_prompt_tokens
+        tok, finished = result.outputs.get(r.req_id, (0, False))
+        r.output_tokens.append(tok)
+        self.tokens_in_use += 1
+        rq.last_prefill_end = end_ts   # monotone: last prefill wins
+        if finished or r.remaining_output <= 0:
+            self._finish_request(r, end_ts)
+
+    def _finish_request(self, r: Request, end_ts: float) -> None:
+        r.state = RequestState.FINISHED
+        r.finish_time = end_ts
+        if r in self._running:
+            self._running.remove(r)
+        self.tokens_in_use -= r.total_tokens
+
+    def _maybe_finish_relquery(self, rq: RelQuery, end_ts: float) -> None:
+        if rq.finish_time is None and rq.is_finished():
+            rq.finish_time = end_ts
+            self.finished_relqueries.append(rq)
+            self._unfinished -= 1
+
+
+class RelServeScheduler(SchedulerBase):
+    """The paper's scheduler: DPU priority refresh + ABA batch choice."""
+
+    name = "relserve"
+    arrangement = "adaptive"   # 'adaptive' | 'prefill_first' | 'decode_first'
+
+    def __init__(self, limits=None, latency_model=None, prefix_cache=None,
+                 dpu_config: Optional[DPUConfig] = None):
+        super().__init__(limits, latency_model, prefix_cache)
+        self.dpu = DynamicPriorityUpdater(self.lm, self.limits, dpu_config)
+        self.aba = AdaptiveBatchArranger(self.lm)
+        # wall-clock overhead instrumentation (paper Table 6)
+        self.dpu_time = 0.0
+        self.aba_time = 0.0
+
+    def _dpu_targets(self) -> List[RelQuery]:
+        """relQueries whose priority may need a refresh this iteration: every
+        relQuery with waiting or running requests."""
+        ids = {r.rel_id for r in self._running}
+        ids.update(rel_id for rel_id, lst in self._waiting_of.items() if lst)
+        return [self.relqueries[i] for i in ids]
+
+    def schedule(self, now: float) -> Optional[ScheduledBatch]:
+        import time as _time
+        t0 = _time.perf_counter()
+        self.dpu.update(self._dpu_targets(), now, self.prefix_cache)
+        self.dpu_time += _time.perf_counter() - t0
+
+        d_cand = self.build_decode_candidate()
+        p_cand = self.build_prefill_candidate(single_relquery=True)
+        if d_cand is None and p_cand is None:
+            return None
+
+        t0 = _time.perf_counter()
+        if self.arrangement == "adaptive":
+            decision = self.aba.choose(p_cand, d_cand, self.running_rqs(),
+                                       self.waiting_rqs(),
+                                       lambda r: self.relqueries[r.rel_id].priority, now)
+        elif self.arrangement == "prefill_first":
+            decision = ArrangerDecision("prefill" if p_cand else "decode", "forced")
+        else:  # decode_first
+            decision = ArrangerDecision("decode" if d_cand else "prefill", "forced")
+        self.aba_time += _time.perf_counter() - t0
+
+        if decision.kind == "prefill" and p_cand is not None:
+            return ScheduledBatch("prefill", p_cand.requests,
+                                  uncached_tokens=p_cand.uncached_tokens,
+                                  decision=decision)
+        if d_cand is None:
+            return None
+        return ScheduledBatch("decode", d_cand.requests, decision=decision)

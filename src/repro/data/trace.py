@@ -1,0 +1,61 @@
+"""Serving-trace construction (paper §5.1): sample relQueries over datasets,
+Poisson arrivals at a given rate, request counts uniform in [1, 100].
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+from repro.core.relquery import RelQuery, Request, make_relquery
+from repro.data.datasets import Dataset, make_dataset
+from repro.engine.tokenizer import HashTokenizer
+
+
+@dataclass
+class TraceConfig:
+    num_relqueries: int = 100
+    rate: float = 1.0                  # relQueries per second (Poisson)
+    min_requests: int = 1
+    max_requests: int = 100
+    seed: int = 0
+    output_len_jitter: float = 0.35    # EOS terminates before OL sometimes
+
+
+def poisson_arrivals(n: int, rate: float, rng: random.Random) -> List[float]:
+    t, out = 0.0, []
+    for _ in range(n):
+        t += rng.expovariate(rate)
+        out.append(t)
+    return out
+
+
+def build_trace(dataset: Dataset, cfg: TraceConfig,
+                tokenizer: Optional[HashTokenizer] = None) -> List[RelQuery]:
+    tokenizer = tokenizer or HashTokenizer()
+    rng = random.Random(cfg.seed)
+    arrivals = poisson_arrivals(cfg.num_relqueries, cfg.rate, rng)
+    trace: List[RelQuery] = []
+    for qi, arr in enumerate(arrivals):
+        tpl = rng.choice(dataset.templates)
+        n_req = rng.randint(cfg.min_requests, cfg.max_requests)
+        offset = rng.randrange(0, max(1, len(dataset.table) - n_req))
+        rows = dataset.table.rows[offset:offset + n_req]
+        prompts = [tokenizer.encode(tpl.render(row)) for row in rows]
+        rq = make_relquery(f"q{qi}", prompts, arr, tpl.max_output_tokens,
+                           template_id=tpl.template_id, eos_token=tokenizer.eos)
+        # simulated actual output lengths (EOS can fire before the limit)
+        for r in rq.requests:
+            lo = max(1, int(tpl.max_output_tokens * (1 - cfg.output_len_jitter)))
+            r.sim_output_len = rng.randint(lo, tpl.max_output_tokens)
+        trace.append(rq)
+    return trace
+
+
+def quick_trace(dataset_name: str = "rotten", num_relqueries: int = 20,
+                rate: float = 1.0, seed: int = 0, num_rows: int = 2000,
+                max_requests: int = 40) -> List[RelQuery]:
+    ds = make_dataset(dataset_name, num_rows=num_rows, seed=seed)
+    cfg = TraceConfig(num_relqueries=num_relqueries, rate=rate, seed=seed,
+                      max_requests=max_requests)
+    return build_trace(ds, cfg)

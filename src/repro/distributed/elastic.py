@@ -1,0 +1,40 @@
+"""Elastic scaling: reshard checkpointed state onto a different mesh.
+
+Checkpoints store logical shapes (mesh-independent), so growing/shrinking the
+pod count between restarts is a reshard: rebuild shardings for the new mesh
+from the same logical specs and ``jax.device_put`` each leaf. GSPMD handles
+the gather/slice; at real scale this is the standard resume-on-new-topology
+path (the data loader skips to the checkpointed step).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.distributed.sharding import ParallelConfig
+
+
+def reshard_tree(tree, mesh, specs):
+    """Place every leaf of ``tree`` according to ``specs`` on ``mesh``."""
+    shardings = jax.tree.map(lambda sp: NamedSharding(mesh, sp), specs,
+                             is_leaf=lambda x: not isinstance(x, dict))
+    return jax.tree.map(jax.device_put, tree, shardings)
+
+
+def elastic_restore(model_builder, cfg, new_mesh, checkpoint_trees: Dict[str, Any]):
+    """Rebuild a model + shardings for ``new_mesh`` and place restored arrays.
+
+    model_builder: (cfg, ParallelConfig) -> model. Returns (model, placed trees).
+    """
+    pc = ParallelConfig.from_mesh(new_mesh)
+    model = model_builder(cfg, pc)
+    placed = {}
+    if "params" in checkpoint_trees:
+        placed["params"] = reshard_tree(checkpoint_trees["params"], new_mesh,
+                                        model.param_specs())
+    for name, tree in checkpoint_trees.items():
+        if name not in placed:
+            placed[name] = tree
+    return model, placed

@@ -1,0 +1,178 @@
+"""Checkpoint/restore + engine-state snapshots.
+
+Training: per-leaf ``.npy`` files under an atomically-renamed step directory
+plus a JSON manifest (tree structure, shapes, dtypes, mesh axes) — resumable
+and reshardable. At multi-host scale each host writes its addressable shards;
+in this single-process container that degenerates to full arrays, same layout.
+
+Serving: scheduler queues + relQuery progress serialize to JSON; the KV cache
+is deliberately NOT checkpointed — it is recomputable via prefix replay, which
+the prefix cache makes cheap (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.relquery import RelQuery, Request, RequestState
+
+
+# --------------------------------------------------------------------------
+# training checkpoints
+# --------------------------------------------------------------------------
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+             for path, _ in flat]
+    return paths, [leaf for _, leaf in flat], treedef
+
+
+def save_checkpoint(path: str, step: int, trees: Dict[str, Any],
+                    metadata: Optional[Dict] = None) -> str:
+    """Write ``trees`` (e.g. {'params': ..., 'opt': ...}) under path/step_N."""
+    final = os.path.join(path, f"step_{step}")
+    tmp = tempfile.mkdtemp(prefix=".ckpt_tmp_", dir=path if os.path.isdir(path) else None)
+    os.makedirs(path, exist_ok=True)
+    manifest = {"step": step, "metadata": metadata or {}, "trees": {}}
+    try:
+        for name, tree in trees.items():
+            paths, leaves, _ = _flatten_with_paths(tree)
+            entries = []
+            for i, (p, leaf) in enumerate(zip(paths, leaves)):
+                arr = np.asarray(leaf)
+                logical_dtype = str(arr.dtype)
+                if arr.dtype.kind not in "fiub":   # ml_dtypes (bf16/f8): store raw bits
+                    arr = arr.view(np.uint16 if arr.dtype.itemsize == 2 else np.uint8)
+                fn = f"{name}__{i:05d}.npy"
+                np.save(os.path.join(tmp, fn), arr)
+                entries.append({"path": p, "file": fn,
+                                "shape": list(arr.shape), "dtype": logical_dtype})
+            manifest["trees"][name] = entries
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)   # atomic publish
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+def latest_step(path: str) -> Optional[int]:
+    if not os.path.isdir(path):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(path)
+             if d.startswith("step_") and d.split("_")[1].isdigit()]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(path: str, step: Optional[int] = None,
+                    template_trees: Optional[Dict[str, Any]] = None
+                    ) -> Tuple[int, Dict[str, Any]]:
+    """Load trees; if ``template_trees`` given, restore exact pytree structure
+    (otherwise returns {name: {leaf_path: array}})."""
+    step = step if step is not None else latest_step(path)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {path}")
+    d = os.path.join(path, f"step_{step}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    import ml_dtypes
+
+    out = {}
+    for name, entries in manifest["trees"].items():
+        arrays = []
+        for e in entries:
+            a = np.load(os.path.join(d, e["file"]), allow_pickle=False)
+            want = e["dtype"]
+            if str(a.dtype) != want:               # raw-bit stored ml_dtype
+                a = a.view(np.dtype(getattr(ml_dtypes, want, want)))
+            arrays.append(a)
+        if template_trees and name in template_trees:
+            flat, treedef = jax.tree_util.tree_flatten(template_trees[name])
+            assert len(flat) == len(arrays), f"tree arity mismatch for {name}"
+            import jax.numpy as jnp
+            arrays = [jnp.asarray(a) for a in arrays]
+            out[name] = jax.tree_util.tree_unflatten(treedef, arrays)
+        else:
+            out[name] = {e["path"]: a for e, a in zip(entries, arrays)}
+    return manifest["step"], out
+
+
+# --------------------------------------------------------------------------
+# serving-engine state snapshots
+# --------------------------------------------------------------------------
+def snapshot_scheduler(sched) -> Dict:
+    """Serialize queue + progress state. In-flight requests replay their
+    prefill on restore (idempotent; prefix cache makes the replay cheap)."""
+    rqs = []
+    for rq in sched.relqueries.values():
+        rqs.append({
+            "rel_id": rq.rel_id,
+            "arrival_time": rq.arrival_time,
+            "max_output_tokens": rq.max_output_tokens,
+            "template_id": rq.template_id,
+            "first_prefill_start": rq.first_prefill_start,
+            "last_prefill_end": rq.last_prefill_end,
+            "finish_time": rq.finish_time,
+            "priority": rq.priority,
+            "requests": [{
+                "req_id": r.req_id,
+                "tokens": list(r.tokens),
+                "max_output_tokens": r.max_output_tokens,
+                "state": r.state.value,
+                "output_tokens": list(r.output_tokens),
+                "prefilled": r.prefilled,
+                "eos_token": r.eos_token,
+                "sim_output_len": getattr(r, "sim_output_len", None),
+            } for r in rq.requests],
+        })
+    return {"iteration": sched.iteration, "relqueries": rqs}
+
+
+def restore_scheduler(sched, snap: Dict) -> None:
+    """Rebuild queues from a snapshot: RUNNING requests are demoted to WAITING
+    (their KV is gone after a failure) and will re-prefill on first schedule."""
+    sched.iteration = snap["iteration"]
+    for q in snap["relqueries"]:
+        reqs = []
+        for rd in q["requests"]:
+            r = Request(rel_id=q["rel_id"], tokens=tuple(rd["tokens"]),
+                        max_output_tokens=rd["max_output_tokens"],
+                        req_id=rd["req_id"], eos_token=rd["eos_token"])
+            if rd.get("sim_output_len") is not None:
+                r.sim_output_len = rd["sim_output_len"]
+            r.output_tokens = list(rd["output_tokens"])
+            if rd["state"] == "finished":
+                r.state = RequestState.FINISHED
+                r.prefilled = True
+            else:
+                r.state = RequestState.WAITING   # replay prefill after failure
+                r.prefilled = False
+                r.output_tokens = []
+            reqs.append(r)
+        rq = RelQuery(rel_id=q["rel_id"], requests=reqs,
+                      arrival_time=q["arrival_time"],
+                      max_output_tokens=q["max_output_tokens"],
+                      template_id=q["template_id"])
+        rq.first_prefill_start = q["first_prefill_start"]
+        rq.last_prefill_end = q["last_prefill_end"]
+        rq.finish_time = q["finish_time"]
+        rq.priority = q["priority"]
+        sched.relqueries[rq.rel_id] = rq
+        waiting = [r for r in reqs if r.state == RequestState.WAITING]
+        if waiting:
+            sched._waiting_of[rq.rel_id] = waiting
+        if not rq.is_finished():
+            sched._unfinished += 1
+        else:
+            sched.finished_relqueries.append(rq)
+        sched.tokens_in_use += sum(r.total_tokens for r in reqs
+                                   if r.state == RequestState.RUNNING)

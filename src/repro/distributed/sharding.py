@@ -1,0 +1,176 @@
+"""Logical-axis sharding rules + GQA tensor-parallel head packing.
+
+Models annotate tensors with *logical* axis names; ``ParallelConfig`` resolves
+them to mesh ``PartitionSpec``s. The production mesh is ``(pod, data, model)``:
+``batch → (pod, data)`` and all model-parallel dims → ``model``.
+
+GQA packing: JAX rejects uneven input shardings, so Q/KV heads are packed into a
+``[KVp, q_per_slot, head_dim]`` layout where ``KVp`` is a TP multiple. KV heads
+are *duplicated* (not zero-padded) across slots so every slot computes real
+attention; Q-head slots beyond the true count carry zero weights (exact math).
+See DESIGN.md §3.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+# logical axis name -> role
+_TP_AXES = frozenset({
+    "heads", "kv_heads", "ff", "vocab", "expert", "d_inner", "wkv_heads", "q_slots",
+})
+_DP_AXES = frozenset({"batch"})
+
+
+@dataclass(frozen=True)
+class ParallelConfig:
+    """Resolved parallelism layout for one mesh."""
+
+    dp_axes: Tuple[str, ...] = ()       # mesh axes carrying the batch (e.g. ('pod','data'))
+    tp_axis: Optional[str] = None       # mesh axis carrying model parallelism
+    tp: int = 1                         # size of tp_axis
+    dp: int = 1                         # product size of dp_axes
+
+    @staticmethod
+    def single_device() -> "ParallelConfig":
+        return ParallelConfig()
+
+    @staticmethod
+    def from_mesh(mesh) -> "ParallelConfig":
+        names = tuple(mesh.axis_names)
+        sizes = dict(zip(names, mesh.devices.shape))
+        tp_axis = "model" if "model" in names else None
+        dp_axes = tuple(n for n in names if n != "model")
+        dp = int(np.prod([sizes[n] for n in dp_axes])) if dp_axes else 1
+        return ParallelConfig(dp_axes=dp_axes, tp_axis=tp_axis,
+                              tp=sizes.get("model", 1), dp=dp)
+
+    def spec(self, *logical: Optional[str]) -> P:
+        """Resolve a tuple of logical axis names to a PartitionSpec."""
+        out = []
+        for name in logical:
+            if name is None:
+                out.append(None)
+            elif name in _DP_AXES:
+                out.append(self.dp_axes if len(self.dp_axes) != 1 else self.dp_axes[0])
+                if not self.dp_axes:
+                    out[-1] = None
+            elif name in _TP_AXES:
+                out.append(self.tp_axis)
+            else:
+                raise ValueError(f"unknown logical axis {name!r}")
+        return P(*out)
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclass(frozen=True)
+class GQALayout:
+    """Padded/duplicated GQA head layout for a given TP degree.
+
+    - ``kv_slots`` (KVp): KV head slots, divisible by tp. ``dup_map[s]`` gives the
+      true KV head stored in slot ``s`` (duplication, exact).
+    - ``q_per_slot`` (qps): Q heads per slot; ``q_map[s, j]`` gives the true Q head
+      index or -1 for a zero-weight pad slot.
+    """
+
+    num_heads: int
+    num_kv_heads: int
+    tp: int
+    kv_slots: int
+    q_per_slot: int
+    dup_map: Tuple[int, ...]
+    q_map: Tuple[Tuple[int, ...], ...]
+
+    @property
+    def padded_q_heads(self) -> int:
+        return self.kv_slots * self.q_per_slot
+
+    @property
+    def q_flop_waste(self) -> float:
+        """Fraction of attention Q-side compute spent on padding."""
+        return self.padded_q_heads / self.num_heads - 1.0
+
+    def dup_array(self) -> np.ndarray:
+        return np.asarray(self.dup_map, dtype=np.int32)
+
+    def q_array(self) -> np.ndarray:
+        return np.asarray(self.q_map, dtype=np.int32)
+
+
+def gqa_layout(num_heads: int, num_kv_heads: int, tp: int) -> GQALayout:
+    qpk = num_heads // num_kv_heads
+    assert num_heads == qpk * num_kv_heads, "num_heads must be a multiple of num_kv_heads"
+    if tp <= 1:
+        dup = tuple(range(num_kv_heads))
+        qmap = tuple(tuple(k * qpk + j for j in range(qpk)) for k in range(num_kv_heads))
+        return GQALayout(num_heads, num_kv_heads, 1, num_kv_heads, qpk, dup, qmap)
+    kvp = round_up(num_kv_heads, tp)
+    # distribute slots over true KV heads as evenly as possible, monotone
+    dup = tuple(s * num_kv_heads // kvp for s in range(kvp))
+    counts = [0] * num_kv_heads
+    for k in dup:
+        counts[k] += 1
+    min_slots = min(counts)
+    qps = math.ceil(qpk / min_slots)
+    qmap = []
+    first_slot = {}
+    for s, k in enumerate(dup):
+        if k not in first_slot:
+            first_slot[k] = s
+        rank = s - first_slot[k]
+        row = []
+        for j in range(qps):
+            p = rank * qps + j
+            row.append(k * qpk + p if p < qpk else -1)
+        qmap.append(tuple(row))
+    return GQALayout(num_heads, num_kv_heads, tp, kvp, qps, dup, tuple(qmap))
+
+
+def pack_q_weight(w: np.ndarray, layout: GQALayout, head_axis: int = 1) -> np.ndarray:
+    """Pack canonical per-Q-head weight ``[..., H, ...]`` to ``[..., KVp*qps, ...]``.
+
+    Pad slots get zeros — with zero output-projection rows the math is exact.
+    """
+    w = np.moveaxis(w, head_axis, 0)
+    out = np.zeros((layout.padded_q_heads,) + w.shape[1:], dtype=w.dtype)
+    for s in range(layout.kv_slots):
+        for j in range(layout.q_per_slot):
+            src = layout.q_map[s][j]
+            if src >= 0:
+                out[s * layout.q_per_slot + j] = w[src]
+    return np.moveaxis(out, 0, head_axis)
+
+
+def pack_kv_weight(w: np.ndarray, layout: GQALayout, head_axis: int = 1) -> np.ndarray:
+    """Duplicate canonical per-KV-head weight ``[..., KV, ...]`` into slots."""
+    w = np.moveaxis(w, head_axis, 0)
+    out = w[layout.dup_array()]
+    return np.moveaxis(out, 0, head_axis)
+
+
+def unpack_q_output(o: np.ndarray, layout: GQALayout, head_axis: int = 1) -> np.ndarray:
+    """Inverse of pack_q_weight for comparing against canonical reference."""
+    o = np.moveaxis(o, head_axis, 0)
+    out = np.zeros((layout.num_heads,) + o.shape[1:], dtype=o.dtype)
+    for s in range(layout.kv_slots):
+        for j in range(layout.q_per_slot):
+            src = layout.q_map[s][j]
+            if src >= 0:
+                out[src] = o[s * layout.q_per_slot + j]
+    return np.moveaxis(out, 0, head_axis)
+
+
+def shardable(dim: int, tp: int) -> bool:
+    return tp <= 1 or dim % tp == 0
+
+
+def tp_dim(logical_size: int, pc: ParallelConfig) -> Optional[str]:
+    """Return 'ff'-style tp logical name only when the dim divides the TP degree."""
+    return "ff" if shardable(logical_size, pc.tp) else None

@@ -1,0 +1,115 @@
+"""Serving engine: arrival handling + scheduler + executor loop (Fig. 6).
+
+Works with either the simulated-clock executor (paper-scale traces) or the
+real JAX executor (smoke-scale models). One iteration = one scheduled batch.
+"""
+from __future__ import annotations
+
+import time as _time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.relquery import RelQuery
+from repro.core.scheduler import SchedulerBase, ScheduledBatch
+
+
+@dataclass
+class BatchEvent:
+    kind: str
+    start: float
+    end: float
+    num_requests: int
+    uncached_tokens: int
+    rel_ids: Tuple[str, ...]
+
+
+@dataclass
+class ServiceReport:
+    latencies: Dict[str, float]
+    waiting: Dict[str, float]
+    core: Dict[str, float]
+    tail: Dict[str, float]
+    events: List[BatchEvent]
+    end_to_end: float
+    dpu_time: float = 0.0
+    aba_time: float = 0.0
+    prefix_hit_ratio: float = 0.0
+    schedule_time: float = 0.0
+
+    @property
+    def avg_latency(self) -> float:
+        return float(np.mean(list(self.latencies.values()))) if self.latencies else 0.0
+
+    @property
+    def max_latency(self) -> float:
+        return float(np.max(list(self.latencies.values()))) if self.latencies else 0.0
+
+    def percentile(self, p: float) -> float:
+        return float(np.percentile(list(self.latencies.values()), p)) if self.latencies else 0.0
+
+    def phase_means(self) -> Tuple[float, float, float]:
+        def m(d):
+            vals = [v for v in d.values() if v is not None]
+            return float(np.mean(vals)) if vals else 0.0
+        return m(self.waiting), m(self.core), m(self.tail)
+
+
+class ServingEngine:
+    def __init__(self, scheduler: SchedulerBase, executor):
+        self.scheduler = scheduler
+        self.executor = executor
+        self.events: List[BatchEvent] = []
+        self.schedule_time = 0.0
+
+    def run_trace(self, trace: Sequence[RelQuery], max_iterations: int = 2_000_000,
+                  record_events: bool = True) -> ServiceReport:
+        """Run a full arrival trace on the simulated clock."""
+        pending = sorted(trace, key=lambda r: r.arrival_time)
+        now = 0.0
+        it = 0
+        idx = 0
+        while idx < len(pending) or self.scheduler.has_work():
+            # admit arrivals up to the current clock
+            while idx < len(pending) and pending[idx].arrival_time <= now:
+                self.scheduler.add_relquery(pending[idx], now)
+                idx += 1
+            t0 = _time.perf_counter()
+            batch = self.scheduler.schedule(now)
+            self.schedule_time += _time.perf_counter() - t0
+            if batch is None:
+                if idx < len(pending):
+                    now = max(now, pending[idx].arrival_time)
+                    continue
+                break
+            duration, result = self.executor.execute(batch, now)
+            start, end = now, now + duration
+            self.scheduler.complete_batch(batch, result, start, end)
+            now = end
+            if record_events:
+                rel_ids = tuple({r.rel_id for r in batch.requests}
+                                | {r.rel_id for r in batch.decode_requests})
+                self.events.append(BatchEvent(batch.kind, start, end,
+                                              batch.num_requests,
+                                              batch.uncached_tokens, rel_ids))
+            it += 1
+            if it >= max_iterations:
+                raise RuntimeError("engine exceeded max_iterations — likely livelock")
+        return self._report(now)
+
+    def _report(self, end_time: float) -> ServiceReport:
+        rqs = list(self.scheduler.relqueries.values())
+        lat = {rq.rel_id: rq.latency() for rq in rqs if rq.latency() is not None}
+        waiting = {rq.rel_id: rq.waiting_time() for rq in rqs}
+        core = {rq.rel_id: rq.core_running_time() for rq in rqs}
+        tail = {rq.rel_id: rq.tail_running_time() for rq in rqs}
+        pc = getattr(self.scheduler, "prefix_cache", None)
+        return ServiceReport(
+            latencies=lat, waiting=waiting, core=core, tail=tail,
+            events=self.events, end_to_end=end_time,
+            dpu_time=getattr(self.scheduler, "dpu_time", 0.0),
+            aba_time=getattr(self.scheduler, "aba_time", 0.0),
+            prefix_hit_ratio=pc.hit_ratio if pc is not None else 0.0,
+            schedule_time=self.schedule_time,
+        )

@@ -1,0 +1,181 @@
+"""Real JAX executor: token-by-token execution of scheduler-issued batches on
+an actual model (smoke-scale on CPU; the same code path drives a TPU slice).
+
+Slot-based continuous batching: the executor owns ``max_slots`` decode cache
+slots (the model's dense/ring KV layout); prefill assigns slots, decode runs
+one ``decode_step`` over all active slots (a strict superset of the scheduled
+batch is never needed — RelServe decodes the whole running queue). Prefill
+batches execute per-request with bucketed padding to bound recompilation.
+
+Also the calibration source for the linear batch-cost model (paper Fig. 7):
+``calibrate()`` measures (tokens, duration) / (reqs, duration) samples and fits
+α/β on this host.
+"""
+from __future__ import annotations
+
+import time as _time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import latency_model as lm_mod
+from repro.core.relquery import Request
+from repro.core.scheduler import BatchResult, ScheduledBatch
+from repro.engine.prefix_cache import PrefixCache
+
+
+def _bucket(n: int, buckets=(16, 32, 64, 128, 256, 512, 1024, 2048, 4096)) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return ((n + 4095) // 4096) * 4096
+
+
+@dataclass
+class Slot:
+    req: Request
+    position: int          # next decode position (== tokens written so far)
+
+
+class RealExecutor:
+    def __init__(self, model, params, *, max_slots: int = 32, max_len: int = 512,
+                 prefix_cache: Optional[PrefixCache] = None, greedy: bool = True):
+        self.model = model
+        self.params = params
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.prefix_cache = prefix_cache
+        self.greedy = greedy
+        self.cache = model.init_cache(max_slots, max_len)
+        self.slots: List[Optional[Slot]] = [None] * max_slots
+        self._slot_of: Dict[str, int] = {}
+        self._prefill_fn = {}
+        self._decode_fn = jax.jit(model.decode_step, donate_argnums=(1,))
+        self.prefill_samples: List[Tuple[int, float]] = []
+        self.decode_samples: List[Tuple[int, float]] = []
+
+    # ------------------------------------------------------------------ slots
+    def _alloc_slot(self, req: Request) -> int:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                self.slots[i] = Slot(req, 0)
+                self._slot_of[req.req_id] = i
+                return i
+        raise RuntimeError("out of decode slots — scheduler exceeded max_num_seqs")
+
+    def _free_slot(self, req_id: str) -> None:
+        i = self._slot_of.pop(req_id, None)
+        if i is not None:
+            self.slots[i] = None
+
+    # ------------------------------------------------------------------ prefill
+    def _prefill_one(self, req: Request) -> Tuple[int, int]:
+        """Prefill a request, write its KV into a slot; returns (token, utok)."""
+        n = req.num_prompt_tokens
+        if self.prefix_cache is not None:
+            cached = self.prefix_cache.count_cached(req.tokens)
+            self.prefix_cache.insert(req.tokens)
+        else:
+            cached = 0
+        utok = n - cached
+        bucket = _bucket(n)  # pad-masked prefill: recurrent state frozen on pads
+        if bucket not in self._prefill_fn:
+            self._prefill_fn[bucket] = jax.jit(
+                lambda p, t, sl: self.model.prefill(p, t, seq_lens=sl,
+                                                    max_len=self.max_len))
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :n] = req.tokens
+        logits, kv = self._prefill_fn[bucket](
+            self.params, jnp.asarray(toks), jnp.asarray([n], jnp.int32))
+        slot = self._alloc_slot(req)
+        self._write_slot_cache(slot, kv)
+        self.slots[slot].position = n
+        token = self._sample(logits)[0]
+        return int(token), utok
+
+    def _write_slot_cache(self, slot: int, kv) -> None:
+        """Copy a single-sequence prefill cache into slot ``slot``."""
+        def write(dst, src):
+            if dst.ndim == src.ndim and dst.shape == src.shape:
+                return src  # scalar-like entries (not per-slot)
+            # batch dim location differs per model family; find the axis where
+            # dst has max_slots and src has 1
+            for ax in range(dst.ndim):
+                if dst.shape[ax] == self.max_slots and src.shape[ax] == 1:
+                    idx = [slice(None)] * dst.ndim
+                    idx[ax] = slice(slot, slot + 1)
+                    pad = [(0, d - s) if a != ax else (0, 0)
+                           for a, (d, s) in enumerate(zip(dst.shape, src.shape))]
+                    if any(p != (0, 0) for p in pad):
+                        src = jnp.pad(src, pad)
+                    return dst.at[tuple(idx)].set(src.astype(dst.dtype))
+            raise ValueError(f"cannot place prefill cache {src.shape} into {dst.shape}")
+        self.cache = jax.tree.map(write, self.cache, kv)
+
+    # ------------------------------------------------------------------ decode
+    def _decode_all(self, reqs: List[Request]) -> Dict[str, int]:
+        tokens = np.zeros((self.max_slots,), np.int32)
+        positions = np.zeros((self.max_slots,), np.int32)
+        for r in reqs:
+            i = self._slot_of[r.req_id]
+            tokens[i] = r.output_tokens[-1] if r.output_tokens else 0
+            positions[i] = self.slots[i].position
+        logits, self.cache = self._decode_fn(
+            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(positions))
+        out = self._sample(logits)
+        result = {}
+        for r in reqs:
+            i = self._slot_of[r.req_id]
+            self.slots[i].position += 1
+            result[r.req_id] = int(out[i])
+        return result
+
+    def _sample(self, logits) -> np.ndarray:
+        return np.asarray(jnp.argmax(logits, axis=-1))
+
+    # ------------------------------------------------------------------ engine API
+    def execute(self, batch: ScheduledBatch, now: float) -> Tuple[float, BatchResult]:
+        t0 = _time.perf_counter()
+        outputs: Dict[str, Tuple[int, bool]] = {}
+        if batch.kind in ("prefill", "mixed"):
+            total_utok = 0
+            for r in batch.requests:
+                if batch.kind == "mixed":
+                    chunk = batch.prefill_chunks.get(r.req_id, 0)
+                    if r.prefilled_tokens + chunk < r.num_prompt_tokens:
+                        continue  # chunk not finishing the prompt: accounted only
+                tok, utok = self._prefill_one(r)
+                total_utok += utok
+                finished = self._is_finish_token(r, tok, 1)
+                outputs[r.req_id] = (tok, finished)
+                if finished:
+                    self._free_slot(r.req_id)
+            dur = _time.perf_counter() - t0
+            self.prefill_samples.append((total_utok, dur))
+        if batch.kind in ("decode", "mixed"):
+            reqs = batch.requests if batch.kind == "decode" else batch.decode_requests
+            reqs = [r for r in reqs if r.req_id in self._slot_of]
+            if reqs:
+                t1 = _time.perf_counter()
+                toks = self._decode_all(reqs)
+                self.decode_samples.append((len(reqs), _time.perf_counter() - t1))
+                for r in reqs:
+                    tok = toks[r.req_id]
+                    finished = self._is_finish_token(r, tok, len(r.output_tokens) + 2)
+                    outputs[r.req_id] = (tok, finished)
+                    if finished:
+                        self._free_slot(r.req_id)
+            dur = _time.perf_counter() - t0
+        return _time.perf_counter() - t0, BatchResult(outputs)
+
+    def _is_finish_token(self, r: Request, tok: int, produced: int) -> bool:
+        if r.eos_token is not None and tok == r.eos_token:
+            return True
+        return produced >= r.max_output_tokens
+
+    # ------------------------------------------------------------------ calibration
+    def fitted_model(self):
+        return lm_mod.fit(self.prefill_samples, self.decode_samples)

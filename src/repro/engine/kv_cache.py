@@ -1,0 +1,127 @@
+"""Paged KV block manager: block-granular accounting of device KV memory with
+per-sequence block tables, shared (ref-counted) prefix blocks, and watermark
+admission. The Pallas paged-attention kernel consumes exactly this layout
+(block_tables [B, max_blocks], context_lens [B]).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set
+
+
+class OutOfBlocks(Exception):
+    pass
+
+
+@dataclass
+class SeqAllocation:
+    block_ids: List[int]
+    num_tokens: int
+    shared_prefix_blocks: int = 0
+
+
+class BlockManager:
+    def __init__(self, num_blocks: int, block_size: int = 16,
+                 watermark: float = 0.01):
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.watermark_blocks = max(1, int(num_blocks * watermark))
+        self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self._ref: Dict[int, int] = {}
+        self._seqs: Dict[str, SeqAllocation] = {}
+        # prefix-block sharing: hash key -> block id
+        self._prefix_blocks: Dict[int, int] = {}
+        self._block_keys: Dict[int, int] = {}
+
+    # ---------------------------------------------------------------- queries
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def blocks_needed(self, num_tokens: int) -> int:
+        return (num_tokens + self.block_size - 1) // self.block_size
+
+    def can_allocate(self, num_tokens: int, cached_blocks: int = 0) -> bool:
+        need = max(0, self.blocks_needed(num_tokens) - cached_blocks)
+        return self.free_blocks - need >= self.watermark_blocks
+
+    def block_table(self, seq_id: str) -> List[int]:
+        return list(self._seqs[seq_id].block_ids)
+
+    def context_len(self, seq_id: str) -> int:
+        return self._seqs[seq_id].num_tokens
+
+    def tokens_in_use(self) -> int:
+        return sum(a.num_tokens for a in self._seqs.values())
+
+    # ---------------------------------------------------------------- alloc
+    def allocate(self, seq_id: str, num_tokens: int,
+                 prefix_keys: Sequence[int] = ()) -> SeqAllocation:
+        """Allocate blocks for a prefilled sequence; reuse shared prefix blocks
+        when their keys are resident."""
+        if seq_id in self._seqs:
+            raise KeyError(f"sequence {seq_id} already allocated")
+        shared: List[int] = []
+        for key in prefix_keys:
+            bid = self._prefix_blocks.get(key)
+            if bid is None:
+                break
+            shared.append(bid)
+        need = self.blocks_needed(num_tokens) - len(shared)
+        if need > len(self._free):
+            raise OutOfBlocks(f"need {need} blocks, have {len(self._free)}")
+        fresh = [self._free.pop() for _ in range(max(0, need))]
+        for bid in shared + fresh:
+            self._ref[bid] = self._ref.get(bid, 0) + 1
+        alloc = SeqAllocation(block_ids=shared + fresh, num_tokens=num_tokens,
+                              shared_prefix_blocks=len(shared))
+        self._seqs[seq_id] = alloc
+        return alloc
+
+    def register_prefix(self, seq_id: str, keys: Sequence[int]) -> None:
+        """Publish the first len(keys) blocks of a sequence as shared prefix
+        blocks (called after prefill writes them)."""
+        alloc = self._seqs[seq_id]
+        for i, key in enumerate(keys):
+            if i >= len(alloc.block_ids):
+                break
+            bid = alloc.block_ids[i]
+            if key not in self._prefix_blocks:
+                self._prefix_blocks[key] = bid
+                self._block_keys[bid] = key
+
+    def append_token(self, seq_id: str) -> Optional[int]:
+        """Account one decoded token; returns a newly allocated block id if a
+        block boundary was crossed."""
+        alloc = self._seqs[seq_id]
+        alloc.num_tokens += 1
+        if (alloc.num_tokens - 1) // self.block_size >= len(alloc.block_ids):
+            if not self._free:
+                raise OutOfBlocks("decode append")
+            bid = self._free.pop()
+            self._ref[bid] = 1
+            alloc.block_ids.append(bid)
+            return bid
+        return None
+
+    def free(self, seq_id: str) -> None:
+        alloc = self._seqs.pop(seq_id)
+        for bid in alloc.block_ids:
+            self._ref[bid] -= 1
+            if self._ref[bid] == 0:
+                del self._ref[bid]
+                key = self._block_keys.pop(bid, None)
+                if key is not None:
+                    self._prefix_blocks.pop(key, None)
+                self._free.append(bid)
+
+    # ---------------------------------------------------------------- invariants
+    def check_invariants(self) -> None:
+        in_use = set()
+        for alloc in self._seqs.values():
+            in_use.update(alloc.block_ids)
+        free = set(self._free)
+        assert not (in_use & free), "block both free and in use"
+        assert all(self._ref.get(b, 0) > 0 for b in in_use)
+        total_tracked = len(free | in_use)
+        assert total_tracked <= self.num_blocks

@@ -1,0 +1,99 @@
+"""Hash-block prefix cache (vLLM-style) with LRU eviction.
+
+Token sequences are split into fixed-size blocks; each block's key chains the
+previous block's hash so a hit means the *entire* prefix up to that block is
+cached. ``count_cached`` is the DPU's utok oracle; the real executor can attach
+per-block KV tensors for genuine compute reuse.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+
+def block_hashes(tokens: Sequence[int], block_size: int) -> List[int]:
+    """Chained hashes of all *full* blocks of ``tokens``."""
+    out = []
+    h = 0
+    for i in range(len(tokens) // block_size):
+        blk = tuple(tokens[i * block_size:(i + 1) * block_size])
+        h = hash((h, blk))
+        out.append(h)
+    return out
+
+
+@dataclass
+class CachedBlock:
+    key: int
+    ref_count: int = 0
+    payload: Any = None      # optional per-layer KV tensors (real executor)
+
+
+class PrefixCache:
+    def __init__(self, block_size: int = 16, capacity_blocks: int = 65536):
+        self.block_size = block_size
+        self.capacity_blocks = capacity_blocks
+        self._blocks: "OrderedDict[int, CachedBlock]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._blocks)
+
+    # ---------------------------------------------------------------- lookup
+    def match_blocks(self, tokens: Sequence[int]) -> List[int]:
+        """Keys of the longest cached block-prefix (touches LRU)."""
+        matched = []
+        for key in block_hashes(tokens, self.block_size):
+            if key in self._blocks:
+                self._blocks.move_to_end(key)
+                matched.append(key)
+            else:
+                break
+        return matched
+
+    def count_cached(self, tokens: Sequence[int]) -> int:
+        """Cached-token count for a prompt (DPU's Eq. 11 oracle)."""
+        n = len(self.match_blocks(tokens)) * self.block_size
+        self.hits += n
+        self.misses += max(0, len(tokens) - n)
+        return n
+
+    def peek_cached(self, tokens: Sequence[int]) -> int:
+        """count_cached without stats/LRU side effects (scheduling probes)."""
+        n = 0
+        h = 0
+        for i in range(len(tokens) // self.block_size):
+            blk = tuple(tokens[i * self.block_size:(i + 1) * self.block_size])
+            h = hash((h, blk))
+            if h in self._blocks:
+                n += self.block_size
+            else:
+                break
+        return n
+
+    def get_payloads(self, tokens: Sequence[int]) -> List[Any]:
+        return [self._blocks[k].payload for k in self.match_blocks(tokens)]
+
+    # ---------------------------------------------------------------- insert
+    def insert(self, tokens: Sequence[int], payloads: Optional[List[Any]] = None) -> None:
+        keys = block_hashes(tokens, self.block_size)
+        for i, key in enumerate(keys):
+            if key in self._blocks:
+                self._blocks.move_to_end(key)
+                continue
+            self._blocks[key] = CachedBlock(
+                key, payload=payloads[i] if payloads and i < len(payloads) else None)
+            self._evict_to_capacity()
+
+    def _evict_to_capacity(self) -> None:
+        while len(self._blocks) > self.capacity_blocks:
+            self._blocks.popitem(last=False)
+            self.evictions += 1
+
+    @property
+    def hit_ratio(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0

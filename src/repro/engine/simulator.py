@@ -1,0 +1,113 @@
+"""Simulated-clock executor: executes scheduler-issued batches against the
+calibrated linear cost model (paper Fig. 7) and a *real* prefix cache, so the
+scheduling decisions — the paper's subject — are identical to what the real
+engine would issue, while batch durations come from the A100/OPT-13B-regime
+constants (or any fitted model). Used by the paper-scale benchmarks.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+from repro.core.latency_model import BatchLatencyModel
+from repro.core.relquery import Request
+from repro.core.scheduler import BatchResult, ScheduledBatch
+from repro.engine.prefix_cache import PrefixCache
+
+
+def sim_output_len(r: Request) -> int:
+    """Actual (EOS-terminated) output length for simulation; defaults to OL."""
+    return getattr(r, "sim_output_len", None) or r.max_output_tokens
+
+
+class SimulatedExecutor:
+    def __init__(self, latency_model: BatchLatencyModel,
+                 prefix_cache: Optional[PrefixCache] = None, seed: int = 0,
+                 straggler_prob: float = 0.0, straggler_slowdown: float = 10.0,
+                 hedge_threshold: Optional[float] = None):
+        self.lm = latency_model
+        self.prefix_cache = prefix_cache
+        self._rng = random.Random(seed)
+        self.total_prefill_tokens = 0
+        self.total_uncached_tokens = 0
+        self.total_decode_tokens = 0
+        # straggler-mitigation model: with straggler_prob a batch takes
+        # slowdown x nominal; with hedging, a duplicate dispatch to a healthy
+        # DP replica bounds the wait at threshold x nominal + nominal.
+        self.straggler_prob = straggler_prob
+        self.straggler_slowdown = straggler_slowdown
+        self.hedge_threshold = hedge_threshold
+        self.stragglers_seen = 0
+        self.hedges_fired = 0
+
+    def _apply_straggler(self, duration: float) -> float:
+        if self.straggler_prob <= 0 or self._rng.random() >= self.straggler_prob:
+            return duration
+        self.stragglers_seen += 1
+        slow = duration * self.straggler_slowdown
+        if self.hedge_threshold is not None:
+            self.hedges_fired += 1
+            return min(slow, duration * self.hedge_threshold + duration)
+        return slow
+
+    # ------------------------------------------------------------------
+    def _true_utok(self, r: Request, chunk: Optional[int] = None) -> int:
+        if self.prefix_cache is None:
+            n_cached = 0
+        else:
+            n_cached = self.prefix_cache.count_cached(r.tokens)
+        utok = max(0, r.num_prompt_tokens - n_cached)
+        if chunk is not None:
+            # chunked prefill: cached savings apply to the first chunks
+            done = r.prefilled_tokens
+            utok = max(0, min(done + chunk, r.num_prompt_tokens) - max(done, n_cached))
+        return utok
+
+    def _token_for(self, r: Request) -> Tuple[int, bool]:
+        produced = len(r.output_tokens) + 1
+        target = min(sim_output_len(r), r.max_output_tokens)
+        finished = produced >= target
+        token = (hash((r.req_id, produced)) & 0x7FFF) + 2
+        if finished and r.eos_token is not None:
+            token = r.eos_token
+        return token, finished
+
+    # ------------------------------------------------------------------
+    def execute(self, batch: ScheduledBatch, now: float) -> Tuple[float, BatchResult]:
+        outputs: Dict[str, Tuple[int, bool]] = {}
+        if batch.kind == "prefill":
+            utok = 0
+            for r in batch.requests:
+                utok += self._true_utok(r)
+                self.total_prefill_tokens += r.num_prompt_tokens
+                if self.prefix_cache is not None:
+                    self.prefix_cache.insert(r.tokens)
+                outputs[r.req_id] = self._token_for(r)
+            self.total_uncached_tokens += utok
+            dur = self._apply_straggler(self.lm.prefill_time(utok))
+            return dur, BatchResult(outputs, uncached_tokens=utok)
+
+        if batch.kind == "decode":
+            for r in batch.requests:
+                outputs[r.req_id] = self._token_for(r)
+            self.total_decode_tokens += len(batch.requests)
+            dur = self._apply_straggler(self.lm.decode_time(len(batch.requests)))
+            return dur, BatchResult(outputs)
+
+        # mixed (Sarathi): decode requests + prefill chunks in one pass
+        utok = 0
+        for r in batch.requests:
+            chunk = batch.prefill_chunks.get(r.req_id, 0)
+            utok += self._true_utok(r, chunk)
+            self.total_prefill_tokens += chunk
+            if r.prefilled_tokens + chunk >= r.num_prompt_tokens:
+                if self.prefix_cache is not None:
+                    self.prefix_cache.insert(r.tokens)
+                outputs[r.req_id] = self._token_for(r)
+        for r in batch.decode_requests:
+            outputs[r.req_id] = self._token_for(r)
+        self.total_uncached_tokens += utok
+        self.total_decode_tokens += len(batch.decode_requests)
+        dur = self._apply_straggler(self.lm.mixed_time(utok, len(batch.decode_requests)))
+        return dur, BatchResult(outputs, uncached_tokens=utok)

@@ -1,0 +1,29 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (kernel bodies execute in Python for
+validation); on a TPU backend the compiled Mosaic path is used. The model
+graphs call the pure-XLA reference path by default (``use_pallas`` switch) so
+CPU dry-run cost analysis reflects fused XLA ops — see DESIGN.md §3.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_prefill import flash_prefill
+from repro.kernels.paged_attention import paged_attention
+from repro.kernels.rwkv6_chunk import rwkv6_chunk
+from repro.kernels import ref
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def default_interpret() -> bool:
+    return not on_tpu()
+
+
+__all__ = [
+    "paged_attention", "flash_prefill", "rwkv6_chunk", "ref",
+    "on_tpu", "default_interpret",
+]

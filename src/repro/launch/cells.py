@@ -1,0 +1,229 @@
+"""(architecture x shape x mesh) cell construction: step function, abstract
+``input_specs()`` (ShapeDtypeStruct stand-ins, no allocation), and shardings.
+
+Every cell lowers one of:
+  train_step  — fwd+bwd+AdamW (microbatched, remat, ZeRO-1)   [train_4k]
+  prefill     — full-context prefill returning logits+cache   [prefill_32k]
+  serve_step  — one decode token against a seq_len KV cache   [decode_32k, long_500k]
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, get_shape
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import ParallelConfig
+from repro.models.registry import build_model
+from repro.training.optimizer import abstract_opt_state, opt_state_specs
+from repro.training.train_step import TrainConfig, make_train_step
+
+WHISPER_PROMPT_LEN = 64          # decoder prompt tokens at prefill
+
+# per-arch gradient accumulation for train_4k (fit-to-HBM knob; see DESIGN.md)
+TRAIN_GRAD_ACCUM: Dict[str, int] = {
+    "qwen2.5-32b": 4,
+    "internvl2-26b": 4,
+    "gemma3-12b": 2,
+    "qwen3-moe-30b-a3b": 2,
+    "rwkv6-7b": 2,
+    "hymba-1.5b": 2,
+    "qwen3-1.7b": 2,
+}
+
+
+def effective_pc(mesh, global_batch: int) -> ParallelConfig:
+    """Drop DP batch sharding when the batch doesn't divide it (long_500k B=1)."""
+    pc = ParallelConfig.from_mesh(mesh)
+    if global_batch % max(pc.dp, 1) != 0:
+        return ParallelConfig(dp_axes=(), tp_axis=pc.tp_axis, tp=pc.tp, dp=1)
+    return pc
+
+
+def fsdp_pc(mesh) -> ParallelConfig:
+    """Pure-FSDP layout (§Perf): every mesh axis carries batch; parameters are
+    fully sharded (zero1_spec over all axes) and gathered per layer. Removes
+    TP activation all-reduces entirely — the train-cell collective fix."""
+    import numpy as np
+    names = tuple(mesh.axis_names)
+    return ParallelConfig(dp_axes=names, tp_axis=None, tp=1,
+                          dp=int(np.prod(mesh.devices.shape)))
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: ShapeConfig
+    kind: str                    # train | prefill | serve
+    fn: Any
+    args: Tuple                  # ShapeDtypeStruct trees
+    in_shardings: Optional[Tuple]
+    donate_argnums: Tuple[int, ...]
+    model: Any
+    pc: ParallelConfig
+
+
+def _shard(mesh, spec: P):
+    return NamedSharding(mesh, spec) if mesh is not None else None
+
+
+def _tree_shardings(mesh, abstract, specs):
+    if mesh is None:
+        return None
+    return jax.tree.map(lambda a, s: NamedSharding(mesh, s), abstract, specs)
+
+
+def _dict_shardings(mesh, struct: Dict, specs: Dict):
+    if mesh is None:
+        return None
+    return {k: NamedSharding(mesh, specs[k]) for k in struct}
+
+
+def build_cell(arch: str, shape_name: str, mesh=None,
+               cfg_override: Optional[ModelConfig] = None,
+               train_layout: str = "tp", compress_grads: bool = False) -> Cell:
+    cfg = cfg_override or get_config(arch)
+    shape = get_shape(shape_name)
+    if not cfg.supports_shape(shape):
+        raise ValueError(f"{arch} skips {shape_name} (see DESIGN.md §5)")
+    if mesh is None:
+        pc = ParallelConfig.single_device()
+    elif shape.kind == "train" and train_layout == "fsdp":
+        pc = fsdp_pc(mesh)
+        assert shape.global_batch % pc.dp == 0, "FSDP needs batch % devices == 0"
+    else:
+        pc = effective_pc(mesh, shape.global_batch)
+    model = build_model(cfg, pc)
+    model.mesh = mesh   # shard_map paths (MoE local-EP dispatch) need it
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    bs = pc.spec("batch", None)
+    bs1 = pc.spec("batch")
+    bs3 = pc.spec("batch", None, None)
+
+    params = model.abstract_params()
+    params_sh = model.param_shardings(mesh) if mesh is not None else None
+
+    if shape.kind == "train":
+        ga = 1 if train_layout == "fsdp" else TRAIN_GRAD_ACCUM.get(arch, 1)
+        tc = TrainConfig(grad_accum=ga, compress_grads=compress_grads)
+        step = make_train_step(model, tc)
+        opt = abstract_opt_state(params)
+        p_specs = model.param_specs()
+        if train_layout == "fsdp" and mesh is not None:
+            from repro.training.optimizer import zero1_spec
+            p_specs = jax.tree.map(lambda sp, a: zero1_spec(sp, a.shape, pc),
+                                   p_specs, params)
+            params_sh = _tree_shardings(mesh, params, p_specs)
+        opt_sh = _tree_shardings(mesh, opt, opt_state_specs(p_specs, params, pc))
+        batch, batch_sh = _train_batch(cfg, model, B, S, pc, mesh)
+        return Cell(arch, shape, "train", step, (params, opt, batch),
+                    (params_sh, opt_sh, batch_sh) if mesh is not None else None,
+                    (0, 1), model, pc)
+
+    if shape.kind == "prefill":
+        return _prefill_cell(arch, cfg, model, shape, B, S, pc, mesh, params, params_sh)
+
+    # decode / long_decode -> serve_step
+    cache = model.cache_struct(B, S)
+    cache_sh = _dict_shardings(mesh, cache, model.cache_specs())
+    tokens = jax.ShapeDtypeStruct((B,), i32)
+    positions = jax.ShapeDtypeStruct((B,), i32)
+
+    def serve_step(p, c, t, pos):
+        return model.decode_step(p, c, t, pos)
+
+    in_sh = (params_sh, cache_sh, _shard(mesh, bs1), _shard(mesh, bs1)) \
+        if mesh is not None else None
+    return Cell(arch, shape, "serve", serve_step, (params, cache, tokens, positions),
+                in_sh, (1,), model, pc)
+
+
+def _train_batch(cfg, model, B, S, pc, mesh):
+    i32 = jnp.int32
+    bs = pc.spec("batch", None)
+    bs3 = pc.spec("batch", None, None)
+    if cfg.is_encoder_decoder:
+        T = cfg.max_target_len
+        batch = {
+            "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16),
+            "tokens": jax.ShapeDtypeStruct((B, T), i32),
+            "labels": jax.ShapeDtypeStruct((B, T), i32),
+        }
+        sh = {"frames": _shard(mesh, bs3), "tokens": _shard(mesh, bs),
+              "labels": _shard(mesh, bs)} if mesh is not None else None
+        return batch, sh
+    if cfg.num_vision_patches > 0:
+        Pch = cfg.num_vision_patches
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((B, S - Pch), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+            "extra_embeds": jax.ShapeDtypeStruct((B, Pch, cfg.d_model), jnp.bfloat16),
+        }
+        sh = {"tokens": _shard(mesh, bs), "labels": _shard(mesh, bs),
+              "extra_embeds": _shard(mesh, bs3)} if mesh is not None else None
+        return batch, sh
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+             "labels": jax.ShapeDtypeStruct((B, S), i32)}
+    sh = {"tokens": _shard(mesh, bs), "labels": _shard(mesh, bs)} \
+        if mesh is not None else None
+    return batch, sh
+
+
+def _prefill_cell(arch, cfg, model, shape, B, S, pc, mesh, params, params_sh):
+    i32 = jnp.int32
+    bs = pc.spec("batch", None)
+    bs1 = pc.spec("batch")
+    bs3 = pc.spec("batch", None, None)
+    seq_lens = jax.ShapeDtypeStruct((B,), i32)
+
+    if cfg.is_encoder_decoder:
+        frames = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+        tokens = jax.ShapeDtypeStruct((B, WHISPER_PROMPT_LEN), i32)
+
+        def prefill(p, t, f, sl):
+            return model.prefill(p, t, frames=f, seq_lens=sl)
+
+        in_sh = (params_sh, _shard(mesh, bs), _shard(mesh, bs3), _shard(mesh, bs1)) \
+            if mesh is not None else None
+        return Cell(arch, shape, "prefill", prefill, (params, tokens, frames, seq_lens),
+                    in_sh, (), model, pc)
+
+    if cfg.num_vision_patches > 0:
+        Pch = cfg.num_vision_patches
+        tokens = jax.ShapeDtypeStruct((B, S - Pch), i32)
+        extra = jax.ShapeDtypeStruct((B, Pch, cfg.d_model), jnp.bfloat16)
+
+        def prefill(p, t, e, sl):
+            return model.prefill(p, t, extra_embeds=e, seq_lens=sl, max_len=S)
+
+        in_sh = (params_sh, _shard(mesh, bs), _shard(mesh, bs3), _shard(mesh, bs1)) \
+            if mesh is not None else None
+        return Cell(arch, shape, "prefill", prefill, (params, tokens, extra, seq_lens),
+                    in_sh, (), model, pc)
+
+    tokens = jax.ShapeDtypeStruct((B, S), i32)
+
+    def prefill(p, t, sl):
+        return model.prefill(p, t, seq_lens=sl, max_len=S)
+
+    in_sh = (params_sh, _shard(mesh, bs), _shard(mesh, bs1)) \
+        if mesh is not None else None
+    return Cell(arch, shape, "prefill", prefill, (params, tokens, seq_lens),
+                in_sh, (), model, pc)
+
+
+def lower_cell(cell: Cell, mesh=None):
+    """jit + lower (AOT, no allocation). Caller compiles."""
+    jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                     donate_argnums=cell.donate_argnums) \
+        if cell.in_shardings is not None else jax.jit(cell.fn)
+    if mesh is not None:
+        with mesh:
+            return jitted.lower(*cell.args)
+    return jitted.lower(*cell.args)

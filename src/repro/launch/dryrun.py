@@ -1,0 +1,162 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+on the production meshes and record memory/cost/collective statistics.
+
+The 512 placeholder host devices exist ONLY here (set before any jax import,
+which locks the device count at first init). Smoke tests and benchmarks see
+the real single CPU device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-32b --shape decode_32k --multi-pod
+Results append to experiments/dryrun_results.json.
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config, get_shape
+from repro.configs.base import ALL_SHAPES
+from repro.launch.cells import build_cell, lower_cell
+from repro.launch.hlo_stats import collective_stats
+from repro.launch.mesh import make_production_mesh
+
+RESULTS_PATH = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "experiments", "dryrun_results.json")
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True) -> Dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    row: Dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                 "kind": shape.kind}
+    if not cfg.supports_shape(shape):
+        row["status"] = "skipped"
+        row["reason"] = "full-attention arch skips long_500k (DESIGN.md §5)"
+        return row
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        cell = build_cell(arch, shape_name, mesh)
+        lowered = lower_cell(cell, mesh)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo_text = compiled.as_text()
+        colls = collective_stats(hlo_text)
+        from repro.launch.hlo_stats import dot_flops
+        dflops = dot_flops(hlo_text)
+        row.update({
+            "status": "ok",
+            "lower_s": round(t1 - t0, 2),
+            "compile_s": round(t2 - t1, 2),
+            "argument_bytes_per_device": int(ma.argument_size_in_bytes),
+            "output_bytes_per_device": int(ma.output_size_in_bytes),
+            "temp_bytes_per_device": int(ma.temp_size_in_bytes),
+            "alias_bytes_per_device": int(getattr(ma, "alias_size_in_bytes", 0)),
+            "peak_bytes_per_device": int(ma.argument_size_in_bytes
+                                         + ma.output_size_in_bytes
+                                         + ma.temp_size_in_bytes
+                                         - getattr(ma, "alias_size_in_bytes", 0)),
+            "hlo_flops_per_device": float(ca.get("flops", 0.0)),
+            "dot_flops_per_device": float(dflops),
+            "hlo_bytes_per_device": float(ca.get("bytes accessed", 0.0)),
+            "collective_out_bytes": dict(colls.out_bytes),
+            "collective_wire_bytes": {k: round(v) for k, v in colls.wire_bytes.items()},
+            "collective_counts": dict(colls.counts),
+            "num_devices": int(len(mesh.devices.ravel())),
+        })
+        if verbose:
+            print(f"  memory_analysis: args={ma.argument_size_in_bytes/1e9:.2f}GB "
+                  f"temp={ma.temp_size_in_bytes/1e9:.2f}GB "
+                  f"out={ma.output_size_in_bytes/1e9:.2f}GB "
+                  f"alias={getattr(ma, 'alias_size_in_bytes', 0)/1e9:.2f}GB")
+            print(f"  cost_analysis: flops={ca.get('flops', 0):.3e} "
+                  f"bytes={ca.get('bytes accessed', 0):.3e} (scan body counted once)")
+            print(f"  collectives(out bytes): {dict(colls.out_bytes)}")
+    except Exception as e:  # noqa: BLE001 — a failing cell is a reportable bug
+        row["status"] = "failed"
+        row["error"] = f"{type(e).__name__}: {e}"
+        row["traceback"] = traceback.format_exc(limit=8)
+    return row
+
+
+def save_rows(rows, path: str = RESULTS_PATH) -> None:
+    path = os.path.abspath(path)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    existing = []
+    if os.path.exists(path):
+        with open(path) as f:
+            existing = json.load(f)
+    keyed = {(r["arch"], r["shape"], r["mesh"]): r for r in existing}
+    for r in rows:
+        keyed[(r["arch"], r["shape"], r["mesh"])] = r
+    with open(path, "w") as f:
+        json.dump(list(keyed.values()), f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS + [None])
+    ap.add_argument("--shape", default=None,
+                    choices=[s.name for s in ALL_SHAPES] + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip cells already ok/skipped in the results file")
+    ap.add_argument("--out", default=RESULTS_PATH)
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else [s.name for s in ALL_SHAPES]
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+
+    done = set()
+    out_abs = os.path.abspath(args.out)
+    if args.resume and os.path.exists(out_abs):
+        with open(out_abs) as f:
+            for r in json.load(f):
+                if r.get("status") in ("ok", "skipped"):
+                    done.add((r["arch"], r["shape"], r["mesh"]))
+
+    rows = []
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                if (arch, shape, mesh_name) in done:
+                    continue
+                tag = f"{arch} x {shape} x {mesh_name}"
+                print(f"[dryrun] {tag}", flush=True)
+                row = run_cell(arch, shape, mp)
+                rows.append(row)
+                if row["status"] == "failed":
+                    n_fail += 1
+                    print(f"  FAILED: {row['error']}", flush=True)
+                elif row["status"] == "skipped":
+                    print(f"  skipped: {row['reason']}", flush=True)
+                else:
+                    print(f"  ok (lower {row['lower_s']}s compile {row['compile_s']}s, "
+                          f"peak {row['peak_bytes_per_device']/1e9:.2f} GB/device)",
+                          flush=True)
+                save_rows(rows, args.out)
+    print(f"\n{len(rows)} cells, {n_fail} failures")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,155 @@
+"""Parse compiled (SPMD-partitioned, per-device) HLO text for collective ops.
+
+``cost_analysis()`` gives FLOPs/bytes but not collective traffic; we sum the
+result shapes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute in the module (entry + nested computations) and derive
+wire-byte estimates from replica-group sizes.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_OP_RE = re.compile(
+    r"=\s*(?P<shape>\([^=]*?\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"(?P<kind>all-gather-start|all-gather|all-reduce-start|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=(\{\{[^}]*\}[^,]*\}|\[[0-9,]+\]<=\[[0-9,]+\])")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return 1
+    g = m.group(1)
+    if g.startswith("{{"):
+        first = g[2:].split("}")[0]
+        return len([x for x in first.split(",") if x.strip() != ""])
+    # iota form: replica_groups=[G,N]<=[TOTAL] -> groups of size N
+    dims = g[1:g.index("]")].split(",")
+    return int(dims[-1]) if dims else 1
+
+
+@dataclass
+class CollectiveStats:
+    """Per-kind output bytes + wire-byte estimates (per device)."""
+    out_bytes: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    wire_bytes: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    counts: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+
+    @property
+    def total_out_bytes(self) -> int:
+        return sum(self.out_bytes.values())
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.wire_bytes.values())
+
+    def scaled(self, factor: float) -> "CollectiveStats":
+        s = CollectiveStats()
+        for k in self.out_bytes:
+            s.out_bytes[k] = int(self.out_bytes[k] * factor)
+            s.wire_bytes[k] = self.wire_bytes[k] * factor
+            s.counts[k] = int(self.counts[k] * factor)
+        return s
+
+    def add(self, other: "CollectiveStats", factor: float = 1.0) -> "CollectiveStats":
+        s = CollectiveStats()
+        for k in set(self.out_bytes) | set(other.out_bytes):
+            s.out_bytes[k] = self.out_bytes[k] + int(other.out_bytes[k] * factor)
+            s.wire_bytes[k] = self.wire_bytes[k] + other.wire_bytes[k] * factor
+            s.counts[k] = self.counts[k] + int(other.counts[k] * factor)
+        return s
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w\.\-]+)\s*=\s*([a-z0-9]+)\[([0-9,]*)\]")
+_DOT_LINE_RE = re.compile(
+    r"=\s*[a-z0-9]+\[(?P<odims>[0-9,]*)\][^=]*?\sdot\((?P<operands>[^)]*)\)"
+    r".*?lhs_contracting_dims=\{(?P<lc>[0-9,]*)\}")
+_NAME_RE = re.compile(r"(%[\w\.\-]+)")
+
+
+def dot_flops(hlo_text: str) -> float:
+    """Exact MXU flops: 2 x prod(output dims) x prod(lhs contracting dims),
+    summed over every dot in the module (incl. fusion bodies). Immune to the
+    XLA:CPU bf16 float-normalization converts that pollute
+    cost_analysis()['flops'] (see DESIGN.md §3)."""
+    shapes: Dict[str, List[int]] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m and m.group(2) in _DTYPE_BYTES:
+            shapes[m.group(1)] = [int(d) for d in m.group(3).split(",") if d]
+    total = 0.0
+    for line in hlo_text.splitlines():
+        if " dot(" not in line:
+            continue
+        m = _DOT_LINE_RE.search(line)
+        if not m:
+            continue
+        out_dims = [int(d) for d in m.group("odims").split(",") if d]
+        names = _NAME_RE.findall(m.group("operands"))
+        if not names:
+            continue
+        l_dims = shapes.get(names[0], [])
+        lc = [int(d) for d in m.group("lc").split(",") if d]
+        out_n = 1
+        for d in out_dims:
+            out_n *= d
+        k = 1
+        for i in lc:
+            if i < len(l_dims):
+                k *= l_dims[i]
+        total += 2.0 * out_n * k
+    return total
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group("kind").replace("-start", "")
+        out_b = _shape_bytes(m.group("shape"))
+        n = max(1, _group_size(line))
+        if kind == "all-gather":
+            wire = out_b * (n - 1) / n
+        elif kind == "all-reduce":
+            wire = 2 * out_b * (n - 1) / n
+        elif kind == "reduce-scatter":
+            wire = out_b * (n - 1)            # input = n x output
+        elif kind == "all-to-all":
+            wire = out_b * (n - 1) / n
+        else:  # collective-permute
+            wire = out_b
+        stats.out_bytes[kind] += out_b
+        stats.wire_bytes[kind] += wire
+        stats.counts[kind] += 1
+    return stats

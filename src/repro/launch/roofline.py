@@ -1,0 +1,224 @@
+"""Roofline analysis from compiled dry-run artifacts (no TPU on this host —
+TPU v5e is the *target*: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI).
+
+Three terms per (arch x shape x mesh), in seconds per step:
+  compute    = HLO dot-flops / peak_flops          (per-device program)
+  memory     = bytes / hbm_bw                      (analytic min + XLA view)
+  collective = wire bytes / ici_bw
+
+Scan-body correction: XLA's cost analysis counts a lax.scan body ONCE
+(verified empirically), so every metric is composed as
+  total = full + (n_groups - 1) x (cost(1-group model) - cost(0-layer model))
+which is exact for homogeneous layer stacks. Decode steps are fully unrolled
+in the model code, so their numbers need no correction.
+
+XLA:CPU caveat (DESIGN.md §3): float normalization rewrites bf16 arithmetic to
+f32, inflating cost_analysis 'flops'/'bytes accessed' and temp memory with
+convert artifacts that do not exist on TPU. We therefore use (a) dot-flops
+parsed from the HLO (exact, convert-free) for the compute term and (b) an
+analytic bytes model for the memory term, reporting raw XLA numbers alongside.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from repro.configs import get_config, get_shape
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.cells import TRAIN_GRAD_ACCUM, build_cell, lower_cell
+from repro.launch.hlo_stats import collective_stats, dot_flops
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+
+@dataclass
+class CellStats:
+    dot_flops: float
+    xla_flops: float
+    xla_bytes: float
+    coll_wire: float
+    coll_out: float
+
+    def combine(self, body: "CellStats", mult: float) -> "CellStats":
+        return CellStats(
+            self.dot_flops + mult * body.dot_flops,
+            self.xla_flops + mult * body.xla_flops,
+            self.xla_bytes + mult * body.xla_bytes,
+            self.coll_wire + mult * body.coll_wire,
+            self.coll_out + mult * body.coll_out,
+        )
+
+    @staticmethod
+    def diff(a: "CellStats", b: "CellStats") -> "CellStats":
+        return CellStats(a.dot_flops - b.dot_flops, a.xla_flops - b.xla_flops,
+                         a.xla_bytes - b.xla_bytes, a.coll_wire - b.coll_wire,
+                         a.coll_out - b.coll_out)
+
+
+def _extract(compiled) -> CellStats:
+    txt = compiled.as_text()
+    ca = compiled.cost_analysis() or {}
+    colls = collective_stats(txt)
+    return CellStats(dot_flops(txt), float(ca.get("flops", 0.0)),
+                     float(ca.get("bytes accessed", 0.0)),
+                     colls.total_wire_bytes, colls.total_out_bytes)
+
+
+def corrected_stats(arch: str, shape_name: str, mesh,
+                    dryrun_row: Optional[Dict] = None) -> Dict:
+    """Compose exact totals from the full-cell stats plus 1-group/0-layer
+    variant compiles. When a dry-run row is supplied the (expensive) full-cell
+    compile is reused from it instead of repeated."""
+    cfg = get_config(arch)
+    cell = build_cell(arch, shape_name, mesh)
+    model = cell.model
+    if dryrun_row is not None:
+        full = CellStats(
+            dryrun_row["dot_flops_per_device"],
+            dryrun_row["hlo_flops_per_device"],
+            dryrun_row["hlo_bytes_per_device"],
+            float(sum(dryrun_row["collective_wire_bytes"].values())),
+            float(sum(dryrun_row["collective_out_bytes"].values())),
+        )
+        peak = dryrun_row["peak_bytes_per_device"]
+    else:
+        compiled = lower_cell(cell, mesh).compile()
+        full = _extract(compiled)
+        ma = compiled.memory_analysis()
+        peak = int(ma.argument_size_in_bytes + ma.output_size_in_bytes
+                   + ma.temp_size_in_bytes - getattr(ma, "alias_size_in_bytes", 0))
+    out = {
+        "arch": arch, "shape": shape_name,
+        "n_groups": model.scan_trip_count,
+        "peak_bytes_per_device": peak,
+    }
+    shape = get_shape(shape_name)
+    needs_correction = shape.kind in ("train", "prefill")  # decode is unrolled
+    if needs_correction and model.scan_trip_count > 1:
+        group = model.layers_per_scan_step
+        c1 = build_cell(arch, shape_name, mesh,
+                        cfg_override=cfg.replace(num_layers=group))
+        c0 = build_cell(arch, shape_name, mesh,
+                        cfg_override=cfg.replace(num_layers=0))
+        s1 = _extract(lower_cell(c1, mesh).compile())
+        s0 = _extract(lower_cell(c0, mesh).compile())
+        body = CellStats.diff(s1, s0)
+        total = full.combine(body, model.scan_trip_count - 1)
+        out["scan_corrected"] = True
+    else:
+        total = full
+        out["scan_corrected"] = False
+    out["stats"] = dataclasses.asdict(total)
+    out["stats_uncorrected"] = dataclasses.asdict(full)
+    return out
+
+
+# --------------------------------------------------------------------------
+# analytic models (per-device; global figures divided by device count)
+# --------------------------------------------------------------------------
+def analytic_model_flops(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, float]:
+    """Global MODEL_FLOPS: the spec's 6·N·D / 6·N_active·D parameter term plus
+    an attention-context term reported separately (decode reads O(S) cache)."""
+    n = cfg.num_params()
+    n_act = cfg.num_active_params()
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        tokens = B * S
+        param_term = 6.0 * n_act * tokens
+        attn_mult = 3.0      # fwd + bwd
+        ctx = S / 2          # causal average context
+    elif shape.kind == "prefill":
+        tokens = B * S
+        param_term = 2.0 * n_act * tokens
+        attn_mult = 1.0
+        ctx = S / 2
+    else:  # decode: one token per sequence against an S-token context
+        tokens = B
+        param_term = 2.0 * n_act * tokens
+        attn_mult = 1.0
+        ctx = S
+    if cfg.attn_kind == "linear":
+        attn = 0.0           # rwkv context cost folded into its param projections
+    else:
+        L_attn = cfg.num_layers
+        window = cfg.sliding_window
+        if cfg.attn_kind == "local_global" and window:
+            n_local = cfg.num_layers * cfg.local_global_pattern // (cfg.local_global_pattern + 1)
+            n_global = cfg.num_layers - n_local
+            eff_ctx = (n_local * min(ctx, window) + n_global * ctx) / cfg.num_layers
+        elif cfg.attn_kind == "swa" and window:
+            eff_ctx = min(ctx, window)
+        else:
+            eff_ctx = ctx
+        attn = attn_mult * 4.0 * tokens * cfg.num_heads * cfg.head_dim * eff_ctx * L_attn
+    return {"param_flops": param_term, "attn_flops": attn,
+            "model_flops": param_term + attn}
+
+
+def analytic_memory_bytes(cfg: ModelConfig, shape: ShapeConfig, model,
+                          n_devices: int, tp: int) -> float:
+    """Per-device HBM traffic lower bound for one step (bf16 storage)."""
+    param_bytes = model.param_count() * 2 / tp     # weights read once
+    B = shape.global_batch
+    dp = max(1, n_devices // tp)
+    if shape.is_decode:
+        try:
+            cache = model.cache_struct(B, shape.seq_len)
+            cache_bytes = sum(
+                math.prod(s.shape) * s.dtype.itemsize
+                for s in cache.values()) / n_devices
+        except Exception:
+            cache_bytes = 0.0
+        return param_bytes + cache_bytes           # read cache once + weights
+    act = B * shape.seq_len * cfg.d_model * 2 * cfg.num_layers * 4 / n_devices
+    if shape.kind == "train":
+        opt = model.param_count() * 4 * 3 * 2 / n_devices   # m,v,master r+w (ZeRO)
+        return param_bytes * 2 + opt + act * 3
+    return param_bytes + act
+
+
+def roofline_row(arch: str, shape_name: str, mesh, dryrun_row: Optional[Dict] = None,
+                 cell_stats: Optional[Dict] = None) -> Dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    n_dev = len(mesh.devices.ravel())
+    cs = cell_stats or corrected_stats(arch, shape_name, mesh, dryrun_row=dryrun_row)
+    stats = cs["stats"]
+    cell = build_cell(arch, shape_name, mesh)
+    tp = cell.pc.tp
+
+    compute_term = stats["dot_flops"] / PEAK_FLOPS
+    mem_bytes = analytic_memory_bytes(cfg, shape, cell.model, n_dev, tp)
+    memory_term = mem_bytes / HBM_BW
+    collective_term = stats["coll_wire"] / ICI_BW
+    model = analytic_model_flops(cfg, shape)
+    model_per_dev = model["model_flops"] / n_dev
+    terms = {"compute": compute_term, "memory": memory_term,
+             "collective": collective_term}
+    bottleneck = max(terms, key=terms.get)
+    step_time = max(terms.values())
+    return {
+        "arch": arch, "shape": shape_name, "mesh": "x".join(map(str, mesh.devices.shape)),
+        "compute_term_s": compute_term,
+        "memory_term_s": memory_term,
+        "collective_term_s": collective_term,
+        "bottleneck": bottleneck,
+        "step_time_bound_s": step_time,
+        "dot_flops_per_device": stats["dot_flops"],
+        "model_flops_global": model["model_flops"],
+        "model_param_flops_global": model["param_flops"],
+        "useful_ratio": model_per_dev / stats["dot_flops"] if stats["dot_flops"] else 0.0,
+        "analytic_mem_bytes_per_device": mem_bytes,
+        "xla_bytes_per_device": stats["xla_bytes"],
+        "xla_flops_per_device": stats["xla_flops"],
+        "coll_wire_bytes_per_device": stats["coll_wire"],
+        "mfu_at_bound": (model_per_dev / PEAK_FLOPS) / step_time if step_time else 0.0,
+        "scan_corrected": cs.get("scan_corrected", False),
+        "peak_bytes_per_device": cs.get("peak_bytes_per_device", 0),
+    }

@@ -1,0 +1,98 @@
+"""Serving driver: RelServe (or any baseline) over a relQuery trace.
+
+Two modes:
+  --simulate      paper-scale traces on the simulated clock (default constants
+                  match the paper's OPT-13B/A100 regime)
+  (default)       real JAX execution of a smoke-scale model on this host
+
+At cluster scale each DP replica runs one engine; a front-end router hashes
+relQueries to replicas (relQuery affinity keeps prefix caching effective) —
+`route_relquery` below is that hash.
+
+  PYTHONPATH=src python -m repro.launch.serve --simulate --scheduler relserve
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --num-relqueries 4
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.core.latency_model import a100_opt13b
+from repro.core.policies import SCHEDULERS
+from repro.core.priority import BatchLimits, DPUConfig
+from repro.data.datasets import ALL_DATASETS, make_dataset
+from repro.data.trace import TraceConfig, build_trace
+from repro.engine.engine import ServingEngine
+from repro.engine.executor import RealExecutor
+from repro.engine.prefix_cache import PrefixCache
+from repro.engine.simulator import SimulatedExecutor
+from repro.engine.tokenizer import HashTokenizer
+from repro.models.registry import build_model
+
+
+def route_relquery(rel_id: str, num_replicas: int) -> int:
+    """Front-end router: relQuery-affine hashing across DP engine replicas."""
+    return hash(rel_id) % num_replicas
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scheduler", default="relserve", choices=list(SCHEDULERS))
+    ap.add_argument("--dataset", default="rotten", choices=list(ALL_DATASETS))
+    ap.add_argument("--simulate", action="store_true")
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--num-relqueries", type=int, default=100)
+    ap.add_argument("--rate", type=float, default=1.0)
+    ap.add_argument("--max-requests", type=int, default=100)
+    ap.add_argument("--starvation-threshold", type=float, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    lm = a100_opt13b()
+    pc = PrefixCache(block_size=16)
+    limits = BatchLimits()
+    kw = dict(limits=limits, latency_model=lm, prefix_cache=pc)
+    if args.scheduler.startswith("relserve"):
+        kw["dpu_config"] = DPUConfig(starvation_threshold=args.starvation_threshold)
+    sched = SCHEDULERS[args.scheduler](**kw)
+
+    if args.simulate:
+        ds = make_dataset(args.dataset, num_rows=10_000, seed=args.seed)
+        trace = build_trace(ds, TraceConfig(num_relqueries=args.num_relqueries,
+                                            rate=args.rate, seed=args.seed,
+                                            max_requests=args.max_requests))
+        executor = SimulatedExecutor(lm, prefix_cache=pc, seed=args.seed)
+    else:
+        cfg = get_smoke_config(args.arch)
+        model = build_model(cfg)
+        params = model.init_params(jax.random.PRNGKey(args.seed))
+        tok = HashTokenizer(vocab_size=cfg.vocab_size - 2)
+        ds = make_dataset(args.dataset, num_rows=1000, seed=args.seed)
+        trace = build_trace(ds, TraceConfig(
+            num_relqueries=min(args.num_relqueries, 8), rate=args.rate,
+            seed=args.seed, max_requests=min(args.max_requests, 8)),
+            tokenizer=tok)
+        for rq in trace:     # keep CPU decoding affordable
+            rq.max_output_tokens = min(rq.max_output_tokens, 8)
+            for r in rq.requests:
+                r.max_output_tokens = rq.max_output_tokens
+        executor = RealExecutor(model, params, max_slots=64, max_len=1024,
+                                prefix_cache=pc)
+
+    engine = ServingEngine(sched, executor)
+    report = engine.run_trace(trace)
+    w, c, t = report.phase_means()
+    print(f"scheduler={args.scheduler} relqueries={len(report.latencies)}")
+    print(f"avg latency {report.avg_latency:.2f}s  p50 {report.percentile(50):.2f}  "
+          f"p99 {report.percentile(99):.2f}  max {report.max_latency:.2f}")
+    print(f"phases: waiting {w:.2f}s  core {c:.2f}s  tail {t:.2f}s")
+    print(f"e2e {report.end_to_end:.1f}s  prefix-hit {report.prefix_hit_ratio:.2%}  "
+          f"iterations {len(report.events)}")
+    print(f"overheads: DPU {report.dpu_time:.3f}s  ABA {report.aba_time:.3f}s  "
+          f"schedule {report.schedule_time:.3f}s")
+
+
+if __name__ == "__main__":
+    main()

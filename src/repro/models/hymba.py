@@ -1,0 +1,222 @@
+"""Hymba: each layer runs sliding-window attention heads and Mamba (selective
+SSM) heads in parallel on the same input; branch outputs are normalized and
+averaged (arXiv:2411.13676). Constant-size SSM state + windowed KV make the
+arch long-context viable (long_500k runs).
+
+The selective scan is chunked: causal conv runs over the full sequence (cheap),
+the SSM recurrence uses an unrolled chunk loop with an associative scan inside
+each chunk (log-depth, fully visible to HLO cost analysis).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.param_utils import t
+from repro.models.transformer import DenseTransformer
+
+
+def _ssm_chunk_size(seq: int) -> int:
+    c = max(64, seq // 128)
+    while seq % c:
+        c //= 2
+    return max(c, 1)
+
+
+def selective_scan_chunked(ssm_inputs_fn, x_conv, h0):
+    """Chunked selective scan. ``ssm_inputs_fn(x_chunk, offset) -> (dA, dBx, C)``
+    is evaluated *per chunk* so the [B, c, Di, N] discretization tensors never
+    materialize for the whole sequence (at 4k x d_inner x N that would be tens
+    of GB). Returns (y [B, S, Di], h_final)."""
+    B, S = x_conv.shape[:2]
+    c = _ssm_chunk_size(S)
+    ys = []
+    h = h0
+
+    def combine(a, b):
+        a1, b1 = a
+        a2, b2 = b
+        return a1 * a2, b1 * a2 + b2
+
+    for i in range(S // c):
+        sl = slice(i * c, (i + 1) * c)
+        dA, dBx, C = ssm_inputs_fn(x_conv[:, sl], i * c)
+        A_cum, B_cum = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+        hs = A_cum * h[:, None] + B_cum                     # [B, c, Di, N]
+        ys.append(jnp.einsum("bsdn,bsn->bsd", hs, C))
+        h = hs[:, -1]
+    return jnp.concatenate(ys, axis=1), h
+
+
+class HymbaModel(DenseTransformer):
+    """DenseTransformer (swa attention) + parallel Mamba branch per layer."""
+
+    def __init__(self, cfg, pc=None):
+        super().__init__(cfg, pc)
+        self.d_inner = cfg.ssm_expand * cfg.d_model
+        self.dt_rank = max(16, cfg.d_model // 16)
+
+    # ---------------------------------------------------------------- params
+    def templates(self):
+        base = super().templates()
+        cfg = self.cfg
+        G, Pg, D = self.n_groups, self.group, cfg.d_model
+        Di, N, ck, dtr = self.d_inner, cfg.ssm_state, cfg.ssm_conv, self.dt_rank
+        base["blocks"].update({
+            "m_in": t((G, Pg, D, 2 * Di), (None, None, None, "d_inner"), fan_in=D),
+            "m_conv_w": t((G, Pg, Di, ck), (None, None, "d_inner", None), fan_in=ck),
+            "m_conv_b": t((G, Pg, Di), (None, None, "d_inner"), "zeros"),
+            "m_alog": t((G, Pg, Di, N), (None, None, "d_inner", None), "zeros"),
+            "m_wx": t((G, Pg, Di, dtr + 2 * N), (None, None, "d_inner", None), fan_in=Di),
+            "m_wdt": t((G, Pg, dtr, Di), (None, None, None, "d_inner"), fan_in=dtr),
+            "m_bdt": t((G, Pg, Di), (None, None, "d_inner"), "zeros"),
+            "m_dskip": t((G, Pg, Di), (None, None, "d_inner"), "ones"),
+            "m_out": t((G, Pg, Di, D), (None, None, "d_inner", None), fan_in=Di),
+            "fuse_na": t((G, Pg, D), (None, None, None), "zeros"),
+            "fuse_nm": t((G, Pg, D), (None, None, None), "zeros"),
+        })
+        return base
+
+    # ---------------------------------------------------------------- cache
+    def cache_struct(self, batch: int, max_len: int):
+        out = super().cache_struct(batch, max_len)
+        cfg = self.cfg
+        G = self.n_groups
+        out["conv"] = jax.ShapeDtypeStruct(
+            (G, batch, self.d_inner, cfg.ssm_conv - 1), self._dtype)
+        out["ssm"] = jax.ShapeDtypeStruct(
+            (G, batch, self.d_inner, cfg.ssm_state), jnp.float32)
+        return out
+
+    def cache_specs(self):
+        specs = super().cache_specs()
+        specs["conv"] = self.pc.spec(None, "batch", "d_inner", None)
+        specs["ssm"] = self.pc.spec(None, "batch", "d_inner", None)
+        return specs
+
+    # ---------------------------------------------------------------- mamba branch
+    def _mamba_proj(self, pp, p, x):
+        xz = x @ pp["m_in"][p]
+        return jnp.split(xz, 2, axis=-1)  # x_m, z each [..., Di]
+
+    def _mamba_ssm_inputs(self, pp, p, x_conv, seq_lens=None, offset: int = 0):
+        """x_conv: [..., Di] post-conv post-silu -> (dA, dBx pieces, C)."""
+        cfg = self.cfg
+        N, dtr = cfg.ssm_state, self.dt_rank
+        xp = x_conv @ pp["m_wx"][p]
+        dt = jax.nn.softplus(
+            (xp[..., :dtr] @ pp["m_wdt"][p]).astype(jnp.float32)
+            + pp["m_bdt"][p].astype(jnp.float32))                  # [..., Di]
+        if seq_lens is not None:
+            valid = offset + jnp.arange(x_conv.shape[1])[None, :] < seq_lens[:, None]
+            dt = dt * valid[..., None].astype(jnp.float32)
+        Bt = xp[..., dtr:dtr + N].astype(jnp.float32)
+        Ct = xp[..., dtr + N:].astype(jnp.float32)
+        A = -jnp.exp(pp["m_alog"][p].astype(jnp.float32))          # [Di, N]
+        dA = jnp.exp(dt[..., None] * A)                            # [..., Di, N]
+        dBx = dt[..., None] * Bt[..., None, :] * x_conv.astype(jnp.float32)[..., None]
+        return dA, dBx, Ct
+
+    def _mamba_seq(self, pp, p, x, seq_lens=None):
+        """x: [B, S, D] -> (out [B, S, D], conv_tail, h_final). Pad tokens
+        freeze the SSM state (dt := 0 -> dA = 1, dBx = 0)."""
+        cfg = self.cfg
+        B, S, D = x.shape
+        x_m, z = self._mamba_proj(pp, p, x)
+        ck = cfg.ssm_conv
+        pad = jnp.pad(x_m, ((0, 0), (ck - 1, 0), (0, 0)))
+        conv = sum(pad[:, i:i + S] * pp["m_conv_w"][p][:, i] for i in range(ck))
+        x_conv = jax.nn.silu((conv + pp["m_conv_b"][p]).astype(jnp.float32)).astype(x.dtype)
+        h0 = jnp.zeros((B, self.d_inner, cfg.ssm_state), jnp.float32)
+        y, hS = selective_scan_chunked(
+            lambda xc, off: self._mamba_ssm_inputs(pp, p, xc, seq_lens=seq_lens,
+                                                   offset=off),
+            x_conv, h0)
+        y = y + pp["m_dskip"][p].astype(jnp.float32) * x_conv.astype(jnp.float32)
+        out = (y.astype(x.dtype) * jax.nn.silu(z)) @ pp["m_out"][p]
+        if seq_lens is None:
+            conv_tail = x_m[:, S - (ck - 1):].transpose(0, 2, 1) if S >= ck - 1 else \
+                jnp.pad(x_m, ((0, 0), (ck - 1 - S, 0), (0, 0))).transpose(0, 2, 1)
+        else:
+            # last ck-1 *valid* inputs per sequence
+            offs = jnp.arange(ck - 1) - (ck - 1)
+            idx = jnp.clip(seq_lens[:, None] + offs[None, :], 0, S - 1)  # [B, ck-1]
+            tail = jnp.take_along_axis(x_m, idx[..., None].astype(jnp.int32), axis=1)
+            mask = (seq_lens[:, None] + offs[None, :]) >= 0
+            tail = jnp.where(mask[..., None], tail, 0)
+            conv_tail = tail.transpose(0, 2, 1)
+        return out, conv_tail.astype(self._dtype), hS
+
+    def _mamba_decode(self, pp, p, x, conv_state, h):
+        """x: [B, D]; conv_state: [B, Di, ck-1]; h: [B, Di, N]."""
+        cfg = self.cfg
+        ck = cfg.ssm_conv
+        x_m, z = self._mamba_proj(pp, p, x)
+        window = jnp.concatenate([conv_state, x_m[..., None]], axis=-1)  # [B, Di, ck]
+        conv = jnp.einsum("bdk,dk->bd", window.astype(jnp.float32),
+                          pp["m_conv_w"][p].astype(jnp.float32))
+        x_conv = jax.nn.silu(conv + pp["m_conv_b"][p].astype(jnp.float32)).astype(x.dtype)
+        dA, dBx, Ct = self._mamba_ssm_inputs(pp, p, x_conv)
+        h_new = dA * h + dBx                                       # [B, Di, N]
+        y = jnp.einsum("bdn,bn->bd", h_new, Ct)
+        y = y + pp["m_dskip"][p].astype(jnp.float32) * x_conv.astype(jnp.float32)
+        out = (y.astype(x.dtype) * jax.nn.silu(z)) @ pp["m_out"][p]
+        return out, window[..., 1:].astype(self._dtype), h_new
+
+    # ---------------------------------------------------------------- fused blocks
+    def _group_seq(self, carry, pp, positions, seq_lens, collect: bool, max_len: int):
+        x, aux = carry
+        cfg = self.cfg
+        W = min(cfg.sliding_window or max_len, max_len)
+        kw, vw, convs, ssms = [], [], [], []
+        for p in range(self.group):
+            h = L.rmsnorm(x, pp["ln1"][p], cfg.norm_eps)
+            attn, (k, v) = self._mixer_seq(pp, p, h, positions, seq_lens, "local", None)
+            mamba, conv_tail, hS = self._mamba_seq(pp, p, h, seq_lens=seq_lens)
+            fused = 0.5 * (L.rmsnorm(attn, pp["fuse_na"][p], cfg.norm_eps)
+                           + L.rmsnorm(mamba, pp["fuse_nm"][p], cfg.norm_eps))
+            x = x + fused
+            h2 = L.rmsnorm(x, pp["ln2"][p], cfg.norm_eps)
+            mlp, a = self._mlp(pp, p, h2)
+            x = x + mlp
+            aux = aux + a
+            x = self._constrain(x, "batch", None, None)
+            if collect:
+                kw.append(L.ring_from_sequence(k, W, seq_lens))
+                vw.append(L.ring_from_sequence(v, W, seq_lens))
+                convs.append(conv_tail)
+                ssms.append(hS)
+        caches = {}
+        if collect:
+            caches["k_win"], caches["v_win"] = jnp.stack(kw), jnp.stack(vw)
+            caches["conv"], caches["ssm"] = convs[0], ssms[0]
+        return (x, aux), caches
+
+    def decode_step(self, params, cache, tokens, positions):
+        """Unrolled layer loop (see DenseTransformer.decode_step)."""
+        cfg = self.cfg
+        x = self.embed_tokens(params, tokens)
+        cache = dict(cache)
+        for g in range(self.n_groups):
+            pp = jax.tree.map(lambda a: a[g], params["blocks"])
+            p = 0
+            h = L.rmsnorm(x, pp["ln1"][p], cfg.norm_eps)
+            attn, cache = self._attn_decode_inplace(pp, p, h, positions,
+                                                    "local", cache, g)
+            mamba, conv_new, h_new = self._mamba_decode(
+                pp, p, h, cache["conv"][g], cache["ssm"][g])
+            cache["conv"] = cache["conv"].at[g].set(conv_new)
+            cache["ssm"] = cache["ssm"].at[g].set(h_new)
+            fused = 0.5 * (L.rmsnorm(attn, pp["fuse_na"][p], cfg.norm_eps)
+                           + L.rmsnorm(mamba, pp["fuse_nm"][p], cfg.norm_eps))
+            x = x + fused
+            h2 = L.rmsnorm(x, pp["ln2"][p], cfg.norm_eps)
+            mlp, _ = self._mlp(pp, p, h2)
+            x = x + mlp
+            x = self._constrain(x, "batch", None)
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        return self.logits(params, x), cache

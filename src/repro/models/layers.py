@@ -1,0 +1,295 @@
+"""Shared model primitives: norms, RoPE, blockwise flash attention (pure-XLA
+path used for dry-run lowering; Pallas kernels provide the TPU-optimized path),
+decode attention against dense/ring KV caches, MLPs, chunked cross-entropy.
+
+All attention here uses the packed GQA layout from ``repro.distributed.sharding``:
+q ``[B, S, G, Qp, hd]``, k/v ``[B, S, G, hd]`` with G = kv_slots, Qp = q_per_slot.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# norms & activations
+# --------------------------------------------------------------------------
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def groupnorm_heads(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """Per-head groupnorm over the trailing head_dim (used by RWKV6)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (((x - mu) * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dt)
+
+
+def act_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return partial(jax.nn.gelu, approximate=True)
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., seq?, hd] with positions broadcastable to x.shape[:-1]."""
+    if theta <= 0:
+        return x
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # [hd/2]
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # [..., hd/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# blockwise (flash-style) attention — pure XLA, unrolled over blocks
+# --------------------------------------------------------------------------
+def _pick_block(seq: int, target_blocks: int = 8, floor: int = 512) -> int:
+    blk = max(floor, seq // target_blocks)
+    while seq % blk != 0:  # shapes in this project are powers of two; be safe anyway
+        blk //= 2
+        if blk < 16:
+            return seq
+    return blk
+
+
+def block_attention(
+    q: jax.Array,                # [B, S, G, Qp, hd]
+    k: jax.Array,                # [B, T, G, hd]
+    v: jax.Array,                # [B, T, G, hd]
+    *,
+    causal: bool = True,
+    window: int = 0,             # sliding window size (0 = unlimited)
+    q_offset: int = 0,           # absolute position of q[0] relative to k[0]
+    seq_lens: Optional[jax.Array] = None,   # [B] valid key lengths
+    q_block: Optional[int] = None,
+    kv_block: Optional[int] = None,
+) -> jax.Array:
+    """Online-softmax attention, unrolled over (q-block, kv-block) pairs.
+
+    Unrolling (vs lax.scan) keeps every FLOP visible to HLO cost analysis and
+    lets causal/window-sloped block pairs be skipped *statically* — sliding-
+    window layers really do cost O(S·W).
+    """
+    B, S, G, Qp, hd = q.shape
+    T = k.shape[1]
+    qb = q_block or _pick_block(S)
+    kb = kv_block or _pick_block(T)
+    scale = 1.0 / math.sqrt(hd)
+    nq, nk = S // qb, T // kb
+
+    out = []
+    for i in range(nq):
+        qi = (q[:, i * qb:(i + 1) * qb] * scale).astype(q.dtype)
+        q_pos_lo = q_offset + i * qb
+        q_pos_hi = q_pos_lo + qb - 1
+        m = jnp.full((B, G, Qp, qb), NEG_INF, jnp.float32)
+        l = jnp.zeros((B, G, Qp, qb), jnp.float32)
+        acc = jnp.zeros((B, G, Qp, qb, hd), jnp.float32)
+        for j in range(nk):
+            k_pos_lo, k_pos_hi = j * kb, (j + 1) * kb - 1
+            if causal and k_pos_lo > q_pos_hi:
+                continue  # entirely in the future
+            if window > 0 and k_pos_hi < q_pos_lo - window + 1:
+                continue  # entirely outside the sliding window
+            kj = k[:, j * kb:(j + 1) * kb]
+            vj = v[:, j * kb:(j + 1) * kb]
+            s_blk = jnp.einsum("bqgph,bkgh->bgpqk", qi, kj,
+                               preferred_element_type=jnp.float32)
+            qpos = q_pos_lo + jnp.arange(qb)
+            kpos = k_pos_lo + jnp.arange(kb)
+            mask = jnp.ones((qb, kb), bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window > 0:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            mask_b = mask[None, None, None]
+            if seq_lens is not None:
+                mask_b = mask_b & (kpos[None, None, None, None, :] < seq_lens[:, None, None, None, None])
+            s_blk = jnp.where(mask_b, s_blk, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s_blk, axis=-1))
+            p = jnp.exp(s_blk - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bgpqk,bkgh->bgpqh", p.astype(v.dtype), vj,
+                preferred_element_type=jnp.float32)
+            m = m_new
+        o = acc / jnp.maximum(l, 1e-30)[..., None]
+        out.append(jnp.moveaxis(o, (1, 2), (2, 3)))  # -> [B, qb, G, Qp, hd]
+    return jnp.concatenate(out, axis=1).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# decode attention against a dense KV cache (one new token per sequence)
+# --------------------------------------------------------------------------
+def decode_attention(
+    q: jax.Array,          # [B, G, Qp, hd]
+    k_cache: jax.Array,    # [B, T, G, hd]
+    v_cache: jax.Array,    # [B, T, G, hd]
+    positions: jax.Array,  # [B] current token position (already written to cache)
+    *,
+    window: int = 0,       # if > 0, cache is a ring buffer of size T == window
+) -> jax.Array:
+    B, T, G, hd = k_cache.shape
+    scale = 1.0 / math.sqrt(hd)
+    # keep the cache in its storage dtype (bf16) and accumulate in f32 on the
+    # MXU — casting the cache to f32 would materialize a 2x copy of multi-GB
+    # cache slices per layer.
+    s = jnp.einsum("bgph,btgh->bgpt", (q * scale).astype(q.dtype), k_cache,
+                   preferred_element_type=jnp.float32)
+    idx = jnp.arange(T)
+    if window > 0:
+        # ring buffer: slot t holds absolute position p with p % T == t and
+        # p in (pos - T, pos]; valid once written, i.e. slot index <= pos for
+        # the un-wrapped prefix, everything valid after wrap-around.
+        valid = (idx[None, :] <= positions[:, None]) | (positions[:, None] >= T)
+    else:
+        valid = idx[None, :] <= positions[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgpt,btgh->bgph", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.astype(q.dtype)
+
+
+def cache_write(cache: jax.Array, new: jax.Array, positions: jax.Array,
+                window: int = 0) -> jax.Array:
+    """Scatter one token per sequence into a dense or ring KV cache.
+
+    cache: [B, T, G, hd]; new: [B, G, hd]; positions: [B].
+    """
+    T = cache.shape[1]
+    slots = positions % T if window > 0 else positions
+    return cache.at[jnp.arange(cache.shape[0]), slots].set(new.astype(cache.dtype))
+
+
+def cache_write_full(full: jax.Array, g: int, i: int, new: jax.Array,
+                     positions: jax.Array, window: int = 0) -> jax.Array:
+    """Scatter one token per sequence directly into the *full* stacked cache
+    ``[G, n, B, T, KVs, hd]`` — a small scatter XLA keeps in place on a donated
+    buffer (no per-layer read-modify-write of multi-GB slices).
+    """
+    T = full.shape[3]
+    B = full.shape[2]
+    slots = positions % T if window > 0 else positions
+    return full.at[g, i, jnp.arange(B), slots].set(new.astype(full.dtype))
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+def swiglu_mlp(x, w_gate, w_up, w_down, act="silu"):
+    f = act_fn(act)
+    h = f(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def gelu_mlp(x, w_in, b_in, w_out, b_out):
+    h = jax.nn.gelu(x @ w_in + b_in, approximate=True)
+    return h @ w_out + b_out
+
+
+# --------------------------------------------------------------------------
+# chunked cross-entropy: never materializes [B, S, V]
+# --------------------------------------------------------------------------
+def chunked_softmax_xent(
+    x: jax.Array,         # [B, S, D] final hidden states
+    w_vocab: jax.Array,   # [D, Vp] (tp-sharded on V, possibly padded)
+    labels: jax.Array,    # [B, S] int32; -1 = padding
+    *,
+    num_chunks: int = 8,
+    z_loss: float = 0.0,
+    vocab_valid: int = 0,   # true vocab size; pad columns masked out of the lse
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (sum_loss, num_valid). Chunked over the sequence axis."""
+    B, S, D = x.shape
+    Vp = w_vocab.shape[-1]
+    cs = max(1, S // num_chunks)
+    while S % cs:
+        cs //= 2
+    total = jnp.zeros((), jnp.float32)
+    count = jnp.zeros((), jnp.float32)
+    for i in range(S // cs):
+        xc = x[:, i * cs:(i + 1) * cs]
+        yc = labels[:, i * cs:(i + 1) * cs]
+        logits = (xc @ w_vocab).astype(jnp.float32)          # [B, cs, Vp]
+        if vocab_valid and vocab_valid < Vp:
+            logits = jnp.where(jnp.arange(Vp) < vocab_valid, logits, NEG_INF)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        hit = jnp.take_along_axis(logits, jnp.maximum(yc, 0)[..., None], axis=-1)[..., 0]
+        valid = (yc >= 0).astype(jnp.float32)
+        loss = (lse - hit) * valid
+        if z_loss > 0:
+            loss = loss + z_loss * jnp.square(lse) * valid
+        total = total + jnp.sum(loss)
+        count = count + jnp.sum(valid)
+    return total, count
+
+
+# --------------------------------------------------------------------------
+# misc
+# --------------------------------------------------------------------------
+def causal_positions(seq_len: int, batch: int) -> jax.Array:
+    return jnp.broadcast_to(jnp.arange(seq_len, dtype=jnp.int32), (batch, seq_len))
+
+
+def ring_from_sequence(k: jax.Array, window: int,
+                       seq_lens: Optional[jax.Array] = None) -> jax.Array:
+    """Arrange the last ``window`` *valid* positions of ``k`` [B, S, ...] into
+    ring-buffer slot order (slot i holds the latest valid position p with
+    p % window == i), so a prefill of any (possibly padded) length hands decode
+    a consistent ring cache."""
+    B, S = k.shape[:2]
+    if seq_lens is None:
+        if S < window:
+            pad = [(0, 0)] * k.ndim
+            pad[1] = (0, window - S)
+            return jnp.pad(k, pad)
+        slots = np.arange(window)
+        pos = (S - 1) - ((S - 1 - slots) % window)
+        return jnp.take(k, jnp.asarray(pos), axis=1)
+    slots = jnp.arange(window)
+    last = (seq_lens - 1)[:, None]                      # [B, 1]
+    pos = last - ((last - slots[None, :]) % window)     # [B, W]
+    valid = pos >= 0
+    pos = jnp.clip(pos, 0, S - 1)
+    idx = pos.reshape(B, window, *([1] * (k.ndim - 2)))
+    gathered = jnp.take_along_axis(k, idx.astype(jnp.int32), axis=1)
+    mask = valid.reshape(B, window, *([1] * (k.ndim - 2)))
+    return jnp.where(mask, gathered, 0)

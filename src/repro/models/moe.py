@@ -1,0 +1,231 @@
+"""Mixture-of-Experts transformer (qwen3-moe, granite-moe).
+
+Expert dispatch uses the *grouped-capacity* scheme: tokens are sorted by their
+assigned expert, packed into an ``[E, C, D]`` buffer (capacity C from the
+capacity factor; overflow drops, standard for capacity-based MoE), processed as
+a batched matmul ``[E, C, D] x [E, D, F]`` (expert dim sharded over the TP/EP
+axis), and scattered back with router combine weights. FLOPs ≈ top_k × cf ×
+ideal — no dense all-expert compute, no [T, E, C] one-hot dispatch tensors.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import round_up
+from repro.models import layers as L
+from repro.models.param_utils import t
+from repro.models.transformer import DenseTransformer
+
+
+def moe_dispatch(
+    x: jax.Array,            # [T, D] tokens (flattened batch*seq)
+    router_w: jax.Array,     # [D, E] true experts only
+    w_gate: jax.Array,       # [Ep, D, F] Ep = experts padded to a TP multiple
+    w_up: jax.Array,         # [Ep, D, F]
+    w_down: jax.Array,       # [Ep, F, D]
+    *,
+    top_k: int,
+    capacity_factor: float,
+    act: str = "silu",
+    constrain=None,   # sharding constraint for the [E, C, D] grouped buffers
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (out [T, D], aux load-balancing loss). Pad experts (index >= E)
+    exist only in the grouped matmul (zero weights, never routed to)."""
+    T, D = x.shape
+    E = router_w.shape[1]
+    Ep = w_gate.shape[0]
+    logits = (x @ router_w).astype(jnp.float32)           # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, top_k)            # [T, K]
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # ---- aux loss (switch-style load balancing) ----
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(top_i[:, 0], E, dtype=jnp.float32), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+
+    # ---- sort token-expert assignments by expert ----
+    TK = T * top_k
+    eid = top_i.reshape(TK)                               # expert per slot
+    tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), top_k)
+    wgt = top_w.reshape(TK)
+    order = jnp.argsort(eid, stable=True)
+    eid_s, tok_s, wgt_s = eid[order], tok[order], wgt[order]
+
+    # rank of each slot within its expert group (sorted -> searchsorted works)
+    first = jnp.searchsorted(eid_s, jnp.arange(E, dtype=eid_s.dtype))
+    rank = jnp.arange(TK, dtype=jnp.int32) - first[eid_s].astype(jnp.int32)
+
+    C = int(round_up(max(8, math.ceil(T * top_k / E * capacity_factor)), 8))
+    keep = rank < C
+    dest = jnp.where(keep, eid_s.astype(jnp.int32) * C + rank, Ep * C)  # Ep*C = drop bin
+
+    # pack tokens into expert groups [Ep, C, D]
+    src = x[tok_s] * keep[:, None].astype(x.dtype)
+    buf = jnp.zeros((Ep * C + 1, D), x.dtype).at[dest].set(src)[:-1]
+    grouped = buf.reshape(Ep, C, D)
+    if constrain is not None:
+        grouped = constrain(grouped)                      # [E('model'), C, D]
+
+    f = L.act_fn(act)
+    h = f(jnp.einsum("ecd,edf->ecf", grouped, w_gate)) * jnp.einsum(
+        "ecd,edf->ecf", grouped, w_up)
+    out_g = jnp.einsum("ecf,efd->ecd", h, w_down)
+    if constrain is not None:
+        out_g = constrain(out_g)
+    out_g = out_g.reshape(Ep * C, D)
+
+    # gather each slot's expert output and combine back per token
+    gathered = jnp.where(keep[:, None], out_g[jnp.minimum(dest, Ep * C - 1)], 0)
+    out = jnp.zeros((T, D), x.dtype).at[tok_s].add(
+        gathered * wgt_s[:, None].astype(x.dtype))
+    return out, aux
+
+
+def moe_dispatch_local_ep(
+    x: jax.Array,            # [T, D] tokens (dp-sharded over batch axes)
+    router_w: jax.Array,     # [D, E]
+    w_gate: jax.Array,       # [Ep, D, F] expert-sharded over the model axis
+    w_up: jax.Array,
+    w_down: jax.Array,
+    *,
+    top_k: int,
+    capacity_factor: float,
+    act: str,
+    mesh,
+    pc,
+) -> Tuple[jax.Array, jax.Array]:
+    """Expert-parallel dispatch with ZERO cross-device token exchange.
+
+    Key insight (§Perf cell B): activations are replicated over the model axis
+    in this TP layout, so every (data, model) rank already holds its data
+    shard's tokens — it can locally select the tokens routed to *its* experts,
+    run the grouped matmul, and a single psum over the model axis combines the
+    per-expert partial outputs. That psum is the same traffic as a dense TP
+    FFN's all-reduce — versus GSPMD's replicated-scatter fallback for the
+    naive dispatch, which all-gathers ~[E*C, D] buffers every layer
+    (measured 12.4 TB/device at 32k prefill)."""
+    tp_axis = pc.tp_axis
+    E = router_w.shape[1]
+    Ep = w_gate.shape[0]
+    tp = pc.tp
+    E_loc = Ep // tp
+    if not pc.dp_axes:
+        dp0 = None
+    elif len(pc.dp_axes) == 1:
+        dp0 = pc.dp_axes[0]
+    else:
+        dp0 = pc.dp_axes
+
+    def body(x, router_w, w_gate, w_up, w_down):
+        T_loc, D = x.shape
+        m = jax.lax.axis_index(tp_axis)
+        logits = (x @ router_w).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_w, top_i = jax.lax.top_k(probs, top_k)
+        top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+        frac_tokens = jnp.mean(jax.nn.one_hot(top_i[:, 0], E, dtype=jnp.float32), 0)
+        aux = E * jnp.sum(frac_tokens * jnp.mean(probs, axis=0))
+
+        TK = T_loc * top_k
+        eid = top_i.reshape(TK)
+        tok = jnp.repeat(jnp.arange(T_loc, dtype=jnp.int32), top_k)
+        wgt = top_w.reshape(TK)
+        mine = (eid >= m * E_loc) & (eid < (m + 1) * E_loc)
+        eloc = jnp.where(mine, eid - m * E_loc, E_loc)      # E_loc = drop bin
+        order = jnp.argsort(eloc, stable=True)
+        eid_s, tok_s, wgt_s = eloc[order], tok[order], wgt[order]
+        first = jnp.searchsorted(eid_s, jnp.arange(E_loc + 1, dtype=eid_s.dtype))
+        rank = jnp.arange(TK, dtype=jnp.int32) - first[jnp.minimum(eid_s, E_loc)].astype(jnp.int32)
+        C = int(round_up(max(8, math.ceil(T_loc * top_k / E * capacity_factor)), 8))
+        keep = (eid_s < E_loc) & (rank < C)
+        dest = jnp.where(keep, eid_s.astype(jnp.int32) * C + rank, E_loc * C)
+        src = x[tok_s] * keep[:, None].astype(x.dtype)
+        buf = jnp.zeros((E_loc * C + 1, D), x.dtype).at[dest].set(src)[:-1]
+        grouped = buf.reshape(E_loc, C, D)
+        f = L.act_fn(act)
+        h = f(jnp.einsum("ecd,edf->ecf", grouped, w_gate)) * jnp.einsum(
+            "ecd,edf->ecf", grouped, w_up)
+        out_g = jnp.einsum("ecf,efd->ecd", h, w_down).reshape(E_loc * C, D)
+        gathered = jnp.where(keep[:, None], out_g[jnp.minimum(dest, E_loc * C - 1)], 0)
+        out = jnp.zeros((T_loc, D), x.dtype).at[tok_s].add(
+            gathered * wgt_s[:, None].astype(x.dtype))
+        out = jax.lax.psum(out, tp_axis)                    # combine experts
+        aux = jax.lax.pmean(aux, tp_axis)
+        return out, aux
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(dp0, None), P(None, None), P(tp_axis, None, None),
+                  P(tp_axis, None, None), P(tp_axis, None, None)),
+        out_specs=(P(dp0, None), P()),
+        check_rep=False,
+    )(x, router_w, w_gate, w_up, w_down)
+
+
+class MoETransformer(DenseTransformer):
+    """Dense transformer with the MLP swapped for grouped-capacity MoE."""
+
+    mesh = None   # set by the launcher for the shard_map dispatch path
+
+    @property
+    def padded_experts(self) -> int:
+        e = self.cfg.num_experts
+        return round_up(e, self.pc.tp) if self.pc.tp > 1 else e
+
+    def _mlp_templates(self):
+        cfg = self.cfg
+        G, Pg, D, F = self.n_groups, self.group, cfg.d_model, cfg.d_ff
+        E, Ep = cfg.num_experts, self.padded_experts
+
+        def init_expert(fan_in):
+            def f(key):  # pad experts (index >= E) carry zero weights
+                shape = (G, Pg, Ep, D, F) if fan_in == D else (G, Pg, Ep, F, D)
+                w = jax.random.normal(key, shape, jnp.float32) / math.sqrt(fan_in)
+                mask = (jnp.arange(Ep) < E).astype(jnp.float32)
+                return w * mask[None, None, :, None, None]
+            return f
+
+        return {
+            "router": t((G, Pg, D, E), (None, None, None, None), fan_in=D),
+            "w_gate": t((G, Pg, Ep, D, F), (None, None, "expert", None, None),
+                        custom=init_expert(D)),
+            "w_up": t((G, Pg, Ep, D, F), (None, None, "expert", None, None),
+                      custom=init_expert(D)),
+            "w_down": t((G, Pg, Ep, F, D), (None, None, "expert", None, None),
+                        custom=init_expert(F)),
+        }
+
+    def _aux_weight(self) -> float:
+        return 0.01
+
+    def _mlp(self, pp, p: int, x):
+        cfg = self.cfg
+        shape = x.shape
+        x2d = x.reshape(-1, cfg.d_model)
+        if self.pc.tp_axis is not None and self.mesh is not None:
+            # local expert-parallel dispatch, zero token exchange (§Perf B)
+            x2d = jax.lax.with_sharding_constraint(x2d, self.pc.spec("batch", None))
+            out, aux = moe_dispatch_local_ep(
+                x2d, pp["router"][p], pp["w_gate"][p], pp["w_up"][p],
+                pp["w_down"][p], top_k=cfg.num_experts_per_tok,
+                capacity_factor=cfg.moe_capacity_factor, act=cfg.act,
+                mesh=self.mesh, pc=self.pc)
+            return out.reshape(shape), aux
+        constrain = None
+        if self.pc.tp_axis is not None:
+            x2d = jax.lax.with_sharding_constraint(x2d, self.pc.spec("batch", None))
+            constrain = lambda g: jax.lax.with_sharding_constraint(
+                g, self.pc.spec("expert", None, None))
+        out, aux = moe_dispatch(
+            x2d, pp["router"][p], pp["w_gate"][p], pp["w_up"][p], pp["w_down"][p],
+            top_k=cfg.num_experts_per_tok, capacity_factor=cfg.moe_capacity_factor,
+            act=cfg.act, constrain=constrain)
+        return out.reshape(shape), aux

@@ -1,0 +1,74 @@
+"""Parameter templates: one declaration drives abstract shapes, shardings, init.
+
+A template tree mirrors the parameter pytree; leaves are ``ParamTemplate``.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import ParallelConfig
+
+
+@dataclass(frozen=True)
+class ParamTemplate:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | custom
+    fan_in: Optional[int] = None  # overrides scale for 'normal'
+    custom: Optional[Callable] = None  # key -> np/jnp array (used for packed weights)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def t(shape, logical, init="normal", fan_in=None, custom=None) -> ParamTemplate:
+    return ParamTemplate(tuple(shape), tuple(logical), init, fan_in, custom)
+
+
+def abstract_params(templates, dtype=jnp.bfloat16):
+    return jax.tree.map(
+        lambda tm: jax.ShapeDtypeStruct(tm.shape, dtype),
+        templates, is_leaf=lambda x: isinstance(x, ParamTemplate))
+
+
+def param_specs(templates, pc: ParallelConfig):
+    return jax.tree.map(
+        lambda tm: pc.spec(*tm.logical),
+        templates, is_leaf=lambda x: isinstance(x, ParamTemplate))
+
+
+def param_shardings(templates, pc: ParallelConfig, mesh):
+    return jax.tree.map(
+        lambda tm: NamedSharding(mesh, pc.spec(*tm.logical)),
+        templates, is_leaf=lambda x: isinstance(x, ParamTemplate))
+
+
+def init_params(templates, key, dtype=jnp.bfloat16):
+    leaves, treedef = jax.tree.flatten(
+        templates, is_leaf=lambda x: isinstance(x, ParamTemplate))
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for tm, k in zip(leaves, keys):
+        if tm.custom is not None:
+            out.append(jnp.asarray(tm.custom(k), dtype=dtype))
+        elif tm.init == "zeros":
+            out.append(jnp.zeros(tm.shape, dtype))
+        elif tm.init == "ones":
+            out.append(jnp.ones(tm.shape, dtype))
+        else:
+            fan_in = tm.fan_in if tm.fan_in is not None else (tm.shape[-2] if len(tm.shape) >= 2 else tm.shape[-1])
+            std = 1.0 / math.sqrt(max(1, fan_in))
+            out.append((jax.random.normal(k, tm.shape, jnp.float32) * std).astype(dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def count_params(templates) -> int:
+    leaves = jax.tree.leaves(templates, is_leaf=lambda x: isinstance(x, ParamTemplate))
+    return int(sum(np.prod(tm.shape) for tm in leaves))

@@ -1,0 +1,30 @@
+"""Model registry: arch family -> model class; ``build_model`` is the single
+entry point used by the engine, launchers, tests, and benchmarks."""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ParallelConfig
+from repro.models.hymba import HymbaModel
+from repro.models.moe import MoETransformer
+from repro.models.rwkv6 import RWKV6Model
+from repro.models.transformer import DenseTransformer
+from repro.models.whisper import WhisperModel
+
+_FAMILIES = {
+    "dense": DenseTransformer,
+    "vlm": DenseTransformer,     # LM backbone; patch embeddings via extra_embeds
+    "moe": MoETransformer,
+    "hybrid": HymbaModel,
+    "ssm": RWKV6Model,
+    "audio": WhisperModel,
+}
+
+
+def build_model(cfg: ModelConfig, pc: Optional[ParallelConfig] = None):
+    try:
+        cls = _FAMILIES[cfg.family]
+    except KeyError:
+        raise KeyError(f"unknown family {cfg.family!r} for arch {cfg.name!r}")
+    return cls(cfg, pc)

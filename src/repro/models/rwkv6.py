@@ -1,0 +1,358 @@
+"""RWKV6 "Finch": attention-free token mixing with data-dependent per-channel
+decay. Implements the chunked-recurrence form — intra-chunk contributions via
+masked decay-weighted products, inter-chunk via a [K, V] state per head — so
+prefill/train cost is O(S · c · K) per head with bounded exponents (all
+exponentials have non-positive arguments; see DESIGN.md §3).
+
+The chunk loop is a *python* (unrolled) loop so every FLOP is visible to HLO
+cost analysis; only the layer stack uses lax.scan.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ParallelConfig
+from repro.models import layers as L
+from repro.models.param_utils import (
+    abstract_params, count_params, init_params, param_shardings, param_specs, t,
+)
+
+MIX_NAMES = ("w", "k", "v", "r", "g")
+
+
+def _chunk_size(seq: int) -> int:
+    # <=128 unrolled chunk steps; chunks of at least 16 tokens
+    c = max(16, seq // 128)
+    while seq % c:
+        c //= 2
+    return max(c, 1)
+
+
+def wkv6_chunk(
+    r: jax.Array,      # [B, c, H, K]
+    k: jax.Array,      # [B, c, H, K]
+    v: jax.Array,      # [B, c, H, V]
+    logw: jax.Array,   # [B, c, H, K]  log decay, <= 0
+    u: jax.Array,      # [H, K] bonus
+    state: jax.Array,  # [B, H, K, V]
+) -> Tuple[jax.Array, jax.Array]:
+    """One chunk of the WKV6 recurrence. Returns (out [B,c,H,V], new_state)."""
+    f32 = jnp.float32
+    r, k, v, logw = (x.astype(f32) for x in (r, k, v, logw))
+    state = state.astype(f32)
+    c = r.shape[1]
+    ldi = jnp.cumsum(logw, axis=1)            # inclusive decay log-sums
+    lde = ldi - logw                          # exclusive
+    # inter-chunk: state contribution
+    o_inter = jnp.einsum("bthk,bhkv->bthv", r * jnp.exp(lde), state)
+    # intra-chunk: A[t,j] = sum_k r[t,k] k[j,k] exp(lde[t]-ldi[j]),  j < t
+    diff = lde[:, :, None] - ldi[:, None, :]  # [B, t, j, H, K]
+    tri = (jnp.arange(c)[:, None] > jnp.arange(c)[None, :])[None, :, :, None, None]
+    w_decay = jnp.where(tri, jnp.exp(jnp.minimum(diff, 0.0)), 0.0)
+    A = jnp.einsum("bthk,bjhk,btjhk->bthj", r, k, w_decay)
+    diag = jnp.einsum("bthk,bthk,hk->bth", r, k, u)
+    A = A + jnp.eye(c)[None, :, None, :] * diag[..., None]
+    o = o_inter + jnp.einsum("bthj,bjhv->bthv", A, v)
+    # state update: S' = diag(d_total) S + sum_j (k_j * exp(ldi[-1]-ldi[j])) v_j^T
+    d_total = jnp.exp(ldi[:, -1])             # [B, H, K]
+    k_scaled = k * jnp.exp(ldi[:, -1][:, None] - ldi)
+    new_state = state * d_total[..., None] + jnp.einsum("bjhk,bjhv->bhkv", k_scaled, v)
+    return o, new_state
+
+
+def wkv6_decode(r, k, v, logw, u, state):
+    """Single-token WKV6 step. r/k/v/logw: [B, H, K]; state: [B, H, K, V]."""
+    f32 = jnp.float32
+    r, k, v, logw = (x.astype(f32) for x in (r, k, v, logw))
+    state = state.astype(f32)
+    kv = k[..., :, None] * v[..., None, :]            # [B, H, K, V]
+    out = jnp.einsum("bhk,bhkv->bhv", r, state + u[None, :, :, None] * kv)
+    new_state = state * jnp.exp(logw)[..., None] + kv
+    return out, new_state
+
+
+class RWKV6Model:
+    def __init__(self, cfg: ModelConfig, pc: Optional[ParallelConfig] = None):
+        self.cfg = cfg
+        self.pc = pc or ParallelConfig.single_device()
+        assert cfg.d_model % cfg.rwkv_head_dim == 0
+        self.n_heads = cfg.d_model // cfg.rwkv_head_dim
+        self.n_groups = cfg.num_layers
+        self.group = 1
+
+    # ---------------------------------------------------------------- params
+    def templates(self):
+        cfg = self.cfg
+        Lyr, D, F = cfg.num_layers, cfg.d_model, cfg.d_ff
+        mlo, dlo = cfg.rwkv_mix_lora, cfg.rwkv_decay_lora
+        blocks = {
+            "ln1_s": t((Lyr, D), (None, None), "ones"),
+            "ln1_b": t((Lyr, D), (None, None), "zeros"),
+            "ln2_s": t((Lyr, D), (None, None), "ones"),
+            "ln2_b": t((Lyr, D), (None, None), "zeros"),
+            # time-mix ddlerp
+            "mu_base": t((Lyr, D), (None, None), "zeros"),
+            "mu": t((Lyr, 5, D), (None, None, None), "zeros"),
+            "lora_a": t((Lyr, D, 5 * mlo), (None, None, None), fan_in=D),
+            "lora_b": t((Lyr, 5, mlo, D), (None, None, None, None), "zeros"),
+            # projections
+            "w_r": t((Lyr, D, D), (None, None, "ff"), fan_in=D),
+            "w_k": t((Lyr, D, D), (None, None, "ff"), fan_in=D),
+            "w_v": t((Lyr, D, D), (None, None, "ff"), fan_in=D),
+            "w_g": t((Lyr, D, D), (None, None, "ff"), fan_in=D),
+            "w_o": t((Lyr, D, D), (None, "ff", None), fan_in=D),
+            # decay
+            "w0": t((Lyr, D), (None, None), "zeros"),
+            "wd1": t((Lyr, D, dlo), (None, None, None), fan_in=D),
+            "wd2": t((Lyr, dlo, D), (None, None, None), "zeros"),
+            "bonus": t((Lyr, D), (None, None), "zeros"),
+            "gn": t((Lyr, D), (None, None), "ones"),
+            # channel-mix
+            "mu_ck": t((Lyr, D), (None, None), "zeros"),
+            "mu_cr": t((Lyr, D), (None, None), "zeros"),
+            "wc_k": t((Lyr, D, F), (None, None, "ff"), fan_in=D),
+            "wc_v": t((Lyr, F, D), (None, "ff", None), fan_in=F),
+            "wc_r": t((Lyr, D, D), (None, None, "ff"), fan_in=D),
+        }
+        Vp = cfg.padded_vocab(self.pc.tp)
+        return {
+            "embed": t((Vp, D), ("vocab", None), fan_in=D),
+            "ln0_s": t((D,), (None,), "ones"),
+            "ln0_b": t((D,), (None,), "zeros"),
+            "blocks": blocks,
+            "final_norm": t((D,), (None,), "zeros"),
+            "lm_head": t((D, Vp), (None, "vocab"), fan_in=D),
+        }
+
+    def abstract_params(self):
+        return abstract_params(self.templates(), self._dtype)
+
+    def init_params(self, key):
+        return init_params(self.templates(), key, self._dtype)
+
+    def param_specs(self):
+        return param_specs(self.templates(), self.pc)
+
+    def param_shardings(self, mesh):
+        return param_shardings(self.templates(), self.pc, mesh)
+
+    def param_count(self):
+        return count_params(self.templates())
+
+    @property
+    def _dtype(self):
+        return jnp.dtype(self.cfg.dtype)
+
+    # ---------------------------------------------------------------- cache
+    def cache_struct(self, batch: int, max_len: int = 0):
+        cfg = self.cfg
+        H, K = self.n_heads, cfg.rwkv_head_dim
+        Lyr = cfg.num_layers
+        return {
+            "state": jax.ShapeDtypeStruct((Lyr, batch, H, K, K), jnp.float32),
+            "tm_shift": jax.ShapeDtypeStruct((Lyr, batch, cfg.d_model), self._dtype),
+            "cm_shift": jax.ShapeDtypeStruct((Lyr, batch, cfg.d_model), self._dtype),
+        }
+
+    def init_cache(self, batch: int, max_len: int = 0):
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.cache_struct(batch, max_len))
+
+    def cache_specs(self):
+        return {
+            "state": self.pc.spec(None, "batch", "heads", None, None),
+            "tm_shift": self.pc.spec(None, "batch", None),
+            "cm_shift": self.pc.spec(None, "batch", None),
+        }
+
+    # ------------------------------------------------------------- internals
+    def _constrain(self, x, *logical):
+        if self.pc.dp_axes or self.pc.tp_axis:
+            return jax.lax.with_sharding_constraint(x, self.pc.spec(*logical))
+        return x
+
+    def _ddlerp(self, pp, x, x_prev):
+        """Data-dependent token-shift interpolation -> dict of mixed inputs."""
+        dx = x_prev - x
+        base = x + dx * pp["mu_base"]
+        lora = jnp.tanh(base @ pp["lora_a"])
+        mlo = self.cfg.rwkv_mix_lora
+        mixed = {}
+        for i, name in enumerate(MIX_NAMES):
+            delta = lora[..., i * mlo:(i + 1) * mlo] @ pp["lora_b"][i]
+            mixed[name] = x + dx * (pp["mu"][i] + delta)
+        return mixed
+
+    def _decay(self, pp, mix_w):
+        dw = pp["w0"].astype(jnp.float32) + (
+            jnp.tanh(mix_w @ pp["wd1"]) @ pp["wd2"]).astype(jnp.float32)
+        # log decay in [-~20, -1e-9]: w = exp(-exp(dw))
+        return -jnp.exp(jnp.clip(dw, -20.0, 10.0))
+
+    def _heads(self, x):
+        H, K = self.n_heads, self.cfg.rwkv_head_dim
+        return x.reshape(x.shape[:-1] + (H, K))
+
+    def _time_mix_seq(self, pp, x, boundary, valid=None):
+        """x: [B, S, D] post-ln1; boundary: [B, D] last token of previous
+        context; valid: [B, S] mask — pad tokens leave the WKV state untouched
+        (k := 0 kills their contribution, log w := 0 freezes decay)."""
+        cfg = self.cfg
+        B, S, D = x.shape
+        x_prev = jnp.concatenate([boundary[:, None], x[:, :-1]], axis=1)
+        m = self._ddlerp(pp, x, x_prev)
+        r = self._heads(m["r"] @ pp["w_r"])
+        k = self._heads(m["k"] @ pp["w_k"])
+        v = self._heads(m["v"] @ pp["w_v"])
+        g = m["g"] @ pp["w_g"]
+        logw = self._heads(self._decay(pp, m["w"]))
+        if valid is not None:
+            vm = valid[:, :, None, None]
+            k = k * vm.astype(k.dtype)
+            logw = logw * vm
+        u = self._heads(pp["bonus"].astype(jnp.float32))
+        c = _chunk_size(S)
+        state = jnp.zeros((B, self.n_heads, cfg.rwkv_head_dim, cfg.rwkv_head_dim),
+                          jnp.float32)
+        outs = []
+        for i in range(S // c):
+            sl = slice(i * c, (i + 1) * c)
+            o, state = wkv6_chunk(r[:, sl], k[:, sl], v[:, sl], logw[:, sl], u, state)
+            outs.append(o)
+        o = jnp.concatenate(outs, axis=1).reshape(B, S, D)
+        o = L.groupnorm_heads(self._heads(o), jnp.ones((), jnp.float32)).reshape(B, S, D)
+        o = (o * pp["gn"].astype(jnp.float32)).astype(self._dtype)
+        o = o * jax.nn.silu(g.astype(jnp.float32)).astype(self._dtype)
+        return o @ pp["w_o"], state, x[:, -1]
+
+    def _channel_mix_seq(self, pp, x, boundary):
+        x_prev = jnp.concatenate([boundary[:, None], x[:, :-1]], axis=1)
+        mk = x + (x_prev - x) * pp["mu_ck"]
+        mr = x + (x_prev - x) * pp["mu_cr"]
+        kk = jnp.square(jax.nn.relu(mk @ pp["wc_k"]))
+        return jax.nn.sigmoid(mr @ pp["wc_r"]) * (kk @ pp["wc_v"]), x[:, -1]
+
+    def _block_seq(self, carry, pp, collect: bool, seq_lens=None):
+        x, aux = carry
+        cfg = self.cfg
+        valid = None
+        if seq_lens is not None:
+            valid = (jnp.arange(x.shape[1])[None, :] < seq_lens[:, None]).astype(jnp.float32)
+        h = L.layernorm(x, pp["ln1_s"], pp["ln1_b"], cfg.norm_eps)
+        tm, state, tm_b = self._time_mix_seq(pp, h, jnp.zeros_like(h[:, 0]), valid)
+        x = x + tm
+        h2 = L.layernorm(x, pp["ln2_s"], pp["ln2_b"], cfg.norm_eps)
+        cm, cm_b = self._channel_mix_seq(pp, h2, jnp.zeros_like(h2[:, 0]))
+        x = x + cm
+        x = self._constrain(x, "batch", None, None)
+        if collect:
+            if seq_lens is not None:  # token-shift boundaries at the last *valid* token
+                idx = (seq_lens - 1)[:, None, None].astype(jnp.int32)
+                tm_b = jnp.take_along_axis(h, idx, axis=1)[:, 0]
+                cm_b = jnp.take_along_axis(h2, idx, axis=1)[:, 0]
+            caches = {"state": state, "tm_shift": tm_b, "cm_shift": cm_b}
+        else:
+            caches = {}
+        return (x, aux), caches
+
+    # ------------------------------------------------------------- public steps
+    def forward_hidden(self, params, embeds, *, collect_cache=False, remat=False,
+                       seq_lens=None):
+        x = L.layernorm(embeds, params["ln0_s"], params["ln0_b"], self.cfg.norm_eps)
+        x = self._constrain(x, "batch", None, None)
+        body = partial(self._block_seq, collect=collect_cache, seq_lens=seq_lens)
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        (x, aux), caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                        params["blocks"])
+        x = L.rmsnorm(x, params["final_norm"], self.cfg.norm_eps)
+        return x, aux, caches
+
+    def embed_tokens(self, params, tokens):
+        return jnp.take(params["embed"], tokens, axis=0).astype(self._dtype)
+
+    def logits(self, params, hidden):
+        lg = hidden @ params["lm_head"]
+        V, Vp = self.cfg.vocab_size, lg.shape[-1]
+        if Vp > V:
+            lg = jnp.where(jnp.arange(Vp) < V, lg, -1e30)
+        return lg
+
+    def train_loss(self, params, batch, *, remat=True):
+        embeds = self.embed_tokens(params, batch["tokens"])
+        hidden, _, _ = self.forward_hidden(params, embeds, remat=remat)
+        total, count = L.chunked_softmax_xent(hidden, params["lm_head"], batch["labels"],
+                                              vocab_valid=self.cfg.vocab_size)
+        loss = total / jnp.maximum(count, 1.0)
+        return loss, {"xent": loss}
+
+    def prefill(self, params, tokens, *, seq_lens=None, max_len: int = 0,
+                extra_embeds=None):
+        embeds = self.embed_tokens(params, tokens)
+        hidden, _, caches = self.forward_hidden(params, embeds, collect_cache=True,
+                                                seq_lens=seq_lens)
+        if seq_lens is not None:
+            last = jnp.take_along_axis(
+                hidden, (seq_lens - 1)[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+        else:
+            last = hidden[:, -1]
+        return self.logits(params, last), caches
+
+    def _block_decode(self, x, pp, cache):
+        cfg = self.cfg
+        new = dict(cache)
+        h = L.layernorm(x, pp["ln1_s"], pp["ln1_b"], cfg.norm_eps)
+        m = self._ddlerp(pp, h, cache["tm_shift"])
+        r = self._heads(m["r"] @ pp["w_r"])
+        k = self._heads(m["k"] @ pp["w_k"])
+        v = self._heads(m["v"] @ pp["w_v"])
+        g = m["g"] @ pp["w_g"]
+        logw = self._heads(self._decay(pp, m["w"]))
+        u = self._heads(pp["bonus"].astype(jnp.float32))
+        o, new_state = wkv6_decode(r, k, v, logw, u, cache["state"])
+        o = L.groupnorm_heads(o, jnp.ones((), jnp.float32)).reshape(x.shape)
+        o = (o * pp["gn"].astype(jnp.float32)).astype(self._dtype)
+        o = o * jax.nn.silu(g.astype(jnp.float32)).astype(self._dtype)
+        x = x + o @ pp["w_o"]
+        new["state"], new["tm_shift"] = new_state, h
+
+        h2 = L.layernorm(x, pp["ln2_s"], pp["ln2_b"], cfg.norm_eps)
+        mk = h2 + (cache["cm_shift"] - h2) * pp["mu_ck"]
+        mr = h2 + (cache["cm_shift"] - h2) * pp["mu_cr"]
+        kk = jnp.square(jax.nn.relu(mk @ pp["wc_k"]))
+        x = x + jax.nn.sigmoid(mr @ pp["wc_r"]) * (kk @ pp["wc_v"])
+        new["cm_shift"] = h2
+        x = self._constrain(x, "batch", None)
+        return x, new
+
+    def decode_step(self, params, cache, tokens, positions):
+        """Unrolled layer loop: in-place per-layer state updates on the
+        donated cache (see DenseTransformer.decode_step)."""
+        x = self.embed_tokens(params, tokens)
+        x = L.layernorm(x, params["ln0_s"], params["ln0_b"], self.cfg.norm_eps)
+        cache = dict(cache)
+        for g in range(self.cfg.num_layers):
+            pp = jax.tree.map(lambda a: a[g], params["blocks"])
+            cache_g = {k: cache[k][g] for k in ("state", "tm_shift", "cm_shift")}
+            x, new_g = self._block_decode(x, pp, cache_g)
+            for k in ("state", "tm_shift", "cm_shift"):
+                cache[k] = cache[k].at[g].set(new_g[k])
+        x = L.rmsnorm(x, params["final_norm"], self.cfg.norm_eps)
+        return self.logits(params, x), cache
+
+    def with_layers(self, num_layers: int) -> "RWKV6Model":
+        return type(self)(self.cfg.replace(num_layers=num_layers), self.pc)
+
+    @property
+    def scan_trip_count(self) -> int:
+        return self.n_groups
+
+    @property
+    def layers_per_scan_step(self) -> int:
+        return 1

@@ -1,0 +1,307 @@
+"""Whisper-style encoder-decoder backbone. The conv/mel frontend is a stub per
+the assignment: the model consumes precomputed frame embeddings [B, S, D]
+(sinusoidal positions added here). Decoder: causal self-attention (cached) +
+cross-attention against per-layer encoder KV (computed once at prefill).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ParallelConfig, gqa_layout
+from repro.models import layers as L
+from repro.models.param_utils import (
+    abstract_params, count_params, init_params, param_shardings, param_specs, t,
+)
+
+
+def sinusoids(length: int, channels: int) -> jnp.ndarray:
+    log_timescale = math.log(10_000) / (channels // 2 - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(channels // 2, dtype=jnp.float32))
+    scaled = jnp.arange(length, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(scaled), jnp.cos(scaled)], axis=1)
+
+
+class WhisperModel:
+    def __init__(self, cfg: ModelConfig, pc: Optional[ParallelConfig] = None):
+        self.cfg = cfg
+        self.pc = pc or ParallelConfig.single_device()
+        self.layout = gqa_layout(cfg.num_heads, cfg.num_kv_heads, self.pc.tp)
+        self.n_groups = cfg.num_layers
+        self.group = 1
+
+    @property
+    def _dtype(self):
+        return jnp.dtype(self.cfg.dtype)
+
+    # ---------------------------------------------------------------- params
+    def _attn_templates(self, Lyr: int, cross: bool = False):
+        cfg, lay = self.cfg, self.layout
+        D, KVs, Qp, hd = cfg.d_model, lay.kv_slots, lay.q_per_slot, cfg.head_dim
+        qmask = jnp.asarray(lay.q_array() >= 0)
+        dup = jnp.asarray(lay.dup_array())
+
+        def init_wq(key):
+            w = jax.random.normal(key, (Lyr, D, KVs, Qp, hd), jnp.float32) / math.sqrt(D)
+            return w * qmask[None, None, :, :, None]
+
+        def init_wo(key):
+            w = jax.random.normal(key, (Lyr, KVs, Qp, hd, D), jnp.float32) \
+                / math.sqrt(lay.num_heads * hd)
+            return w * qmask[None, :, :, None, None]
+
+        def init_kv(key):
+            w = jax.random.normal(key, (Lyr, D, lay.num_kv_heads, hd),
+                                  jnp.float32) / math.sqrt(D)
+            return jnp.take(w, dup, axis=2)
+
+        return {
+            "wq": t((Lyr, D, KVs, Qp, hd), (None, None, "kv_heads", None, None),
+                    custom=init_wq),
+            "bq": t((Lyr, KVs, Qp, hd), (None, "kv_heads", None, None), "zeros"),
+            "wk": t((Lyr, D, KVs, hd), (None, None, "kv_heads", None), custom=init_kv),
+            "wv": t((Lyr, D, KVs, hd), (None, None, "kv_heads", None), custom=init_kv),
+            "bv": t((Lyr, KVs, hd), (None, "kv_heads", None), "zeros"),
+            "wo": t((Lyr, KVs, Qp, hd, D), (None, "kv_heads", None, None, None),
+                    custom=init_wo),
+            "bo": t((Lyr, D), (None, None), "zeros"),
+        }
+
+    def _mlp_templates(self, Lyr: int):
+        D, F = self.cfg.d_model, self.cfg.d_ff
+        return {
+            "w_in": t((Lyr, D, F), (None, None, "ff"), fan_in=D),
+            "b_in": t((Lyr, F), (None, "ff"), "zeros"),
+            "w_out": t((Lyr, F, D), (None, "ff", None), fan_in=F),
+            "b_out": t((Lyr, D), (None, None), "zeros"),
+        }
+
+    def templates(self):
+        cfg = self.cfg
+        Le, Ld, D = cfg.num_encoder_layers, cfg.num_layers, cfg.d_model
+        enc = {
+            "ln1_s": t((Le, D), (None, None), "ones"),
+            "ln1_b": t((Le, D), (None, None), "zeros"),
+            "ln2_s": t((Le, D), (None, None), "ones"),
+            "ln2_b": t((Le, D), (None, None), "zeros"),
+        }
+        enc.update({f"sa_{k}": v for k, v in self._attn_templates(Le).items()})
+        enc.update(self._mlp_templates(Le))
+        dec = {
+            "ln1_s": t((Ld, D), (None, None), "ones"),
+            "ln1_b": t((Ld, D), (None, None), "zeros"),
+            "ln2_s": t((Ld, D), (None, None), "ones"),
+            "ln2_b": t((Ld, D), (None, None), "zeros"),
+            "ln3_s": t((Ld, D), (None, None), "ones"),
+            "ln3_b": t((Ld, D), (None, None), "zeros"),
+        }
+        dec.update({f"sa_{k}": v for k, v in self._attn_templates(Ld).items()})
+        dec.update({f"xa_{k}": v for k, v in self._attn_templates(Ld).items()})
+        dec.update(self._mlp_templates(Ld))
+        return {
+            "embed": t((cfg.padded_vocab(self.pc.tp), D), ("vocab", None), fan_in=D),
+            "pos_dec": t((cfg.max_target_len, D), (None, None), fan_in=D),
+            "enc": enc,
+            "dec": dec,
+            "enc_norm_s": t((D,), (None,), "ones"),
+            "enc_norm_b": t((D,), (None,), "zeros"),
+            "dec_norm_s": t((D,), (None,), "ones"),
+            "dec_norm_b": t((D,), (None,), "zeros"),
+        }
+
+    def abstract_params(self):
+        return abstract_params(self.templates(), self._dtype)
+
+    def init_params(self, key):
+        return init_params(self.templates(), key, self._dtype)
+
+    def param_specs(self):
+        return param_specs(self.templates(), self.pc)
+
+    def param_shardings(self, mesh):
+        return param_shardings(self.templates(), self.pc, mesh)
+
+    def param_count(self):
+        return count_params(self.templates())
+
+    # ---------------------------------------------------------------- cache
+    def cache_struct(self, batch: int, max_len: int):
+        """max_len here is the *encoder* length; self cache uses max_target_len."""
+        cfg, lay = self.cfg, self.layout
+        hd = cfg.head_dim
+        Ld = cfg.num_layers
+        T = cfg.max_target_len
+        return {
+            "k_self": jax.ShapeDtypeStruct((Ld, batch, T, lay.kv_slots, hd), self._dtype),
+            "v_self": jax.ShapeDtypeStruct((Ld, batch, T, lay.kv_slots, hd), self._dtype),
+            "k_cross": jax.ShapeDtypeStruct((Ld, batch, max_len, lay.kv_slots, hd), self._dtype),
+            "v_cross": jax.ShapeDtypeStruct((Ld, batch, max_len, lay.kv_slots, hd), self._dtype),
+            "frame_lens": jax.ShapeDtypeStruct((batch,), jnp.int32),
+        }
+
+    def init_cache(self, batch: int, max_len: int):
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.cache_struct(batch, max_len))
+
+    def cache_specs(self):
+        kv = self.pc.spec(None, "batch", None, "kv_heads", None)
+        return {"k_self": kv, "v_self": kv, "k_cross": kv, "v_cross": kv,
+                "frame_lens": self.pc.spec("batch")}
+
+    # ---------------------------------------------------------------- blocks
+    def _constrain(self, x, *logical):
+        if self.pc.dp_axes or self.pc.tp_axis:
+            return jax.lax.with_sharding_constraint(x, self.pc.spec(*logical))
+        return x
+
+    def _qkv(self, pp, prefix, x):
+        q = jnp.einsum("...d,dgqh->...gqh", x, pp[f"{prefix}_wq"]) + pp[f"{prefix}_bq"]
+        k = jnp.einsum("...d,dgh->...gh", x, pp[f"{prefix}_wk"])
+        v = jnp.einsum("...d,dgh->...gh", x, pp[f"{prefix}_wv"]) + pp[f"{prefix}_bv"]
+        return q, k, v
+
+    def _proj_out(self, pp, prefix, o):
+        if o.ndim == 5:
+            return jnp.einsum("bsgqh,gqhd->bsd", o, pp[f"{prefix}_wo"]) + pp[f"{prefix}_bo"]
+        return jnp.einsum("bgqh,gqhd->bd", o, pp[f"{prefix}_wo"]) + pp[f"{prefix}_bo"]
+
+    def _enc_block(self, x, pp, frame_lens):
+        cfg = self.cfg
+        h = L.layernorm(x, pp["ln1_s"], pp["ln1_b"], cfg.norm_eps)
+        q, k, v = self._qkv(pp, "sa", h)
+        o = L.block_attention(q, k, v, causal=False, seq_lens=frame_lens)
+        x = x + self._proj_out(pp, "sa", o)
+        h = L.layernorm(x, pp["ln2_s"], pp["ln2_b"], cfg.norm_eps)
+        x = x + L.gelu_mlp(h, pp["w_in"], pp["b_in"], pp["w_out"], pp["b_out"])
+        return self._constrain(x, "batch", None, None), None
+
+    def encode(self, params, frames, frame_lens=None):
+        """frames: [B, S, D] stub frontend embeddings -> encoder hidden."""
+        S = frames.shape[1]
+        x = frames.astype(self._dtype) + sinusoids(S, self.cfg.d_model).astype(self._dtype)
+        x = self._constrain(x, "batch", None, None)
+        x, _ = jax.lax.scan(partial(self._enc_block, frame_lens=frame_lens),
+                            x, params["enc"])
+        return L.layernorm(x, params["enc_norm_s"], params["enc_norm_b"], self.cfg.norm_eps)
+
+    def _dec_block_seq(self, x, pp, enc_out, frame_lens, collect):
+        cfg = self.cfg
+        h = L.layernorm(x, pp["ln1_s"], pp["ln1_b"], cfg.norm_eps)
+        q, k, v = self._qkv(pp, "sa", h)
+        o = L.block_attention(q, k, v, causal=True)
+        x = x + self._proj_out(pp, "sa", o)
+        h = L.layernorm(x, pp["ln2_s"], pp["ln2_b"], cfg.norm_eps)
+        qx = jnp.einsum("...d,dgqh->...gqh", h, pp["xa_wq"]) + pp["xa_bq"]
+        kx = jnp.einsum("...d,dgh->...gh", enc_out, pp["xa_wk"])
+        vx = jnp.einsum("...d,dgh->...gh", enc_out, pp["xa_wv"]) + pp["xa_bv"]
+        ox = L.block_attention(qx, kx, vx, causal=False, seq_lens=frame_lens)
+        x = x + self._proj_out(pp, "xa", ox)
+        h = L.layernorm(x, pp["ln3_s"], pp["ln3_b"], cfg.norm_eps)
+        x = x + L.gelu_mlp(h, pp["w_in"], pp["b_in"], pp["w_out"], pp["b_out"])
+        x = self._constrain(x, "batch", None, None)
+        cache = (k, v, kx, vx) if collect else None
+        return x, cache
+
+    def _decode_tokens(self, params, tokens, enc_out, frame_lens, collect):
+        B, T = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0).astype(self._dtype)
+        x = x + params["pos_dec"][:T][None]
+        body = partial(self._dec_block_seq, enc_out=enc_out,
+                       frame_lens=frame_lens, collect=collect)
+        x, caches = jax.lax.scan(body, x, params["dec"])
+        x = L.layernorm(x, params["dec_norm_s"], params["dec_norm_b"], self.cfg.norm_eps)
+        return x, caches
+
+    def logits(self, params, hidden):
+        lg = jnp.einsum("...d,vd->...v", hidden, params["embed"])
+        V, Vp = self.cfg.vocab_size, lg.shape[-1]
+        if Vp > V:
+            lg = jnp.where(jnp.arange(Vp) < V, lg, -1e30)
+        return lg
+
+    # ---------------------------------------------------------------- steps
+    def train_loss(self, params, batch, *, remat=True):
+        """batch: {'frames': [B,S,D], 'tokens': [B,T], 'labels': [B,T]}."""
+        enc_out = self.encode(params, batch["frames"], batch.get("frame_lens"))
+        hidden, _ = self._decode_tokens(params, batch["tokens"], enc_out,
+                                        batch.get("frame_lens"), collect=False)
+        total, count = L.chunked_softmax_xent(
+            hidden, params["embed"].T, batch["labels"], num_chunks=4,
+            vocab_valid=self.cfg.vocab_size)
+        loss = total / jnp.maximum(count, 1.0)
+        return loss, {"xent": loss}
+
+    def prefill(self, params, tokens, *, frames=None, seq_lens=None, max_len: int = 0,
+                extra_embeds=None):
+        """tokens: decoder prompt [B, Tp]; frames/extra_embeds: [B, S, D]."""
+        frames = frames if frames is not None else extra_embeds
+        B, Tp = tokens.shape
+        enc_out = self.encode(params, frames, seq_lens)
+        hidden, caches = self._decode_tokens(params, tokens, enc_out, seq_lens,
+                                             collect=True)
+        k_self, v_self, k_cross, v_cross = caches
+        T = self.cfg.max_target_len
+        pad = ((0, 0), (0, 0), (0, T - Tp), (0, 0), (0, 0))
+        cache = {
+            "k_self": jnp.pad(k_self, pad), "v_self": jnp.pad(v_self, pad),
+            "k_cross": k_cross, "v_cross": v_cross,
+            "frame_lens": seq_lens if seq_lens is not None
+            else jnp.full((B,), frames.shape[1], jnp.int32),
+        }
+        return self.logits(params, hidden[:, -1]), cache
+
+    def _dec_block_step(self, x, xs, positions):
+        pp, cache = xs
+        cfg = self.cfg
+        new = dict(cache)
+        h = L.layernorm(x, pp["ln1_s"], pp["ln1_b"], cfg.norm_eps)
+        q, k, v = self._qkv(pp, "sa", h)
+        kc = L.cache_write(new["k_self"], k, positions)
+        vc = L.cache_write(new["v_self"], v, positions)
+        new["k_self"], new["v_self"] = kc, vc
+        o = L.decode_attention(q, kc, vc, positions)
+        x = x + self._proj_out(pp, "sa", o)
+        h = L.layernorm(x, pp["ln2_s"], pp["ln2_b"], cfg.norm_eps)
+        qx = jnp.einsum("bd,dgqh->bgqh", h, pp["xa_wq"]) + pp["xa_bq"]
+        ox = L.decode_attention(qx, new["k_cross"], new["v_cross"],
+                                cache["frame_lens"] - 1)
+        x = x + self._proj_out(pp, "xa", ox)
+        h = L.layernorm(x, pp["ln3_s"], pp["ln3_b"], cfg.norm_eps)
+        x = x + L.gelu_mlp(h, pp["w_in"], pp["b_in"], pp["w_out"], pp["b_out"])
+        x = self._constrain(x, "batch", None)
+        return x, new
+
+    def decode_step(self, params, cache, tokens, positions):
+        """tokens/positions: [B] — positions index the *decoder* sequence."""
+        x = jnp.take(params["embed"], tokens, axis=0).astype(self._dtype)
+        x = x + jnp.take(params["pos_dec"], jnp.minimum(
+            positions, self.cfg.max_target_len - 1), axis=0)
+        frame_lens = cache["frame_lens"]
+        cache = dict(cache)
+        # unrolled layer loop: in-place per-layer KV writes on the donated cache
+        for g in range(self.cfg.num_layers):
+            pp = jax.tree.map(lambda a: a[g], params["dec"])
+            cl = {k: cache[k][g] for k in ("k_self", "v_self", "k_cross", "v_cross")}
+            cl["frame_lens"] = frame_lens
+            x, new = self._dec_block_step(x, (pp, cl), positions)
+            for k in ("k_self", "v_self"):
+                cache[k] = cache[k].at[g].set(new[k])
+        x = L.layernorm(x, params["dec_norm_s"], params["dec_norm_b"], self.cfg.norm_eps)
+        return self.logits(params, x), cache
+
+    def with_layers(self, num_layers: int) -> "WhisperModel":
+        return type(self)(self.cfg.replace(
+            num_layers=num_layers, num_encoder_layers=num_layers), self.pc)
+
+    @property
+    def scan_trip_count(self) -> int:
+        return self.n_groups
+
+    @property
+    def layers_per_scan_step(self) -> int:
+        return 1

@@ -1,0 +1,111 @@
+"""AdamW with fp32 master weights and ZeRO-1 optimizer-state sharding.
+
+Optimizer state (m, v, master) is sharded over the data-parallel axes on the
+first free (unsharded, divisible) dimension of each tensor, on top of the
+parameter's tensor-parallel sharding — GSPMD then lowers the update into
+reduce-scatter(grads) -> local update -> all-gather(params), the standard
+ZeRO-1 schedule.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import ParallelConfig
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def init_opt_state(params):
+    f32 = lambda t: t.astype(jnp.float32)
+    return {
+        "m": jax.tree.map(lambda t: jnp.zeros(t.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda t: jnp.zeros(t.shape, jnp.float32), params),
+        "master": jax.tree.map(f32, params),
+        "step": jnp.zeros((), jnp.int32),
+        "err": None,  # gradient-compression error feedback (enabled on demand)
+    }
+
+
+def abstract_opt_state(abstract_params):
+    f32 = lambda t: jax.ShapeDtypeStruct(t.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(f32, abstract_params),
+        "v": jax.tree.map(f32, abstract_params),
+        "master": jax.tree.map(f32, abstract_params),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+        "err": None,
+    }
+
+
+def zero1_spec(spec: P, shape: Tuple[int, ...], pc: ParallelConfig) -> P:
+    """Add DP sharding on the first free divisible dim of a param spec."""
+    if not pc.dp_axes or pc.dp <= 1:
+        return spec
+    used = set()
+    for e in spec:
+        for a in (e if isinstance(e, (tuple, list)) else (e,)):
+            used.add(a)
+    if any(a in used for a in pc.dp_axes):
+        return spec   # already DP-sharded (e.g. FSDP params)
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (s, dim) in enumerate(zip(entries, shape)):
+        if s is None and dim % pc.dp == 0 and dim >= pc.dp:
+            entries[i] = pc.dp_axes if len(pc.dp_axes) > 1 else pc.dp_axes[0]
+            return P(*entries)
+    return spec  # nothing shardable: stay param-sharded (small tensor)
+
+
+def opt_state_specs(param_specs, abstract_params, pc: ParallelConfig):
+    zp = jax.tree.map(
+        lambda sp, t: zero1_spec(sp, t.shape, pc), param_specs, abstract_params)
+    return {"m": zp, "v": zp, "master": zp, "step": P(), "err": None}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig):
+    """One AdamW step on fp32 masters; returns (bf16 params, new state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / (1 - cfg.b1 ** step.astype(jnp.float32))
+        vhat = v / (1 - cfg.b2 ** step.astype(jnp.float32))
+        new_master = master - cfg.lr * (
+            mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * master)
+        return m, v, new_master
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_w = treedef.flatten_up_to(state["master"])
+    out = [upd(g, m, v, w) for g, m, v, w in zip(flat_g, flat_m, flat_v, flat_w)]
+    new_m = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_w = jax.tree.unflatten(treedef, [o[2] for o in out])
+    dtype = jax.tree.leaves(params)[0].dtype
+    new_params = jax.tree.map(lambda w: w.astype(dtype), new_w)
+    new_state = {"m": new_m, "v": new_v, "master": new_w, "step": step,
+                 "err": state.get("err")}
+    return new_params, new_state, {"grad_norm": gnorm}

@@ -1,0 +1,73 @@
+"""Workload construction: Table 4 statistics, Poisson arrivals, template
+rendering, tokenizer determinism."""
+import numpy as np
+import pytest
+
+from repro.data.datasets import ALL_DATASETS, DATASET_STATS, make_dataset
+from repro.data.templates import OUTPUT_LIMITS
+from repro.data.trace import TraceConfig, build_trace
+from repro.engine.tokenizer import HashTokenizer
+
+
+@pytest.mark.parametrize("name", ALL_DATASETS)
+def test_dataset_token_stats_match_table4(name):
+    ds = make_dataset(name, num_rows=800, seed=0)
+    tok = HashTokenizer()
+    lens = []
+    for tpl in ds.templates:
+        for row in ds.table.rows[:150]:
+            lens.append(len(tok.encode(tpl.render(row))))
+    target, _ = DATASET_STATS[name]
+    avg = float(np.mean(lens))
+    assert target * 0.6 < avg < target * 1.4, f"{name}: avg {avg} vs Table4 {target}"
+
+
+def test_trace_poisson_and_sizes():
+    ds = make_dataset("amazon", num_rows=2000, seed=1)
+    cfg = TraceConfig(num_relqueries=200, rate=2.0, seed=3)
+    trace = build_trace(ds, cfg)
+    arr = [rq.arrival_time for rq in trace]
+    assert all(b > a for a, b in zip(arr, arr[1:]))
+    gaps = np.diff([0.0] + arr)
+    assert abs(np.mean(gaps) - 0.5) < 0.1          # 1/rate
+    sizes = [rq.num_requests for rq in trace]
+    assert min(sizes) >= 1 and max(sizes) <= 100
+    for rq in trace:
+        assert rq.max_output_tokens in OUTPUT_LIMITS.values()
+        for r in rq.requests:
+            assert 1 <= r.sim_output_len <= rq.max_output_tokens
+
+
+def test_shared_prefix_structure():
+    """Requests of one relQuery share the template prefix; rows referencing the
+    same catalog item share more — the structure Fig. 4 relies on."""
+    ds = make_dataset("rotten", num_rows=3000, seed=0)
+    tok = HashTokenizer()
+    tpl = ds.templates[0]
+    enc = [tok.encode(tpl.render(row)) for row in ds.table.rows[:400]]
+    # template prefix shared by all
+    first = enc[0]
+    shared = 0
+    for i in range(min(len(e) for e in enc[:50])):
+        if all(e[i] == first[i] for e in enc[:50]):
+            shared += 1
+        else:
+            break
+    assert shared >= 5, "template prefix must be shared"
+    # some pair shares far beyond the template (same catalog item)
+    best = 0
+    for e in enc[1:]:
+        n = 0
+        for a, b in zip(first, e):
+            if a != b:
+                break
+            n += 1
+        best = max(best, n)
+    assert best > shared + 8, "catalog-value overlap missing"
+
+
+def test_tokenizer_determinism():
+    tok = HashTokenizer(vocab_size=1000)
+    assert tok.encode("hello world") == tok.encode("hello world")
+    assert tok.encode("hello world") != tok.encode("world hello")
+    assert all(0 <= t < 1000 for t in tok.encode("a b c d"))

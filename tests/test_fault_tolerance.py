@@ -1,0 +1,86 @@
+"""Fault tolerance: engine snapshot/restore mid-trace; in-flight relQueries
+replay their prefill (idempotent) and the service completes."""
+import copy
+
+import pytest
+
+from repro.core.latency_model import a100_opt13b
+from repro.core.policies import SCHEDULERS
+from repro.core.priority import BatchLimits
+from repro.core.relquery import RequestState
+from repro.data.trace import quick_trace
+from repro.distributed.fault_tolerance import restore_scheduler, snapshot_scheduler
+from repro.engine.engine import ServingEngine
+from repro.engine.prefix_cache import PrefixCache
+from repro.engine.simulator import SimulatedExecutor, sim_output_len
+
+
+def test_engine_crash_restart_completes():
+    lm = a100_opt13b()
+    trace = quick_trace("beer", num_relqueries=10, rate=2.0, seed=4, max_requests=20)
+
+    # phase 1: run ~40 iterations then "crash"
+    pc = PrefixCache(block_size=16)
+    sched = SCHEDULERS["relserve"](limits=BatchLimits(), latency_model=lm,
+                                   prefix_cache=pc)
+    ex = SimulatedExecutor(lm, prefix_cache=pc)
+    now = 0.0
+    pending = sorted(trace, key=lambda r: r.arrival_time)
+    idx = 0
+    for _ in range(40):
+        while idx < len(pending) and pending[idx].arrival_time <= now:
+            sched.add_relquery(pending[idx], now)
+            idx += 1
+        batch = sched.schedule(now)
+        if batch is None:
+            if idx < len(pending):
+                now = pending[idx].arrival_time
+                continue
+            break
+        dur, result = ex.execute(batch, now)
+        sched.complete_batch(batch, result, now, now + dur)
+        now += dur
+    snap = snapshot_scheduler(sched)
+    n_running = len(sched.running_requests())
+
+    # phase 2: fresh scheduler (KV lost), restore, finish remaining arrivals
+    pc2 = PrefixCache(block_size=16)
+    sched2 = SCHEDULERS["relserve"](limits=BatchLimits(), latency_model=lm,
+                                    prefix_cache=pc2)
+    restore_scheduler(sched2, snap)
+    # RUNNING requests were demoted to WAITING for prefill replay
+    assert not sched2.running_requests()
+    ex2 = SimulatedExecutor(lm, prefix_cache=pc2)
+    eng = ServingEngine(sched2, ex2)
+    remaining = pending[idx:]
+    for rq in remaining:
+        rq2 = rq  # same objects, not yet submitted anywhere
+    report = eng.run_trace(remaining)
+    # every relQuery in the union finished
+    all_rqs = list(sched2.relqueries.values())
+    assert len(all_rqs) == len(trace)
+    for rq in all_rqs:
+        assert rq.is_finished(), f"{rq.rel_id} unfinished after restore"
+        for r in rq.requests:
+            target = min(getattr(r, "sim_output_len", None) or r.max_output_tokens,
+                         r.max_output_tokens)
+            assert len(r.output_tokens) == target
+    assert sched2.tokens_in_use == 0
+
+
+def test_snapshot_preserves_latency_bookkeeping():
+    lm = a100_opt13b()
+    trace = quick_trace("beer", num_relqueries=3, rate=5.0, seed=5, max_requests=5)
+    pc = PrefixCache()
+    sched = SCHEDULERS["relserve"](limits=BatchLimits(), latency_model=lm,
+                                   prefix_cache=pc)
+    eng = ServingEngine(sched, SimulatedExecutor(lm, prefix_cache=pc))
+    eng.run_trace(copy.deepcopy(trace))
+    snap = snapshot_scheduler(sched)
+    sched2 = SCHEDULERS["relserve"](limits=BatchLimits(), latency_model=lm)
+    restore_scheduler(sched2, snap)
+    for rel_id, rq in sched.relqueries.items():
+        rq2 = sched2.relqueries[rel_id]
+        assert rq2.finish_time == rq.finish_time
+        assert rq2.first_prefill_start == rq.first_prefill_start
+        assert rq2.latency() == rq.latency()

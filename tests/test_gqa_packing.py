@@ -1,0 +1,84 @@
+"""GQA TP head-packing exactness + layout properties (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.distributed.sharding import (
+    gqa_layout, pack_kv_weight, pack_q_weight, unpack_q_output,
+)
+
+
+@given(kv=st.integers(1, 16), qpk=st.integers(1, 8),
+       tp=st.sampled_from([1, 2, 4, 8, 16]))
+@settings(max_examples=200, deadline=None)
+def test_layout_properties(kv, qpk, tp):
+    H = kv * qpk
+    lay = gqa_layout(H, kv, tp)
+    # slots divisible by tp
+    assert lay.kv_slots % max(tp, 1) == 0 or tp == 1
+    # every true q head appears exactly once
+    seen = [q for row in lay.q_map for q in row if q >= 0]
+    assert sorted(seen) == list(range(H))
+    # q head in slot s belongs to the kv head stored in slot s
+    for s, row in enumerate(lay.q_map):
+        for q in row:
+            if q >= 0:
+                assert q // qpk == lay.dup_map[s]
+    # dup_map covers every kv head, monotone
+    assert sorted(set(lay.dup_map)) == list(range(kv))
+    assert list(lay.dup_map) == sorted(lay.dup_map)
+
+
+def _canonical_gqa(x, wq, wk, wv, wo, H, KV, hd):
+    """Reference attention with canonical [H]-major weights."""
+    qpk = H // KV
+    q = jnp.einsum("bd,dhk->bhk", x, wq)
+    k = jnp.einsum("bd,dgk->bgk", x, wk)
+    v = jnp.einsum("bd,dgk->bgk", x, wv)
+    kq = jnp.repeat(k, qpk, axis=1)   # map kv->q heads
+    vq = jnp.repeat(v, qpk, axis=1)
+    s = jax.nn.softmax(jnp.einsum("bhk,chk->bhc", q, kq) / np.sqrt(hd), axis=-1)
+    o = jnp.einsum("bhc,chk->bhk", s, vq)
+    return jnp.einsum("bhk,hkd->bd", o, wo)
+
+
+@pytest.mark.parametrize("H,KV,tp", [(4, 2, 4), (14, 2, 16), (40, 8, 16),
+                                     (25, 5, 16), (8, 8, 16)])
+def test_packed_attention_exact(H, KV, tp):
+    """Packed (duplicated-KV, padded-Q) layout computes the same attention as
+    the canonical layout — with zero pad weights the math is exact."""
+    hd, D, B = 8, 16, 3
+    lay = gqa_layout(H, KV, tp)
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(B, D), jnp.float32)
+    wq = rng.randn(D, H, hd).astype(np.float32)
+    wk = rng.randn(D, KV, hd).astype(np.float32)
+    wv = rng.randn(D, KV, hd).astype(np.float32)
+    wo = rng.randn(H, hd, D).astype(np.float32)
+
+    ref = _canonical_gqa(x, jnp.asarray(wq), jnp.asarray(wk), jnp.asarray(wv),
+                         jnp.asarray(wo), H, KV, hd)
+
+    wq_p = pack_q_weight(wq, lay, head_axis=1)        # [D, KVs*Qp, hd]
+    wo_p = pack_q_weight(wo, lay, head_axis=0)        # [KVs*Qp, hd, D]
+    wk_p = pack_kv_weight(wk, lay, head_axis=1)       # [D, KVs, hd]
+    wv_p = pack_kv_weight(wv, lay, head_axis=1)
+    G, Qp = lay.kv_slots, lay.q_per_slot
+    q = jnp.einsum("bd,dgqk->bgqk", x, jnp.asarray(wq_p.reshape(D, G, Qp, hd)))
+    k = jnp.einsum("bd,dgk->bgk", x, jnp.asarray(wk_p))
+    v = jnp.einsum("bd,dgk->bgk", x, jnp.asarray(wv_p))
+    s = jax.nn.softmax(jnp.einsum("bgqk,cgk->bgqc", q, k) / np.sqrt(hd), axis=-1)
+    o = jnp.einsum("bgqc,cgk->bgqk", s, v)
+    out = jnp.einsum("bgqk,gqkd->bd", o, jnp.asarray(wo_p.reshape(G, Qp, hd, D)))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4, rtol=1e-4)
+
+
+def test_unpack_roundtrip():
+    H, KV, tp, hd = 25, 5, 16, 4
+    lay = gqa_layout(H, KV, tp)
+    w = np.random.RandomState(1).randn(3, H, hd).astype(np.float32)
+    packed = pack_q_weight(w, lay, head_axis=1)
+    back = unpack_q_output(packed, lay, head_axis=1)
+    np.testing.assert_array_equal(back, w)

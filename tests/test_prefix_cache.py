@@ -1,0 +1,83 @@
+"""Prefix cache + paged block manager invariants (unit + hypothesis)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.engine.kv_cache import BlockManager, OutOfBlocks
+from repro.engine.prefix_cache import PrefixCache, block_hashes
+
+
+def test_block_hash_chaining():
+    a = block_hashes([1, 2, 3, 4, 5, 6, 7, 8], 4)
+    b = block_hashes([1, 2, 3, 4, 9, 9, 9, 9], 4)
+    assert a[0] == b[0] and a[1] != b[1]          # shared first block only
+    c = block_hashes([0, 2, 3, 4, 5, 6, 7, 8], 4)
+    assert a[0] != c[0] and a[1] != c[1]          # chained: divergence propagates
+
+
+def test_prefix_cache_match_and_insert():
+    pc = PrefixCache(block_size=4)
+    toks = list(range(10))
+    assert pc.count_cached(toks) == 0
+    pc.insert(toks)
+    assert pc.peek_cached(toks) == 8              # two full blocks (10 // 4 * 4)
+    assert pc.peek_cached(list(range(6))) == 4    # shares the first block
+    assert pc.peek_cached([9] + list(range(9))) == 0
+
+
+def test_prefix_cache_lru_eviction():
+    pc = PrefixCache(block_size=2, capacity_blocks=3)
+    pc.insert([1, 2, 3, 4])       # 2 blocks
+    pc.insert([5, 6, 7, 8])       # 2 more -> evicts oldest
+    assert len(pc) == 3
+    assert pc.evictions == 1
+    assert pc.peek_cached([5, 6, 7, 8]) == 4      # newest survives
+
+
+@given(st.lists(st.tuples(st.integers(1, 80), st.booleans()),
+                min_size=1, max_size=40))
+@settings(max_examples=100, deadline=None)
+def test_block_manager_invariants(ops):
+    bm = BlockManager(num_blocks=128, block_size=8)
+    live = {}
+    for i, (tokens, do_free) in enumerate(ops):
+        sid = f"s{i}"
+        try:
+            bm.allocate(sid, tokens)
+            live[sid] = tokens
+        except OutOfBlocks:
+            pass
+        if do_free and live:
+            victim = next(iter(live))
+            bm.free(victim)
+            del live[victim]
+        bm.check_invariants()
+    # tokens accounted exactly
+    assert bm.tokens_in_use() == sum(live.values())
+    for sid in list(live):
+        bm.free(sid)
+    assert bm.free_blocks == 128
+
+
+def test_block_manager_prefix_sharing():
+    bm = BlockManager(num_blocks=32, block_size=4)
+    bm.allocate("a", 16)
+    bm.register_prefix("a", [101, 102])           # first 2 blocks published
+    before = bm.free_blocks
+    alloc_b = bm.allocate("b", 16, prefix_keys=[101, 102, 999])
+    assert alloc_b.shared_prefix_blocks == 2
+    assert bm.free_blocks == before - 2           # only 2 fresh blocks
+    bm.free("a")                                   # shared blocks stay (ref'd by b)
+    assert bm.block_table("b")[0] == alloc_b.block_ids[0]
+    bm.free("b")
+    assert bm.free_blocks == 32
+    bm.check_invariants()
+
+
+def test_block_manager_decode_append():
+    bm = BlockManager(num_blocks=8, block_size=4)
+    bm.allocate("a", 4)                            # exactly one block
+    assert bm.append_token("a") is not None        # crosses boundary -> new block
+    for _ in range(3):
+        assert bm.append_token("a") is None
+    assert bm.context_len("a") == 8
+    bm.check_invariants()

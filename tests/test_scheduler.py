@@ -1,0 +1,179 @@
+"""Scheduler-core unit + property tests: Algorithm 1 decomposition, DPU
+reuse/starvation, ABA case logic (Eq. 14-17), queue-state invariants."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.arranger import AdaptiveBatchArranger, CandidateBatch
+from repro.core.latency_model import BatchLatencyModel, a100_opt13b, fit
+from repro.core.priority import (
+    BatchLimits, DPUConfig, DynamicPriorityUpdater, batch_decompose,
+)
+from repro.core.relquery import RequestState, make_relquery
+from repro.core.scheduler import BatchResult, RelServeScheduler, ScheduledBatch
+
+
+# ---------------------------------------------------------------- Algorithm 1
+@given(
+    utoks=st.lists(st.integers(1, 4000), min_size=0, max_size=60),
+    ol=st.integers(1, 50),
+    running=st.integers(0, 10),
+    mnbt=st.integers(128, 4096),
+    mns=st.integers(2, 64),
+    cap=st.integers(4096, 65536),
+)
+@settings(max_examples=300, deadline=None)
+def test_batch_decompose_properties(utoks, ol, running, mnbt, mns, cap):
+    limits = BatchLimits(max_num_batched_tokens=mnbt, max_num_seqs=mns, cap=cap)
+    batches = batch_decompose(utoks, ol, running, limits)
+    prefill = [b for b in batches if b.kind == "prefill"]
+    decode = [b for b in batches if b.kind == "decode"]
+    # every uncached token appears in exactly one prefill batch
+    assert sum(b.utok for b in prefill) == sum(utoks)
+    # decode batches never exceed the seq cap
+    assert all(b.reqs <= max(mns, running) for b in decode)
+    # decode iterations come in multiples of the output length
+    assert len(decode) % ol == 0
+    if utoks or running:
+        assert len(decode) >= ol
+    # prefill batches respect the token cap (single oversized request excepted)
+    for b in prefill:
+        assert b.utok <= max(mnbt, max(utoks, default=0))
+
+
+# ---------------------------------------------------------------- DPU
+def _mk_rq(rel_id, n_req, tok_len, ol, arrival=0.0):
+    return make_relquery(rel_id, [[1] * tok_len] * n_req, arrival, ol)
+
+
+def test_priority_reuse_for_waiting():
+    dpu = DynamicPriorityUpdater(a100_opt13b(), BatchLimits())
+    rq = _mk_rq("a", 10, 100, 10)
+    dpu.update([rq], now=0.0)
+    calls0 = dpu.stats["pem_calls"]
+    dpu.update([rq], now=1.0)   # still fully waiting -> Eq. 12 reuse
+    assert dpu.stats["pem_calls"] == calls0
+    assert dpu.stats["reuses"] >= 1
+
+
+def test_priority_drops_with_progress():
+    dpu = DynamicPriorityUpdater(a100_opt13b(), BatchLimits())
+    rq = _mk_rq("a", 10, 100, 10)
+    dpu.update([rq], now=0.0)
+    p0 = rq.priority
+    for r in rq.requests[:9]:       # 90% of requests finish
+        r.state = RequestState.FINISHED
+    last = rq.requests[9]
+    last.state = RequestState.RUNNING
+    last.prefilled = True
+    last.output_tokens = [1] * 8    # 2 decode iterations remain
+    dpu.update([rq], now=1.0)
+    assert rq.priority < p0 * 0.5, "priority must track remaining workload"
+    # monotone: priority falls as generation progresses further
+    p1 = rq.priority
+    last.output_tokens = [1] * 9
+    dpu.update([rq], now=2.0)
+    assert rq.priority <= p1
+
+
+def test_starvation_promotion():
+    dpu = DynamicPriorityUpdater(a100_opt13b(), BatchLimits(),
+                                 DPUConfig(starvation_threshold=0.01))
+    rq = _mk_rq("a", 4, 100, 10, arrival=0.0)
+    dpu.update([rq], now=10.0)   # unit_waiting_time = 10/4 >> 0.01
+    assert rq.priority == 0.0
+    assert dpu.stats["starvation_promotions"] == 1
+
+
+def test_cache_miss_ratio_sampling():
+    class FakeCache:
+        def peek_cached(self, tokens):
+            return len(tokens) // 2
+        def count_cached(self, tokens):
+            return len(tokens) // 2
+    dpu = DynamicPriorityUpdater(a100_opt13b(), BatchLimits(),
+                                 DPUConfig(sample_size=4))
+    rq = _mk_rq("a", 20, 100, 10)
+    dpu.update([rq], now=0.0, prefix_cache=FakeCache())
+    assert abs(rq.cache_miss_ratio - 0.5) < 1e-6
+    assert dpu.stats["sampled_requests"] == 4   # sampled, not all 20
+
+
+# ---------------------------------------------------------------- ABA
+def _cand(reqs, utok=0, rq=None):
+    return CandidateBatch(requests=reqs, uncached_tokens=utok, relquery=rq)
+
+
+def test_aba_cases():
+    lm = a100_opt13b()
+    aba = AdaptiveBatchArranger(lm)
+    run_rq = _mk_rq("run", 4, 100, 10)
+    wait_rq = _mk_rq("wait", 4, 100, 10)
+    for r in run_rq.requests:
+        r.state = RequestState.RUNNING
+        r.prefilled = True
+    prio = {"run": 5.0, "wait": 1.0}
+    d = _cand(run_rq.requests)
+    p = _cand(wait_rq.requests, utok=400, rq=wait_rq)
+    dec = aba.choose(p, d, [run_rq], [wait_rq], lambda r: prio[r.rel_id])
+    assert dec.kind == "prefill" and dec.case == "preempt"    # m+ > m-
+
+    prio = {"run": 1.0, "wait": 1.0}
+    dec = aba.choose(p, d, [run_rq], [wait_rq], lambda r: prio[r.rel_id])
+    assert dec.kind == "prefill" and dec.case == "internal"   # m+ == m-
+
+    prio = {"run": 1.0, "wait": 5.0}
+    dec = aba.choose(p, d, [run_rq], [wait_rq], lambda r: prio[r.rel_id])
+    assert dec.case == "transitional"                          # m+ < m-
+    assert dec.delta is not None
+
+
+def test_aba_delta_signs():
+    """Many waiting relQueries -> combined decoding wins (delta < 0);
+    no waiting relQueries -> prefill only costs (delta > 0)."""
+    lm = a100_opt13b()
+    aba = AdaptiveBatchArranger(lm)
+    run_rq = _mk_rq("run", 4, 100, 20)
+    for r in run_rq.requests:
+        r.state = RequestState.RUNNING
+        r.prefilled = True
+    p_rq = _mk_rq("w0", 8, 100, 20)
+    p = _cand(p_rq.requests, utok=800, rq=p_rq)
+    waiting = [_mk_rq(f"w{i}", 4, 100, 20) for i in range(30)]
+    assert aba.delta_latency(p, [run_rq], waiting) < 0
+    assert aba.delta_latency(p, [run_rq], []) > 0
+
+
+# ---------------------------------------------------------------- queue state
+def test_scheduler_state_machine():
+    lm = a100_opt13b()
+    sched = RelServeScheduler(limits=BatchLimits(cap=10_000), latency_model=lm)
+    rq = _mk_rq("a", 3, 50, 3)
+    sched.add_relquery(rq, now=0.0)
+    batch = sched.schedule(now=0.0)
+    assert batch.kind == "prefill" and len(batch.requests) == 3
+    outputs = {r.req_id: (5, False) for r in batch.requests}
+    sched.complete_batch(batch, BatchResult(outputs), 0.0, 1.0)
+    assert all(r.state == RequestState.RUNNING for r in rq.requests)
+    assert rq.first_prefill_start == 0.0 and rq.last_prefill_end == 1.0
+    assert sched.tokens_in_use == 3 * 51
+    # decode to completion
+    for i in range(2):
+        batch = sched.schedule(now=1.0 + i)
+        assert batch.kind == "decode"
+        outputs = {r.req_id: (5, i == 1) for r in batch.requests}
+        sched.complete_batch(batch, BatchResult(outputs), 1.0 + i, 2.0 + i)
+    assert rq.is_finished() and rq.finish_time == 3.0
+    assert sched.tokens_in_use == 0
+    assert rq.latency() == 3.0
+    assert rq.waiting_time() == 0.0
+    assert rq.core_running_time() == 1.0
+    assert rq.tail_running_time() == 2.0
+
+
+def test_latency_model_fit_recovers_params():
+    lm = BatchLatencyModel(2e-4, 0.05, 3e-4, 0.02)
+    pre = [(x, lm.prefill_time(x)) for x in range(100, 3000, 100)]
+    dec = [(x, lm.decode_time(x)) for x in range(1, 200, 10)]
+    fitted = fit(pre, dec)
+    assert abs(fitted.alpha_p - lm.alpha_p) / lm.alpha_p < 1e-6
+    assert abs(fitted.beta_d - lm.beta_d) / lm.beta_d < 1e-6
