@@ -1,0 +1,63 @@
+"""Replica scaling: avg relQuery latency vs number of data-parallel engine
+replicas behind the relQuery-affine router, on one shared arrival trace.
+
+At paper-scale load a single replica saturates (queueing dominates); adding
+affine replicas splits the relQuery stream while keeping each relQuery's
+requests — and therefore its prefix-cache hits — on one engine, so average
+latency must be monotonically non-increasing as replicas are added.
+
+  PYTHONPATH=src python -m benchmarks.replica_scaling
+"""
+from __future__ import annotations
+
+import copy
+from typing import List
+
+from benchmarks.common import csv_row, shared_trace
+from repro.serving import build_simulated_cluster
+
+
+def run_replicas(trace, num_replicas: int, scheduler: str = "relserve",
+                 router_policy: str = "affinity_spill", seed: int = 0):
+    cluster = build_simulated_cluster(num_replicas, scheduler=scheduler,
+                                      router_policy=router_policy, seed=seed)
+    return cluster.run_trace(copy.deepcopy(trace))
+
+
+def run(dataset: str = "rotten", rate: float = 2.0, num_relqueries: int = 120,
+        replica_counts=(1, 2, 3, 4), scheduler: str = "relserve",
+        router_policy: str = "affinity_spill", seed: int = 0,
+        quiet: bool = False, strict: bool = False) -> List[str]:
+    """Sweep replica counts on one trace. With ``strict`` (the default-trace
+    acceptance check in ``__main__``) a latency regression between counts is
+    an error; custom sweeps report the rows and let the caller judge —
+    statistical monotonicity need not be pointwise at every rate/seed."""
+    trace = shared_trace(dataset, rate, num_relqueries, seed)
+    rows = []
+    prev = None
+    for n in replica_counts:
+        result = run_replicas(trace, n, scheduler, router_policy, seed)
+        rep = result.merged
+        note = ""
+        if prev is not None:
+            note = f"speedup_vs_prev={prev / rep.avg_latency:.2f}x"
+            if rep.avg_latency > prev * (1 + 1e-9):
+                note += " REGRESSION"
+                if strict:
+                    raise AssertionError(
+                        f"avg latency regressed at {n} replicas: "
+                        f"{rep.avg_latency:.3f}s > {prev:.3f}s")
+        prev = rep.avg_latency
+        rows.append(csv_row(
+            f"replica_scaling/{scheduler}/{dataset}/rate{rate}/replicas{n}",
+            rep.avg_latency * 1e6,
+            f"p99={rep.percentile(99):.2f}s max={rep.max_latency:.2f}s "
+            f"e2e={rep.end_to_end:.1f}s spilled={result.router_stats['spilled']} "
+            f"{note}".strip()))
+        if not quiet:
+            print(rows[-1], flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run(strict=True)

@@ -1,3 +1,8 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""Scheduling core: the unified Batch type, latency model, DPU priorities,
+the Adaptive Batch Arranger and the schedulers that tie them together."""
+from repro.core.batch import Batch
+from repro.core.latency_model import BatchLatencyModel, a100_opt13b
+from repro.core.relquery import RelQuery, Request, RequestState
+
+__all__ = ["Batch", "BatchLatencyModel", "a100_opt13b",
+           "RelQuery", "Request", "RequestState"]

@@ -1,41 +1,38 @@
-"""Adaptive Batch Arranger (paper §4.3, Eq. 14-17).
+"""Adaptive Batch Arranger (paper §4.3, Eq. 14-17), generalized to a
+multi-candidate choice over unified ``Batch`` objects.
 
-Given the candidate decode batch (all running requests) and the candidate
-prefill batch (head of the priority-ordered waiting queue, single relQuery),
-ABA picks which to execute this iteration:
+The scheduler hands ABA a *list* of candidate batches for this iteration —
+typically the candidate decode batch (all running requests), the candidate
+prefill batch (head of the priority-ordered waiting queue), and a
+chunked-mixed candidate (running requests decode while a prompt chunk of the
+head waiting request prefills in the same pass). ABA picks one:
 
-- m⁺ > m⁻  → *preemption*: a shorter relQuery is waiting; prefill it.
+- m⁺ > m⁻  → *preemption*: a shorter relQuery is waiting; start it (prefill).
 - m⁺ = m⁻  → *internal*: same relQuery on both sides; prefill first to
              maximize the eventual combined decode batch.
 - m⁺ < m⁻  → *transitional*: the running relQuery finished its prefills; price
-             the latency trade-off Δ = Δ⁺ + Δ⁻ and prefill only when Δ < 0.
+             the latency trade-off Δ = Δ⁺ + Δ⁻ for every prefill-side
+             candidate (pure and chunked-mixed) and run the cheapest when its
+             Δ < 0, else decode.
+
+Chunked-mixed candidates extend Eq. 15/16: the running requests still decode
+inside a mixed pass, so Δ⁺ only charges the *incremental* compute
+``L_mixed(utok, d) − L_decode(d)`` per running relQuery, and only chunks that
+complete their prompt contribute newcomers to future decode batches.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Sequence
+from typing import Iterable, List, Optional, Sequence
 
+from repro.core.batch import Batch
 from repro.core.latency_model import BatchLatencyModel
-from repro.core.relquery import RelQuery, Request
-
-
-@dataclass
-class CandidateBatch:
-    requests: List[Request]
-    uncached_tokens: int = 0      # prefill candidates: utok(p)
-    relquery: Optional[RelQuery] = None
-
-    @property
-    def num_requests(self) -> int:
-        return len(self.requests)
-
-    def min_priority(self, prio_of) -> float:
-        return min(prio_of(r) for r in self.requests)
+from repro.core.relquery import RelQuery
 
 
 @dataclass
 class ArrangerDecision:
-    kind: str          # 'prefill' | 'decode'
+    kind: str          # 'prefill' | 'decode' | 'mixed'
     case: str          # 'preempt' | 'internal' | 'transitional' | 'forced'
     delta: Optional[float] = None
 
@@ -44,62 +41,89 @@ class AdaptiveBatchArranger:
     def __init__(self, latency_model: BatchLatencyModel):
         self.lm = latency_model
         self.stats = {"preempt": 0, "internal": 0, "transitional_prefill": 0,
-                      "transitional_decode": 0, "forced": 0}
+                      "transitional_mixed": 0, "transitional_decode": 0,
+                      "forced": 0}
 
     def choose(
         self,
-        p_cand: Optional[CandidateBatch],
-        d_cand: Optional[CandidateBatch],
+        candidates: Iterable[Optional[Batch]],
         running_rqs: Sequence[RelQuery],      # R_t^+
         waiting_rqs: Sequence[RelQuery],      # R_t^-
         prio_of,                              # Request -> priority value
         now: float = 0.0,
     ) -> ArrangerDecision:
-        if p_cand is None and d_cand is None:
-            raise ValueError("both candidates empty — engine should idle instead")
-        if d_cand is None or not d_cand.requests:
+        by_kind = {}
+        for c in candidates:
+            if c is not None and not c.is_empty():
+                by_kind[c.kind] = c
+        if not by_kind:
+            raise ValueError("no candidates — engine should idle instead")
+
+        d_cand = by_kind.get("decode")
+        prefill_side = [by_kind[k] for k in ("prefill", "mixed") if k in by_kind]
+        if d_cand is None:
             self.stats["forced"] += 1
-            return ArrangerDecision("prefill", "forced")
-        if p_cand is None or not p_cand.requests:
+            return ArrangerDecision(prefill_side[0].kind, "forced")
+        if not prefill_side:
             self.stats["forced"] += 1
             return ArrangerDecision("decode", "forced")
 
         m_plus = d_cand.min_priority(prio_of)
-        m_minus = p_cand.min_priority(prio_of)
-        if m_plus > m_minus:
-            self.stats["preempt"] += 1
-            return ArrangerDecision("prefill", "preempt")
-        if m_plus == m_minus:
-            self.stats["internal"] += 1
-            return ArrangerDecision("prefill", "internal")
+        m_minus = min(c.min_prefill_priority(prio_of) for c in prefill_side)
+        if m_plus >= m_minus:
+            # preemption / internal: a relQuery at least as urgent as everything
+            # running is waiting — start it with a full prefill when available.
+            case = "preempt" if m_plus > m_minus else "internal"
+            self.stats[case] += 1
+            return ArrangerDecision(prefill_side[0].kind, case)
 
-        delta = self.delta_latency(p_cand, running_rqs, waiting_rqs)
-        if delta < 0:
-            self.stats["transitional_prefill"] += 1
-            return ArrangerDecision("prefill", "transitional", delta)
+        # transitional: price every prefill-side candidate, take the cheapest.
+        best, best_delta = None, None
+        for c in prefill_side:
+            delta = self.delta_latency(c, running_rqs, waiting_rqs)
+            if best_delta is None or delta < best_delta:
+                best, best_delta = c, delta
+        if best_delta < 0:
+            self.stats[f"transitional_{best.kind}"] += 1
+            return ArrangerDecision(best.kind, "transitional", best_delta)
         self.stats["transitional_decode"] += 1
-        return ArrangerDecision("decode", "transitional", delta)
+        return ArrangerDecision("decode", "transitional", best_delta)
 
     # ------------------------------------------------------------- Eq. 15-17
-    def delta_latency(self, p_cand: CandidateBatch, running_rqs: Sequence[RelQuery],
+    def delta_latency(self, cand: Batch, running_rqs: Sequence[RelQuery],
                       waiting_rqs: Sequence[RelQuery]) -> float:
-        """Projected total-latency change of executing p_cand before d_cand."""
+        """Projected total-latency change of executing ``cand`` before the
+        candidate decode batch. Handles pure-prefill and chunked-mixed."""
         lm = self.lm
-        ol_p = p_cand.relquery.max_output_tokens if p_cand.relquery else \
-            max((r.max_output_tokens for r in p_cand.requests), default=0)
+        preqs = cand.prefill_requests
+        ol_p = cand.relquery.max_output_tokens if cand.relquery else \
+            max((r.max_output_tokens for r in preqs), default=0)
+        completing = [r for r in preqs if cand.completes_prompt(r)]
 
-        # Δ⁺ (Eq. 15): every running relQuery is delayed by the prefill pass and
-        # by the larger decode batches it will share with the newcomers.
         rem_out = {rq.rel_id: max((r.remaining_output for r in rq.running_requests()),
                                   default=0) for rq in running_rqs}
-        delta_plus = lm.prefill_time(p_cand.uncached_tokens) * len(running_rqs)
-        delta_plus += sum(
-            lm.alpha_d * p_cand.num_requests * min(rem_out[rq.rel_id], ol_p)
-            for rq in running_rqs)
+        if cand.kind == "mixed":
+            # running requests decode inside the mixed pass: they only pay the
+            # incremental chunk compute, and only completing chunks add
+            # newcomers to their future decode batches.
+            n_d = len(cand.decode_requests)
+            stall = lm.mixed_time(cand.uncached_tokens, n_d) - lm.decode_time(n_d)
+            joiners = len(completing)
+        else:
+            # Δ⁺ (Eq. 15): every running relQuery is delayed by the prefill
+            # pass and by the larger decode batches it will share.
+            stall = lm.prefill_time(cand.uncached_tokens)
+            joiners = len(completing)
+        delta_plus = stall * len(running_rqs)
+        delta_plus += sum(lm.alpha_d * joiners * min(rem_out[rq.rel_id], ol_p)
+                          for rq in running_rqs)
 
         # Δ⁻ (Eq. 16): waiting relQueries gain from combined decoding — every
         # decode iteration the newcomer shares with a running relQuery is one
-        # batch overhead β_d the queue does not pay twice.
+        # batch overhead β_d the queue does not pay twice. For mixed batches
+        # only the completing fraction of the chunked requests joins decode now.
         max_run_out = max([rem_out[rq.rel_id] for rq in running_rqs], default=0)
-        delta_minus = -len(waiting_rqs) * lm.beta_d * min(ol_p, max_run_out)
+        share = 1.0 if cand.kind != "mixed" else \
+            len(completing) / max(1, len(preqs))
+        delta_minus = -len(waiting_rqs) * lm.beta_d * min(ol_p, max_run_out) * share
         return delta_plus + delta_minus

@@ -1,21 +1,23 @@
 """Baseline scheduling policies (paper §5.1 baselines + §5.3 ablations).
 
 - ``VLLMScheduler``      — FCFS arrival order, strict prefill prioritization.
-- ``SarathiScheduler``   — FCFS + chunked prefill mixed with decode.
+- ``SarathiScheduler``   — FCFS + chunked prefill mixed with decode (one
+  ``build_mixed_candidate`` batch per iteration).
 - ``StaticPriorityScheduler`` (vLLM-SP) — Eq. 6/7 priority fixed at arrival,
   prefill prioritization; same code base as RelServe minus DPU/ABA.
 - ``RelServePP`` / ``RelServeDP`` — RelServe with the transitional-case
   arrangement pinned to prefill-first / decode-first (Fig. 10 ablation).
+
+All policies emit the unified ``repro.core.batch.Batch``.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Optional
 
+from repro.core.batch import Batch
 from repro.core.priority import StaticPriorityEstimator
-from repro.core.relquery import RelQuery, Request, RequestState
-from repro.core.scheduler import (
-    BatchResult, RelServeScheduler, ScheduledBatch, SchedulerBase,
-)
+from repro.core.relquery import RelQuery, Request
+from repro.core.scheduler import RelServeScheduler, SchedulerBase
 
 
 class VLLMScheduler(SchedulerBase):
@@ -27,15 +29,11 @@ class VLLMScheduler(SchedulerBase):
     def rq_sort_key(self, rq: RelQuery):
         return (rq.arrival_time, rq.rel_id)
 
-    def schedule(self, now: float):
+    def schedule(self, now: float) -> Optional[Batch]:
         p_cand = self.build_prefill_candidate(single_relquery=False)
         if p_cand is not None:
-            return ScheduledBatch("prefill", p_cand.requests,
-                                  uncached_tokens=p_cand.uncached_tokens)
-        d_cand = self.build_decode_candidate()
-        if d_cand is not None:
-            return ScheduledBatch("decode", d_cand.requests)
-        return None
+            return p_cand
+        return self.build_decode_candidate()
 
     def estimated_utok(self, r: Request) -> int:
         # FCFS baselines still benefit from the engine prefix cache at
@@ -56,15 +54,11 @@ class StaticPriorityScheduler(SchedulerBase):
     def on_relquery_added(self, rq: RelQuery, now: float) -> None:
         self.estimator.assign(rq)
 
-    def schedule(self, now: float):
+    def schedule(self, now: float) -> Optional[Batch]:
         p_cand = self.build_prefill_candidate(single_relquery=True)
         if p_cand is not None:
-            return ScheduledBatch("prefill", p_cand.requests,
-                                  uncached_tokens=p_cand.uncached_tokens)
-        d_cand = self.build_decode_candidate()
-        if d_cand is not None:
-            return ScheduledBatch("decode", d_cand.requests)
-        return None
+            return p_cand
+        return self.build_decode_candidate()
 
 
 class SarathiScheduler(SchedulerBase):
@@ -77,45 +71,8 @@ class SarathiScheduler(SchedulerBase):
     def rq_sort_key(self, rq: RelQuery):
         return (rq.arrival_time, rq.rel_id)
 
-    def schedule(self, now: float):
-        decode_reqs = self.running_requests()[: self.limits.max_num_seqs]
-        budget = max(0, self.limits.max_num_batched_tokens - len(decode_reqs))
-        chunks: Dict[str, int] = {}
-        prefill_reqs: List[Request] = []
-        full_tok_sum = 0
-        for rq in self.sorted_waiting_rqs():
-            if budget <= 0:
-                break
-            for r in self._waiting_of[rq.rel_id]:
-                if budget <= 0 or len(decode_reqs) + len(prefill_reqs) >= self.limits.max_num_seqs:
-                    break
-                remaining = r.num_prompt_tokens - r.prefilled_tokens
-                needed = r.num_prompt_tokens + r.max_output_tokens
-                if r.prefilled_tokens == 0 and \
-                        self.tokens_in_use + full_tok_sum + needed > self.limits.cap:
-                    budget = 0
-                    break
-                chunk = min(remaining, budget)
-                chunks[r.req_id] = chunk
-                prefill_reqs.append(r)
-                budget -= chunk
-                full_tok_sum += needed if r.prefilled_tokens == 0 else 0
-        if not decode_reqs and not prefill_reqs:
-            return None
-        utok = sum(chunks.values())
-        return ScheduledBatch("mixed", prefill_reqs, uncached_tokens=utok,
-                              decode_requests=decode_reqs, prefill_chunks=chunks)
-
-    def complete_batch(self, batch: ScheduledBatch, result: BatchResult,
-                       start_ts: float, end_ts: float) -> None:
-        super().complete_batch(batch, result, start_ts, end_ts)
-        for r in batch.requests:
-            chunk = batch.prefill_chunks.get(r.req_id, 0)
-            r.prefilled_tokens += chunk
-            if r.prefilled_tokens >= r.num_prompt_tokens and not r.prefilled:
-                rq = self.relqueries[r.rel_id]
-                self._finish_prefill(r, rq, result, end_ts)
-                self._maybe_finish_relquery(rq, end_ts)
+    def schedule(self, now: float) -> Optional[Batch]:
+        return self.build_mixed_candidate(single_relquery=False)
 
 
 class RelServePP(RelServeScheduler):

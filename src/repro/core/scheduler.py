@@ -3,6 +3,12 @@ accounting and latency-phase bookkeeping (Definition 2.2); ``RelServeScheduler``
 adds the paper's DPU + ABA pipeline (Fig. 6 steps 2-3). Baselines live in
 ``repro.core.policies``.
 
+All schedulers produce (and executors consume) the unified ``repro.core.batch.
+Batch`` type — candidate construction (`build_prefill_candidate`,
+`build_decode_candidate`, `build_mixed_candidate`) and scheduled output are the
+same objects, so the Adaptive Batch Arranger can evaluate chunked-mixed
+batches as first-class candidates.
+
 Queues are maintained *incrementally* (per-relQuery waiting lists + a running
 list) so one scheduling iteration costs O(#relQueries + batch size), not
 O(total requests) — at paper scale (~5k requests, tens of thousands of
@@ -15,29 +21,16 @@ The engine contract:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.arranger import AdaptiveBatchArranger, ArrangerDecision, CandidateBatch
+from repro.core.arranger import AdaptiveBatchArranger, ArrangerDecision
+from repro.core.batch import Batch
 from repro.core.latency_model import BatchLatencyModel
 from repro.core.priority import (
     BatchLimits, DPUConfig, DynamicPriorityUpdater, PrefixCacheView,
 )
 from repro.core.relquery import RelQuery, Request, RequestState
-
-
-@dataclass
-class ScheduledBatch:
-    kind: str                        # 'prefill' | 'decode' | 'mixed'
-    requests: List[Request]          # prefill targets (or decode requests)
-    uncached_tokens: int = 0         # prefill compute (engine refines w/ real cache)
-    decode_requests: List[Request] = field(default_factory=list)  # mixed batches
-    prefill_chunks: Dict[str, int] = field(default_factory=dict)  # req_id -> chunk len
-    decision: Optional[ArrangerDecision] = None
-
-    @property
-    def num_requests(self) -> int:
-        return len(self.requests) + len(self.decode_requests)
 
 
 @dataclass
@@ -57,6 +50,12 @@ class SchedulerBase:
         self.prefix_cache = prefix_cache
         self.relqueries: Dict[str, RelQuery] = {}
         self.tokens_in_use = 0
+        # Worst-case KV commitment: the full prompt+output footprint of every
+        # request that has started prefilling (chunked or complete) and not
+        # finished. Admission checks use this, not tokens_in_use — running
+        # requests grow into their footprint as they decode, so admitting
+        # against current usage overcommits the cap.
+        self.committed_tokens = 0
         self.iteration = 0
         self.finished_relqueries: List[RelQuery] = []
         # incremental queues
@@ -102,6 +101,17 @@ class SchedulerBase:
     def has_work(self) -> bool:
         return self._unfinished > 0
 
+    def queue_depth(self) -> int:
+        """Outstanding requests (waiting + running) without copying the
+        queues — the router polls this on every arrival."""
+        return sum(len(lst) for lst in self._waiting_of.values()) + len(self._running)
+
+    def stuck_rel_ids(self) -> List[str]:
+        """relQueries with queued work (used in deadlock diagnostics)."""
+        ids = {rel_id for rel_id, lst in self._waiting_of.items() if lst}
+        ids.update(r.rel_id for r in self._running)
+        return sorted(ids)
+
     # ------------------------------------------------------------- candidates
     def rq_sort_key(self, rq: RelQuery):
         """Waiting-queue order: ascending priority, FCFS tie-break."""
@@ -112,21 +122,35 @@ class SchedulerBase:
         rqs.sort(key=self.rq_sort_key)
         return rqs
 
-    def build_decode_candidate(self) -> Optional[CandidateBatch]:
+    def build_decode_candidate(self) -> Optional[Batch]:
         if not self._running:
             return None
-        return CandidateBatch(requests=self._running[: self.limits.max_num_seqs])
+        return Batch.decode(self._running[: self.limits.max_num_seqs])
 
     def estimated_utok(self, r: Request) -> int:
-        rq = self.relqueries[r.rel_id]
-        return max(1, round(r.num_prompt_tokens * rq.cache_miss_ratio))
+        """Estimated uncached tokens of the whole remaining prompt — the
+        chunk estimate with the chunk covering everything left."""
+        remaining = r.num_prompt_tokens - r.prefilled_tokens
+        return max(1, self.estimated_chunk_utok(r, remaining))
 
-    def build_prefill_candidate(self, single_relquery: bool = True) -> Optional[CandidateBatch]:
-        order = self.sorted_waiting_rqs()
-        if not order:
+    def estimated_chunk_utok(self, r: Request, chunk: int) -> int:
+        """Estimated uncached tokens of the next ``chunk`` prompt tokens,
+        mirroring the executor's chunked-prefill cache accounting with the
+        sampled miss ratio in place of an exact prefix-cache probe."""
+        rq = self.relqueries[r.rel_id]
+        n = r.num_prompt_tokens
+        est_cached = n - max(1, round(n * rq.cache_miss_ratio))
+        done = r.prefilled_tokens
+        return max(0, min(done + chunk, n) - max(done, est_cached))
+
+    def _kv_footprint(self, r: Request) -> int:
+        return r.num_prompt_tokens + r.max_output_tokens
+
+    def build_prefill_candidate(self, single_relquery: bool = True) -> Optional[Batch]:
+        full_order = self.sorted_waiting_rqs()
+        if not full_order:
             return None
-        if single_relquery:
-            order = order[:1]
+        order = full_order[:1] if single_relquery else full_order
         chosen: List[Request] = []
         utok_sum, full_tok_sum = 0, 0
         for rq in order:
@@ -136,48 +160,105 @@ class SchedulerBase:
                     break
                 if len(chosen) + 1 > self.limits.max_num_seqs:
                     break
-                needed = r.num_prompt_tokens + r.max_output_tokens
-                if self.tokens_in_use + full_tok_sum + needed > self.limits.cap:
-                    if chosen:
-                        break
-                    return None  # not even one request fits right now
+                # partially-chunked requests are already committed
+                needed = 0 if r.prefilled_tokens else self._kv_footprint(r)
+                if self.committed_tokens + full_tok_sum + needed > self.limits.cap:
+                    break  # head-of-line: don't skip ahead of the cap-blocked rq
                 chosen.append(r)
                 utok_sum += u
                 full_tok_sum += needed
             else:
                 continue
             break
-        if not chosen:
+        if chosen:
+            rel = self.relqueries[chosen[0].rel_id] if single_relquery else None
+            return Batch.prefill(chosen, uncached_tokens=utok_sum, relquery=rel)
+        # Cap-blocked head of line. Fall back to requests whose KV is already
+        # committed (partially chunked): finishing them adds nothing to the
+        # commitment and is the only way the queue can drain — without this,
+        # a committed request stranded behind a too-big newcomer would turn
+        # into a spurious engine deadlock.
+        for rq in full_order:
+            committed = [r for r in self._waiting_of[rq.rel_id] if r.prefilled_tokens]
+            if committed:
+                reqs, utok = [], 0
+                for r in committed:   # same budget discipline as the main path
+                    u = self.estimated_utok(r)
+                    if reqs and (utok + u > self.limits.max_num_batched_tokens
+                                 or len(reqs) >= self.limits.max_num_seqs):
+                        break
+                    reqs.append(r)
+                    utok += u
+                return Batch.prefill(reqs, uncached_tokens=utok,
+                                     relquery=rq if single_relquery else None)
+        return None
+
+    def build_mixed_candidate(self, single_relquery: bool = False) -> Optional[Batch]:
+        """Chunked-prefill candidate (Sarathi-style): all running requests
+        decode one token while prompt chunks of the head waiting request(s)
+        share the leftover token budget. Chunks consume raw prompt tokens
+        from the budget (the pass computes over them either way); the
+        candidate's ``uncached_tokens`` is the *estimated uncached* share, so
+        ABA prices it on the same cache-discounted scale as pure prefill.
+        Starting a chunk commits the request's whole prompt+output KV
+        footprint against the cap (tracked in ``committed_tokens``)."""
+        decode_reqs = self.running_requests()[: self.limits.max_num_seqs]
+        budget = max(0, self.limits.max_num_batched_tokens - len(decode_reqs))
+        chunks: Dict[str, int] = {}
+        prefill_reqs: List[Request] = []
+        utok_sum, full_tok_sum = 0, 0
+        order = self.sorted_waiting_rqs()
+        if single_relquery:
+            order = order[:1]
+        for rq in order:
+            if budget <= 0:
+                break
+            for r in self._waiting_of[rq.rel_id]:
+                if budget <= 0 or \
+                        len(decode_reqs) + len(prefill_reqs) >= self.limits.max_num_seqs:
+                    break
+                remaining = r.num_prompt_tokens - r.prefilled_tokens
+                needed = 0 if r.prefilled_tokens else self._kv_footprint(r)
+                if self.committed_tokens + full_tok_sum + needed > self.limits.cap:
+                    budget = 0
+                    break
+                chunk = min(remaining, budget)
+                chunks[r.req_id] = chunk
+                prefill_reqs.append(r)
+                budget -= chunk
+                utok_sum += self.estimated_chunk_utok(r, chunk)
+                full_tok_sum += needed
+        if not decode_reqs and not prefill_reqs:
             return None
-        rel = self.relqueries[order[0].rel_id] if single_relquery else None
-        return CandidateBatch(requests=chosen, uncached_tokens=utok_sum, relquery=rel)
+        return Batch.mixed(prefill_reqs, decode_reqs, chunks,
+                           uncached_tokens=utok_sum)
 
     # ------------------------------------------------------------- lifecycle
-    def schedule(self, now: float) -> Optional[ScheduledBatch]:
+    def schedule(self, now: float) -> Optional[Batch]:
         raise NotImplementedError
 
-    def complete_batch(self, batch: ScheduledBatch, result: BatchResult,
+    def complete_batch(self, batch: Batch, result: BatchResult,
                        start_ts: float, end_ts: float) -> None:
         self.iteration += 1
         touched_rels = set()
-        if batch.kind in ("prefill", "mixed"):
-            for r in batch.requests:
-                rq = self.relqueries[r.rel_id]
-                if rq.first_prefill_start is None:
-                    rq.first_prefill_start = start_ts
-                if batch.kind == "mixed":
-                    continue  # chunk bookkeeping handled by the policy
+        for r in batch.prefill_requests:
+            rq = self.relqueries[r.rel_id]
+            if rq.first_prefill_start is None:
+                rq.first_prefill_start = start_ts
+            if r.prefilled_tokens == 0:   # first chunk (or whole prompt) lands
+                self.committed_tokens += self._kv_footprint(r)
+            r.prefilled_tokens = min(r.num_prompt_tokens,
+                                     r.prefilled_tokens + batch.chunk_of(r))
+            if r.prefilled_tokens >= r.num_prompt_tokens and not r.prefilled:
                 self._finish_prefill(r, rq, result, end_ts)
                 touched_rels.add(r.rel_id)
-        decode_reqs = batch.requests if batch.kind == "decode" else batch.decode_requests
-        if batch.kind in ("decode", "mixed"):
-            for r in decode_reqs:
-                tok, finished = result.outputs.get(r.req_id, (0, False))
-                r.output_tokens.append(tok)
-                self.tokens_in_use += 1
-                if finished or r.remaining_output <= 0:
-                    self._finish_request(r, end_ts)
-                touched_rels.add(r.rel_id)
+        for r in batch.decode_requests:
+            tok, finished = result.outputs.get(r.req_id, (0, False))
+            r.output_tokens.append(tok)
+            self.tokens_in_use += 1
+            if finished or r.remaining_output <= 0:
+                self._finish_request(r, end_ts)
+            touched_rels.add(r.rel_id)
         for rel_id in touched_rels:
             self._maybe_finish_relquery(self.relqueries[rel_id], end_ts)
 
@@ -205,6 +286,7 @@ class SchedulerBase:
         if r in self._running:
             self._running.remove(r)
         self.tokens_in_use -= r.total_tokens
+        self.committed_tokens -= self._kv_footprint(r)
 
     def _maybe_finish_relquery(self, rq: RelQuery, end_ts: float) -> None:
         if rq.finish_time is None and rq.is_finished():
@@ -214,10 +296,12 @@ class SchedulerBase:
 
 
 class RelServeScheduler(SchedulerBase):
-    """The paper's scheduler: DPU priority refresh + ABA batch choice."""
+    """The paper's scheduler: DPU priority refresh + ABA batch choice over
+    prefill, decode *and* chunked-mixed candidates."""
 
     name = "relserve"
     arrangement = "adaptive"   # 'adaptive' | 'prefill_first' | 'decode_first'
+    enable_mixed = True        # offer a chunked-mixed candidate to ABA
 
     def __init__(self, limits=None, latency_model=None, prefix_cache=None,
                  dpu_config: Optional[DPUConfig] = None):
@@ -230,12 +314,18 @@ class RelServeScheduler(SchedulerBase):
 
     def _dpu_targets(self) -> List[RelQuery]:
         """relQueries whose priority may need a refresh this iteration: every
-        relQuery with waiting or running requests."""
-        ids = {r.rel_id for r in self._running}
-        ids.update(rel_id for rel_id, lst in self._waiting_of.items() if lst)
-        return [self.relqueries[i] for i in ids]
+        relQuery with waiting or running requests. Deterministic order (the
+        DPU's sampling RNG is consumed in iteration order — a set here would
+        make runs irreproducible across processes)."""
+        out = self.running_rqs()
+        seen = {rq.rel_id for rq in out}
+        for rel_id, lst in self._waiting_of.items():
+            if lst and rel_id not in seen:
+                seen.add(rel_id)
+                out.append(self.relqueries[rel_id])
+        return out
 
-    def schedule(self, now: float) -> Optional[ScheduledBatch]:
+    def schedule(self, now: float) -> Optional[Batch]:
         import time as _time
         t0 = _time.perf_counter()
         self.dpu.update(self._dpu_targets(), now, self.prefix_cache)
@@ -243,24 +333,29 @@ class RelServeScheduler(SchedulerBase):
 
         d_cand = self.build_decode_candidate()
         p_cand = self.build_prefill_candidate(single_relquery=True)
-        if d_cand is None and p_cand is None:
+        m_cand = None
+        if self.enable_mixed and d_cand is not None and p_cand is not None:
+            m_cand = self.build_mixed_candidate(single_relquery=True)
+            if m_cand is not None and not m_cand.prefill_requests:
+                m_cand = None  # nothing to chunk: identical to the decode cand
+        candidates = [c for c in (p_cand, d_cand, m_cand) if c is not None]
+        if not candidates:
             return None
 
         t0 = _time.perf_counter()
         if self.arrangement == "adaptive":
-            decision = self.aba.choose(p_cand, d_cand, self.running_rqs(),
+            decision = self.aba.choose(candidates, self.running_rqs(),
                                        self.waiting_rqs(),
-                                       lambda r: self.relqueries[r.rel_id].priority, now)
+                                       lambda r: self.relqueries[r.rel_id].priority,
+                                       now)
         elif self.arrangement == "prefill_first":
             decision = ArrangerDecision("prefill" if p_cand else "decode", "forced")
         else:  # decode_first
             decision = ArrangerDecision("decode" if d_cand else "prefill", "forced")
         self.aba_time += _time.perf_counter() - t0
 
-        if decision.kind == "prefill" and p_cand is not None:
-            return ScheduledBatch("prefill", p_cand.requests,
-                                  uncached_tokens=p_cand.uncached_tokens,
-                                  decision=decision)
-        if d_cand is None:
-            return None
-        return ScheduledBatch("decode", d_cand.requests, decision=decision)
+        chosen = {c.kind: c for c in candidates}.get(decision.kind)
+        if chosen is None:  # forced arrangement pointing at a missing candidate
+            chosen = candidates[0]
+        chosen.decision = decision
+        return chosen

@@ -9,6 +9,7 @@ so prefix-cache hit ratios land in the paper's ~38% regime (Fig. 4).
 from __future__ import annotations
 
 import random
+import zlib
 from dataclasses import dataclass
 from typing import Dict, List, Tuple
 
@@ -47,7 +48,7 @@ def make_dataset(name: str, num_rows: int = 10_000, seed: int = 0,
     if name not in DATASET_STATS:
         raise KeyError(f"unknown dataset {name!r}; known: {list(DATASET_STATS)}")
     avg_in, avg_out = DATASET_STATS[name]
-    rng = random.Random(seed ^ hash(name))
+    rng = random.Random(seed ^ zlib.crc32(name.encode()))  # stable across processes
     # template overhead is ~25 words; split the rest between item (shared)
     # and review (unique) text, biased so shared prefixes are meaningful
     item_words = max(8, int(avg_in * 0.42))

@@ -1,18 +1,26 @@
-"""Serving engine: arrival handling + scheduler + executor loop (Fig. 6).
+"""Serving engine (Fig. 6), split into a steppable per-replica core.
+
+``EngineCore`` owns one scheduler + one executor and exposes
+``admit(rq, now)`` / ``tick(now) -> BatchEvent | None`` — the *caller* owns the
+clock, which is what lets ``repro.serving.Cluster`` drive N replicas on one
+simulated timeline (and what a real async serving loop would do with
+wall-clock time). ``ServingEngine`` is the single-replica convenience wrapper
+that replays a whole arrival trace.
 
 Works with either the simulated-clock executor (paper-scale traces) or the
-real JAX executor (smoke-scale models). One iteration = one scheduled batch.
+real JAX executor (smoke-scale models). One tick = one scheduled batch.
 """
 from __future__ import annotations
 
 import time as _time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.batch import Batch
 from repro.core.relquery import RelQuery
-from repro.core.scheduler import SchedulerBase, ScheduledBatch
+from repro.core.scheduler import SchedulerBase
 
 
 @dataclass
@@ -23,6 +31,23 @@ class BatchEvent:
     num_requests: int
     uncached_tokens: int
     rel_ids: Tuple[str, ...]
+    replica: int = 0
+
+
+class EngineDeadlockError(RuntimeError):
+    """The scheduler still has work but can never make progress (e.g. a
+    request that does not fit under the KV cap with nothing left running)."""
+
+    def __init__(self, tokens_in_use: int, cap: int, stuck_rel_ids: Sequence[str],
+                 replica: int = 0):
+        self.tokens_in_use = tokens_in_use
+        self.cap = cap
+        self.stuck_rel_ids = list(stuck_rel_ids)
+        self.replica = replica
+        super().__init__(
+            f"engine deadlock on replica {replica}: scheduler has work but no "
+            f"batch is schedulable (tokens_in_use={tokens_in_use}, "
+            f"cap={cap}, stuck relQueries={self.stuck_rel_ids})")
 
 
 @dataclass
@@ -36,6 +61,7 @@ class ServiceReport:
     dpu_time: float = 0.0
     aba_time: float = 0.0
     prefix_hit_ratio: float = 0.0
+    prefix_lookup_tokens: int = 0   # hits + misses behind prefix_hit_ratio
     schedule_time: float = 0.0
 
     @property
@@ -56,49 +82,83 @@ class ServiceReport:
         return m(self.waiting), m(self.core), m(self.tail)
 
 
-class ServingEngine:
-    def __init__(self, scheduler: SchedulerBase, executor):
+def merge_reports(reports: Sequence[ServiceReport]) -> ServiceReport:
+    """Fleet view: union the per-replica relQuery metrics, global end-to-end."""
+    merged = ServiceReport(latencies={}, waiting={}, core={}, tail={},
+                           events=[], end_to_end=0.0)
+    hit_tokens = 0.0
+    for rep in reports:
+        merged.latencies.update(rep.latencies)
+        merged.waiting.update(rep.waiting)
+        merged.core.update(rep.core)
+        merged.tail.update(rep.tail)
+        merged.events.extend(rep.events)
+        merged.end_to_end = max(merged.end_to_end, rep.end_to_end)
+        merged.dpu_time += rep.dpu_time
+        merged.aba_time += rep.aba_time
+        merged.schedule_time += rep.schedule_time
+        # hit ratio is a per-token quantity: weight by lookup volume
+        merged.prefix_lookup_tokens += rep.prefix_lookup_tokens
+        hit_tokens += rep.prefix_hit_ratio * rep.prefix_lookup_tokens
+    merged.events.sort(key=lambda e: (e.start, e.replica))
+    merged.prefix_hit_ratio = (hit_tokens / merged.prefix_lookup_tokens
+                               if merged.prefix_lookup_tokens else 0.0)
+    return merged
+
+
+class EngineCore:
+    """One serving replica: scheduler + executor behind a step interface."""
+
+    def __init__(self, scheduler: SchedulerBase, executor, replica_id: int = 0,
+                 record_events: bool = True):
         self.scheduler = scheduler
         self.executor = executor
+        self.replica_id = replica_id
+        self.record_events = record_events
         self.events: List[BatchEvent] = []
         self.schedule_time = 0.0
+        self.iterations = 0
 
-    def run_trace(self, trace: Sequence[RelQuery], max_iterations: int = 2_000_000,
-                  record_events: bool = True) -> ServiceReport:
-        """Run a full arrival trace on the simulated clock."""
-        pending = sorted(trace, key=lambda r: r.arrival_time)
-        now = 0.0
-        it = 0
-        idx = 0
-        while idx < len(pending) or self.scheduler.has_work():
-            # admit arrivals up to the current clock
-            while idx < len(pending) and pending[idx].arrival_time <= now:
-                self.scheduler.add_relquery(pending[idx], now)
-                idx += 1
-            t0 = _time.perf_counter()
-            batch = self.scheduler.schedule(now)
-            self.schedule_time += _time.perf_counter() - t0
-            if batch is None:
-                if idx < len(pending):
-                    now = max(now, pending[idx].arrival_time)
-                    continue
-                break
-            duration, result = self.executor.execute(batch, now)
-            start, end = now, now + duration
-            self.scheduler.complete_batch(batch, result, start, end)
-            now = end
-            if record_events:
-                rel_ids = tuple({r.rel_id for r in batch.requests}
-                                | {r.rel_id for r in batch.decode_requests})
-                self.events.append(BatchEvent(batch.kind, start, end,
-                                              batch.num_requests,
-                                              batch.uncached_tokens, rel_ids))
-            it += 1
-            if it >= max_iterations:
-                raise RuntimeError("engine exceeded max_iterations — likely livelock")
-        return self._report(now)
+    # ------------------------------------------------------------------ steps
+    def admit(self, rq: RelQuery, now: float) -> None:
+        self.scheduler.add_relquery(rq, now)
 
-    def _report(self, end_time: float) -> ServiceReport:
+    def has_work(self) -> bool:
+        return self.scheduler.has_work()
+
+    def load(self) -> int:
+        """Outstanding requests (waiting + running) — the router's load signal."""
+        return self.scheduler.queue_depth()
+
+    def tick(self, now: float) -> Optional[BatchEvent]:
+        """Schedule + execute one batch at clock ``now``. Returns ``None`` when
+        the replica is idle (nothing admitted and unfinished); raises
+        ``EngineDeadlockError`` if work exists but can never be scheduled."""
+        t0 = _time.perf_counter()
+        batch = self.scheduler.schedule(now)
+        self.schedule_time += _time.perf_counter() - t0
+        if batch is None:
+            if self.scheduler.has_work():
+                # No candidate is constructible and no batch in flight can free
+                # KV — admitting more work or advancing the clock cannot help.
+                raise EngineDeadlockError(self.scheduler.tokens_in_use,
+                                          self.scheduler.limits.cap,
+                                          self.scheduler.stuck_rel_ids(),
+                                          self.replica_id)
+            return None
+        duration, result = self.executor.execute(batch, now)
+        start, end = now, now + duration
+        self.scheduler.complete_batch(batch, result, start, end)
+        self.iterations += 1
+        event = BatchEvent(batch.kind, start, end, batch.num_requests,
+                           batch.uncached_tokens, batch.rel_ids(),
+                           self.replica_id)
+        if self.record_events:
+            self.events.append(event)
+        return event
+
+    # ------------------------------------------------------------------ report
+    def report(self, end_time: float) -> ServiceReport:
         rqs = list(self.scheduler.relqueries.values())
         lat = {rq.rel_id: rq.latency() for rq in rqs if rq.latency() is not None}
         waiting = {rq.rel_id: rq.waiting_time() for rq in rqs}
@@ -111,5 +171,54 @@ class ServingEngine:
             dpu_time=getattr(self.scheduler, "dpu_time", 0.0),
             aba_time=getattr(self.scheduler, "aba_time", 0.0),
             prefix_hit_ratio=pc.hit_ratio if pc is not None else 0.0,
+            prefix_lookup_tokens=(getattr(pc, "hits", 0) + getattr(pc, "misses", 0)
+                                  if pc is not None else 0),
             schedule_time=self.schedule_time,
         )
+
+
+class ServingEngine:
+    """Single-replica trace driver built on ``EngineCore``."""
+
+    def __init__(self, scheduler: SchedulerBase, executor):
+        self.core = EngineCore(scheduler, executor)
+
+    @property
+    def scheduler(self) -> SchedulerBase:
+        return self.core.scheduler
+
+    @property
+    def executor(self):
+        return self.core.executor
+
+    @property
+    def events(self) -> List[BatchEvent]:
+        return self.core.events
+
+    @property
+    def schedule_time(self) -> float:
+        return self.core.schedule_time
+
+    def run_trace(self, trace: Sequence[RelQuery], max_iterations: int = 2_000_000,
+                  record_events: bool = True) -> ServiceReport:
+        """Run a full arrival trace on the simulated clock."""
+        self.core.record_events = record_events
+        pending = sorted(trace, key=lambda r: r.arrival_time)
+        now = 0.0
+        it = 0
+        idx = 0
+        while idx < len(pending) or self.core.has_work():
+            # admit arrivals up to the current clock
+            while idx < len(pending) and pending[idx].arrival_time <= now:
+                self.core.admit(pending[idx], now)
+                idx += 1
+            if not self.core.has_work():
+                now = max(now, pending[idx].arrival_time)
+                continue
+            event = self.core.tick(now)   # raises EngineDeadlockError if stuck
+            assert event is not None      # has_work() checked above
+            now = event.end
+            it += 1
+            if it >= max_iterations:
+                raise RuntimeError("engine exceeded max_iterations — likely livelock")
+        return self.core.report(now)

@@ -22,8 +22,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import latency_model as lm_mod
+from repro.core.batch import Batch
 from repro.core.relquery import Request
-from repro.core.scheduler import BatchResult, ScheduledBatch
+from repro.core.scheduler import BatchResult
 from repro.engine.prefix_cache import PrefixCache
 
 
@@ -137,39 +138,42 @@ class RealExecutor:
         return np.asarray(jnp.argmax(logits, axis=-1))
 
     # ------------------------------------------------------------------ engine API
-    def execute(self, batch: ScheduledBatch, now: float) -> Tuple[float, BatchResult]:
-        t0 = _time.perf_counter()
+    def execute(self, batch: Batch, now: float) -> Tuple[float, BatchResult]:
+        """Run one unified batch. Prefill and decode phases are timed
+        *separately* — a mixed batch contributes a prefill-only sample and a
+        decode-only sample, so ``fitted_model()`` calibration never sees
+        combined wall times."""
         outputs: Dict[str, Tuple[int, bool]] = {}
-        if batch.kind in ("prefill", "mixed"):
-            total_utok = 0
-            for r in batch.requests:
-                if batch.kind == "mixed":
-                    chunk = batch.prefill_chunks.get(r.req_id, 0)
-                    if r.prefilled_tokens + chunk < r.num_prompt_tokens:
-                        continue  # chunk not finishing the prompt: accounted only
-                tok, utok = self._prefill_one(r)
-                total_utok += utok
-                finished = self._is_finish_token(r, tok, 1)
+        prefill_dur = decode_dur = 0.0
+        prefilled_any = False
+        t0 = _time.perf_counter()
+        total_utok = 0
+        for r in batch.prefill_requests:
+            if not batch.completes_prompt(r):
+                continue  # chunk not finishing the prompt: accounted only
+            tok, utok = self._prefill_one(r)
+            total_utok += utok
+            prefilled_any = True
+            finished = self._is_finish_token(r, tok, 1)
+            outputs[r.req_id] = (tok, finished)
+            if finished:
+                self._free_slot(r.req_id)
+        prefill_dur = _time.perf_counter() - t0
+        if prefilled_any:
+            self.prefill_samples.append((total_utok, prefill_dur))
+        reqs = [r for r in batch.decode_requests if r.req_id in self._slot_of]
+        if reqs:
+            t1 = _time.perf_counter()
+            toks = self._decode_all(reqs)
+            decode_dur = _time.perf_counter() - t1
+            self.decode_samples.append((len(reqs), decode_dur))
+            for r in reqs:
+                tok = toks[r.req_id]
+                finished = self._is_finish_token(r, tok, len(r.output_tokens) + 2)
                 outputs[r.req_id] = (tok, finished)
                 if finished:
                     self._free_slot(r.req_id)
-            dur = _time.perf_counter() - t0
-            self.prefill_samples.append((total_utok, dur))
-        if batch.kind in ("decode", "mixed"):
-            reqs = batch.requests if batch.kind == "decode" else batch.decode_requests
-            reqs = [r for r in reqs if r.req_id in self._slot_of]
-            if reqs:
-                t1 = _time.perf_counter()
-                toks = self._decode_all(reqs)
-                self.decode_samples.append((len(reqs), _time.perf_counter() - t1))
-                for r in reqs:
-                    tok = toks[r.req_id]
-                    finished = self._is_finish_token(r, tok, len(r.output_tokens) + 2)
-                    outputs[r.req_id] = (tok, finished)
-                    if finished:
-                        self._free_slot(r.req_id)
-            dur = _time.perf_counter() - t0
-        return _time.perf_counter() - t0, BatchResult(outputs)
+        return prefill_dur + decode_dur, BatchResult(outputs)
 
     def _is_finish_token(self, r: Request, tok: int, produced: int) -> bool:
         if r.eos_token is not None and tok == r.eos_token:

@@ -1,18 +1,23 @@
-"""Simulated-clock executor: executes scheduler-issued batches against the
+"""Simulated-clock executor: executes scheduler-issued ``Batch``es against the
 calibrated linear cost model (paper Fig. 7) and a *real* prefix cache, so the
 scheduling decisions — the paper's subject — are identical to what the real
 engine would issue, while batch durations come from the A100/OPT-13B-regime
 constants (or any fitted model). Used by the paper-scale benchmarks.
+
+One code path handles all batch kinds: the prefill side of a batch is a set of
+(request, chunk) pairs — a pure prefill batch is simply the chunk covering the
+whole remaining prompt — and the decode side decodes one token per request.
 """
 from __future__ import annotations
 
 import random
-from dataclasses import dataclass
+import zlib
 from typing import Dict, Optional, Tuple
 
+from repro.core.batch import Batch
 from repro.core.latency_model import BatchLatencyModel
 from repro.core.relquery import Request
-from repro.core.scheduler import BatchResult, ScheduledBatch
+from repro.core.scheduler import BatchResult
 from repro.engine.prefix_cache import PrefixCache
 
 
@@ -52,56 +57,34 @@ class SimulatedExecutor:
         return slow
 
     # ------------------------------------------------------------------
-    def _true_utok(self, r: Request, chunk: Optional[int] = None) -> int:
+    def _true_utok(self, r: Request, chunk: int) -> int:
+        """Uncached tokens of the ``chunk`` next prompt tokens of ``r`` —
+        prefix-cache savings apply to the front of the prompt."""
         if self.prefix_cache is None:
             n_cached = 0
         else:
             n_cached = self.prefix_cache.count_cached(r.tokens)
-        utok = max(0, r.num_prompt_tokens - n_cached)
-        if chunk is not None:
-            # chunked prefill: cached savings apply to the first chunks
-            done = r.prefilled_tokens
-            utok = max(0, min(done + chunk, r.num_prompt_tokens) - max(done, n_cached))
-        return utok
+        done = r.prefilled_tokens
+        return max(0, min(done + chunk, r.num_prompt_tokens) - max(done, n_cached))
 
     def _token_for(self, r: Request) -> Tuple[int, bool]:
         produced = len(r.output_tokens) + 1
         target = min(sim_output_len(r), r.max_output_tokens)
         finished = produced >= target
-        token = (hash((r.req_id, produced)) & 0x7FFF) + 2
+        token = (zlib.crc32(f"{r.req_id}:{produced}".encode()) & 0x7FFF) + 2
         if finished and r.eos_token is not None:
             token = r.eos_token
         return token, finished
 
     # ------------------------------------------------------------------
-    def execute(self, batch: ScheduledBatch, now: float) -> Tuple[float, BatchResult]:
+    def execute(self, batch: Batch, now: float) -> Tuple[float, BatchResult]:
         outputs: Dict[str, Tuple[int, bool]] = {}
-        if batch.kind == "prefill":
-            utok = 0
-            for r in batch.requests:
-                utok += self._true_utok(r)
-                self.total_prefill_tokens += r.num_prompt_tokens
-                if self.prefix_cache is not None:
-                    self.prefix_cache.insert(r.tokens)
-                outputs[r.req_id] = self._token_for(r)
-            self.total_uncached_tokens += utok
-            dur = self._apply_straggler(self.lm.prefill_time(utok))
-            return dur, BatchResult(outputs, uncached_tokens=utok)
-
-        if batch.kind == "decode":
-            for r in batch.requests:
-                outputs[r.req_id] = self._token_for(r)
-            self.total_decode_tokens += len(batch.requests)
-            dur = self._apply_straggler(self.lm.decode_time(len(batch.requests)))
-            return dur, BatchResult(outputs)
-
-        # mixed (Sarathi): decode requests + prefill chunks in one pass
         utok = 0
-        for r in batch.requests:
-            chunk = batch.prefill_chunks.get(r.req_id, 0)
+        for r in batch.prefill_requests:
+            chunk = batch.chunk_of(r)
             utok += self._true_utok(r, chunk)
             self.total_prefill_tokens += chunk
-            if r.prefilled_tokens + chunk >= r.num_prompt_tokens:
+            if batch.completes_prompt(r):
                 if self.prefix_cache is not None:
                     self.prefix_cache.insert(r.tokens)
                 outputs[r.req_id] = self._token_for(r)
@@ -109,5 +92,6 @@ class SimulatedExecutor:
             outputs[r.req_id] = self._token_for(r)
         self.total_uncached_tokens += utok
         self.total_decode_tokens += len(batch.decode_requests)
-        dur = self._apply_straggler(self.lm.mixed_time(utok, len(batch.decode_requests)))
-        return dur, BatchResult(outputs, uncached_tokens=utok)
+        dur = self._apply_straggler(batch.cost(self.lm, true_uncached=utok))
+        return dur, BatchResult(outputs, uncached_tokens=utok if
+                                batch.prefill_requests else None)

@@ -2,39 +2,38 @@
 
 Two modes:
   --simulate      paper-scale traces on the simulated clock (default constants
-                  match the paper's OPT-13B/A100 regime)
+                  match the paper's OPT-13B/A100 regime); supports
+                  --num-replicas N data-parallel engine replicas behind the
+                  relQuery-affine router (repro.serving)
   (default)       real JAX execution of a smoke-scale model on this host
-
-At cluster scale each DP replica runs one engine; a front-end router hashes
-relQueries to replicas (relQuery affinity keeps prefix caching effective) —
-`route_relquery` below is that hash.
+                  (single replica — one model fits this machine)
 
   PYTHONPATH=src python -m repro.launch.serve --simulate --scheduler relserve
+  PYTHONPATH=src python -m repro.launch.serve --simulate --num-replicas 4
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --num-relqueries 4
 """
 from __future__ import annotations
 
 import argparse
 
-import jax
-
-from repro.configs import get_smoke_config
 from repro.core.latency_model import a100_opt13b
 from repro.core.policies import SCHEDULERS
 from repro.core.priority import BatchLimits, DPUConfig
 from repro.data.datasets import ALL_DATASETS, make_dataset
 from repro.data.trace import TraceConfig, build_trace
 from repro.engine.engine import ServingEngine
-from repro.engine.executor import RealExecutor
 from repro.engine.prefix_cache import PrefixCache
-from repro.engine.simulator import SimulatedExecutor
-from repro.engine.tokenizer import HashTokenizer
-from repro.models.registry import build_model
+from repro.serving import ROUTER_POLICIES, build_simulated_cluster
 
 
-def route_relquery(rel_id: str, num_replicas: int) -> int:
-    """Front-end router: relQuery-affine hashing across DP engine replicas."""
-    return hash(rel_id) % num_replicas
+def _print_report(tag: str, report) -> None:
+    w, c, t = report.phase_means()
+    print(f"[{tag}] relqueries={len(report.latencies)}  "
+          f"avg {report.avg_latency:.2f}s  p50 {report.percentile(50):.2f}  "
+          f"p99 {report.percentile(99):.2f}  max {report.max_latency:.2f}")
+    print(f"[{tag}] phases: waiting {w:.2f}s  core {c:.2f}s  tail {t:.2f}s  |  "
+          f"e2e {report.end_to_end:.1f}s  prefix-hit {report.prefix_hit_ratio:.2%}  "
+          f"iterations {len(report.events)}")
 
 
 def main() -> None:
@@ -46,25 +45,54 @@ def main() -> None:
     ap.add_argument("--num-relqueries", type=int, default=100)
     ap.add_argument("--rate", type=float, default=1.0)
     ap.add_argument("--max-requests", type=int, default=100)
+    ap.add_argument("--num-replicas", type=int, default=1,
+                    help="data-parallel engine replicas (simulate mode)")
+    ap.add_argument("--router", default="affinity_spill",
+                    choices=list(ROUTER_POLICIES))
     ap.add_argument("--starvation-threshold", type=float, default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    if args.num_replicas < 1:
+        raise SystemExit("--num-replicas must be >= 1")
     lm = a100_opt13b()
-    pc = PrefixCache(block_size=16)
-    limits = BatchLimits()
-    kw = dict(limits=limits, latency_model=lm, prefix_cache=pc)
-    if args.scheduler.startswith("relserve"):
-        kw["dpu_config"] = DPUConfig(starvation_threshold=args.starvation_threshold)
-    sched = SCHEDULERS[args.scheduler](**kw)
 
     if args.simulate:
         ds = make_dataset(args.dataset, num_rows=10_000, seed=args.seed)
         trace = build_trace(ds, TraceConfig(num_relqueries=args.num_relqueries,
                                             rate=args.rate, seed=args.seed,
                                             max_requests=args.max_requests))
-        executor = SimulatedExecutor(lm, prefix_cache=pc, seed=args.seed)
+        dpu = DPUConfig(starvation_threshold=args.starvation_threshold)
+        cluster = build_simulated_cluster(
+            args.num_replicas, scheduler=args.scheduler, latency_model=lm,
+            router_policy=args.router, dpu_config=dpu, seed=args.seed)
+        result = cluster.run_trace(trace)
+        print(f"scheduler={args.scheduler} replicas={args.num_replicas} "
+              f"router={args.router}")
+        for i, rep in enumerate(result.per_replica):
+            _print_report(f"replica {i}", rep)
+        _print_report("merged", result.merged)
+        report = result.merged
+        if args.num_replicas > 1:
+            print(f"router: {result.router_stats['routed']} routed, "
+                  f"{result.router_stats['spilled']} spilled")
     else:
+        import jax
+
+        from repro.configs import get_smoke_config
+        from repro.engine.executor import RealExecutor
+        from repro.engine.tokenizer import HashTokenizer
+        from repro.models.registry import build_model
+
+        if args.num_replicas != 1:
+            raise SystemExit("real-JAX mode runs a single replica on this host; "
+                             "use --simulate for --num-replicas > 1")
+        pc = PrefixCache(block_size=16)
+        kw = dict(limits=BatchLimits(), latency_model=lm, prefix_cache=pc)
+        if args.scheduler.startswith("relserve"):
+            kw["dpu_config"] = DPUConfig(
+                starvation_threshold=args.starvation_threshold)
+        sched = SCHEDULERS[args.scheduler](**kw)
         cfg = get_smoke_config(args.arch)
         model = build_model(cfg)
         params = model.init_params(jax.random.PRNGKey(args.seed))
@@ -80,16 +108,11 @@ def main() -> None:
                 r.max_output_tokens = rq.max_output_tokens
         executor = RealExecutor(model, params, max_slots=64, max_len=1024,
                                 prefix_cache=pc)
+        engine = ServingEngine(sched, executor)
+        report = engine.run_trace(trace)
+        print(f"scheduler={args.scheduler}")
+        _print_report("merged", report)
 
-    engine = ServingEngine(sched, executor)
-    report = engine.run_trace(trace)
-    w, c, t = report.phase_means()
-    print(f"scheduler={args.scheduler} relqueries={len(report.latencies)}")
-    print(f"avg latency {report.avg_latency:.2f}s  p50 {report.percentile(50):.2f}  "
-          f"p99 {report.percentile(99):.2f}  max {report.max_latency:.2f}")
-    print(f"phases: waiting {w:.2f}s  core {c:.2f}s  tail {t:.2f}s")
-    print(f"e2e {report.end_to_end:.1f}s  prefix-hit {report.prefix_hit_ratio:.2%}  "
-          f"iterations {len(report.events)}")
     print(f"overheads: DPU {report.dpu_time:.3f}s  ABA {report.aba_time:.3f}s  "
           f"schedule {report.schedule_time:.3f}s")
 

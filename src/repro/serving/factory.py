@@ -1,0 +1,40 @@
+"""One place to assemble a simulated multi-replica serving stack: per replica
+a private PrefixCache, a scheduler wired to it, and a SimulatedExecutor
+sharing the same cache — the pairing every driver (launch/serve, benchmarks,
+examples, tests) needs."""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.latency_model import BatchLatencyModel, a100_opt13b
+from repro.core.policies import SCHEDULERS
+from repro.core.priority import BatchLimits, DPUConfig
+from repro.engine.prefix_cache import PrefixCache
+from repro.engine.simulator import SimulatedExecutor
+from repro.serving.cluster import Cluster
+from repro.serving.router import Router
+
+
+def build_simulated_cluster(num_replicas: int, scheduler: str = "relserve",
+                            router_policy: str = "affinity_spill",
+                            latency_model: Optional[BatchLatencyModel] = None,
+                            limits: Optional[BatchLimits] = None,
+                            dpu_config: Optional[DPUConfig] = None,
+                            seed: int = 0, block_size: int = 16,
+                            router: Optional[Router] = None) -> Cluster:
+    lm = latency_model or a100_opt13b()
+    caches = {}
+
+    def make_scheduler(i: int):
+        caches[i] = PrefixCache(block_size=block_size)
+        kw = dict(limits=limits or BatchLimits(), latency_model=lm,
+                  prefix_cache=caches[i])
+        if scheduler.startswith("relserve"):
+            kw["dpu_config"] = dpu_config or DPUConfig()
+        return SCHEDULERS[scheduler](**kw)
+
+    def make_executor(i: int):
+        return SimulatedExecutor(lm, prefix_cache=caches[i], seed=seed + i)
+
+    return Cluster(make_scheduler, make_executor, num_replicas,
+                   router=router or Router(num_replicas, policy=router_policy))

@@ -1,0 +1,69 @@
+"""Front-end request router across data-parallel engine replicas.
+
+relQuery-affine hashing keeps every request of a relQuery on one replica —
+that is what keeps per-replica prefix caching effective (requests of one
+relQuery share the template prefix) and what makes relQuery latency a
+single-replica quantity. The affine policy optionally *spills over* to the
+least-loaded replica when the home replica is hot: a relQuery's requests still
+travel together (the spill decision is made once, at admission), only the home
+assignment moves.
+
+Policies:
+- ``affinity``       — pure stable-hash placement, load-blind.
+- ``affinity_spill`` — affine placement unless the home replica's load exceeds
+  ``spill_factor`` x the least-loaded replica's (plus a small absolute slack);
+  then the relQuery lands on the least-loaded replica. Default.
+- ``least_loaded``   — ignore affinity, always pick the least-loaded replica.
+- ``round_robin``    — classic baseline, load- and affinity-blind.
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Optional, Sequence
+
+from repro.core.relquery import RelQuery
+
+ROUTER_POLICIES = ("affinity", "affinity_spill", "least_loaded", "round_robin")
+
+
+def route_relquery(rel_id: str, num_replicas: int) -> int:
+    """Stable relQuery-affine hash (deterministic across processes, unlike
+    builtin ``hash`` which is seed-randomized)."""
+    return zlib.crc32(rel_id.encode()) % max(1, num_replicas)
+
+
+class Router:
+    def __init__(self, num_replicas: int, policy: str = "affinity_spill",
+                 spill_factor: float = 2.0, spill_slack: int = 8):
+        if policy not in ROUTER_POLICIES:
+            raise ValueError(f"unknown router policy {policy!r}; "
+                             f"choose from {ROUTER_POLICIES}")
+        self.num_replicas = num_replicas
+        self.policy = policy
+        self.spill_factor = spill_factor
+        self.spill_slack = spill_slack
+        self._rr = 0
+        self.stats = {"routed": 0, "spilled": 0}
+
+    def route(self, rq: RelQuery, loads: Optional[Sequence[int]] = None) -> int:
+        """Pick the replica for ``rq``. ``loads`` is the per-replica
+        outstanding-request count at admission time (required by the
+        load-aware policies)."""
+        self.stats["routed"] += 1
+        if self.num_replicas <= 1:
+            return 0
+        if self.policy == "round_robin":
+            r = self._rr
+            self._rr = (self._rr + 1) % self.num_replicas
+            return r
+        home = route_relquery(rq.rel_id, self.num_replicas)
+        if self.policy == "affinity" or loads is None:
+            return home
+        coldest = min(range(self.num_replicas), key=lambda i: (loads[i], i))
+        if self.policy == "least_loaded":
+            return coldest
+        # affinity_spill: stay home unless home is disproportionately hot.
+        if loads[home] > loads[coldest] * self.spill_factor + self.spill_slack:
+            self.stats["spilled"] += 1
+            return coldest
+        return home

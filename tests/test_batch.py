@@ -1,0 +1,68 @@
+"""Unit tests for the unified Batch abstraction: cost() against the linear
+latency model for every kind, chunk semantics, and the legacy aliases."""
+import pytest
+
+from repro.core.batch import Batch, CandidateBatch, ScheduledBatch
+from repro.core.latency_model import a100_opt13b
+from repro.core.relquery import make_relquery
+
+
+def _rq(rel_id="a", n=4, tok=50, ol=8):
+    return make_relquery(rel_id, [[1] * tok] * n, 0.0, ol)
+
+
+def test_cost_matches_latency_model_per_kind():
+    lm = a100_opt13b()
+    rq = _rq()
+    p = Batch.prefill(rq.requests, uncached_tokens=120, relquery=rq)
+    assert p.cost(lm) == pytest.approx(lm.prefill_time(120))
+    d = Batch.decode(rq.requests)
+    assert d.cost(lm) == pytest.approx(lm.decode_time(4))
+    m = Batch.mixed(rq.requests[:2], rq.requests[2:],
+                    {r.req_id: 10 for r in rq.requests[:2]}, uncached_tokens=20)
+    assert m.cost(lm) == pytest.approx(lm.mixed_time(20, 2))
+    # executors substitute the measured uncached count
+    assert p.cost(lm, true_uncached=40) == pytest.approx(lm.prefill_time(40))
+    assert m.cost(lm, true_uncached=5) == pytest.approx(lm.mixed_time(5, 2))
+
+
+def test_chunk_semantics():
+    rq = _rq(tok=100)
+    r = rq.requests[0]
+    full = Batch.prefill([r], uncached_tokens=100)
+    assert full.chunk_of(r) == 100 and full.completes_prompt(r)
+    part = Batch.mixed([r], [], {r.req_id: 30}, uncached_tokens=30)
+    assert part.chunk_of(r) == 30 and not part.completes_prompt(r)
+    r.prefilled_tokens = 70
+    assert part.completes_prompt(r)          # 70 + 30 covers the prompt
+    assert full.chunk_of(r) == 30            # default chunk = remaining prompt
+
+
+def test_views_and_priorities():
+    rq = _rq()
+    m = Batch.mixed(rq.requests[:1], rq.requests[1:], {})
+    assert m.num_requests == 4
+    assert m.all_requests() == rq.requests
+    assert m.rel_ids() == ("a",)
+    prio = {r.req_id: float(i) for i, r in enumerate(rq.requests)}
+    assert m.min_priority(lambda r: prio[r.req_id]) == 0.0
+    assert m.min_prefill_priority(lambda r: prio[r.req_id]) == 0.0
+    d = Batch.decode(rq.requests)
+    assert d.requests == rq.requests         # legacy primary-list view
+    with pytest.raises(ValueError):
+        Batch("bogus")
+
+
+def test_legacy_aliases_build_unified_batches():
+    rq = _rq()
+    c = CandidateBatch(rq.requests, uncached_tokens=7, relquery=rq)
+    assert isinstance(c, Batch) and c.kind == "prefill"
+    assert c.uncached_tokens == 7 and c.relquery is rq
+
+    s = ScheduledBatch("decode", rq.requests)
+    assert isinstance(s, Batch) and s.decode_requests == rq.requests
+    mixed = ScheduledBatch("mixed", rq.requests[:2], uncached_tokens=3,
+                           decode_requests=rq.requests[2:],
+                           prefill_chunks={rq.requests[0].req_id: 3})
+    assert mixed.kind == "mixed" and mixed.num_requests == 4
+    assert mixed.prefill_chunks[rq.requests[0].req_id] == 3

@@ -1,0 +1,124 @@
+"""Serving layer: Router policies and the multi-replica Cluster — relQuery
+affinity, spillover, merged reporting, and replica-scaling speedup."""
+import copy
+
+import pytest
+
+from repro.core.latency_model import a100_opt13b
+from repro.core.policies import SCHEDULERS
+from repro.core.priority import BatchLimits, DPUConfig
+from repro.core.relquery import make_relquery
+from repro.data.trace import quick_trace
+from repro.engine.prefix_cache import PrefixCache
+from repro.engine.simulator import SimulatedExecutor
+from repro.serving import Router, build_simulated_cluster, route_relquery
+
+
+def _mk_cluster(n, scheduler="relserve", policy="affinity_spill"):
+    return build_simulated_cluster(n, scheduler=scheduler, router_policy=policy)
+
+
+# ---------------------------------------------------------------- router
+def test_route_relquery_deterministic_and_in_range():
+    for n in (1, 2, 4, 7):
+        for rel_id in ("q0", "q1", "orders", "reviews"):
+            r = route_relquery(rel_id, n)
+            assert 0 <= r < n
+            assert r == route_relquery(rel_id, n)   # stable
+
+
+def test_router_policies():
+    rq = make_relquery("q7", [[1] * 4], 0.0, 2)
+    rr = Router(3, policy="round_robin")
+    assert [rr.route(rq) for _ in range(4)] == [0, 1, 2, 0]
+
+    ll = Router(3, policy="least_loaded")
+    assert ll.route(rq, loads=[5, 1, 9]) == 1
+
+    home = route_relquery("q7", 3)
+    aff = Router(3, policy="affinity")
+    assert aff.route(rq, loads=[1000, 1000, 1000]) == home
+
+    spill = Router(3, policy="affinity_spill", spill_factor=2.0, spill_slack=0)
+    loads = [0, 0, 0]
+    assert spill.route(rq, loads) == home           # cold home: stay
+    loads = [1, 1, 1]
+    loads[home] = 100                               # hot home: spill to coldest
+    routed = spill.route(rq, loads)
+    assert routed != home and spill.stats["spilled"] == 1
+
+    with pytest.raises(ValueError):
+        Router(2, policy="bogus")
+
+
+# ---------------------------------------------------------------- cluster
+TRACE = quick_trace("rotten", num_relqueries=30, rate=1.5, seed=11, max_requests=40)
+
+
+def test_cluster_relquery_affinity():
+    """Every request of a relQuery lands on exactly one replica."""
+    cluster = _mk_cluster(3, policy="affinity")
+    result = cluster.run_trace(copy.deepcopy(TRACE))
+    assert len(result.merged.latencies) == len(TRACE)
+    assert set(result.assignments.values()) <= {0, 1, 2}
+    for i, rep in enumerate(result.per_replica):
+        for ev in rep.events:
+            assert ev.replica == i
+            for rel_id in ev.rel_ids:
+                assert result.assignments[rel_id] == i
+    # pure hashing matches the stable route function
+    for rel_id, replica in result.assignments.items():
+        assert replica == route_relquery(rel_id, 3)
+
+
+def test_two_replicas_no_slower_than_one():
+    """Paper-style loaded trace: 2 affine replicas beat (or match) 1."""
+    heavy = quick_trace("rotten", num_relqueries=60, rate=1.0, seed=7,
+                        max_requests=100, num_rows=10_000)
+    rep1 = _mk_cluster(1).run_trace(copy.deepcopy(heavy)).merged
+    rep2 = _mk_cluster(2).run_trace(copy.deepcopy(heavy)).merged
+    assert len(rep1.latencies) == len(rep2.latencies) == len(heavy)
+    assert rep2.avg_latency <= rep1.avg_latency
+
+
+def test_single_replica_cluster_matches_serving_engine():
+    from repro.engine.engine import ServingEngine
+    lm = a100_opt13b()
+    pc = PrefixCache(block_size=16)
+    sched = SCHEDULERS["relserve"](limits=BatchLimits(), latency_model=lm,
+                                   prefix_cache=pc, dpu_config=DPUConfig())
+    eng = ServingEngine(sched, SimulatedExecutor(lm, prefix_cache=pc, seed=0))
+    single = eng.run_trace(copy.deepcopy(TRACE))
+    clustered = _mk_cluster(1).run_trace(copy.deepcopy(TRACE)).merged
+    assert clustered.latencies == single.latencies
+    assert clustered.end_to_end == pytest.approx(single.end_to_end)
+
+
+def test_inflight_batch_counts_as_load():
+    """Regression (review finding): a tick retires its batch at batch-start
+    ordering, so an arrival landing inside a long in-flight batch must still
+    see that replica as busy — not get routed onto it while an idle replica
+    sits next door."""
+    from repro.core.relquery import make_relquery
+
+    cluster = _mk_cluster(2, policy="least_loaded")
+    # A keeps replica 0 busy for a long stretch (long decode tail)
+    a = make_relquery("A", [[1] * 50], 0.0, 400)
+    # B arrives while A's first batches are in flight
+    b = make_relquery("B", [[2] * 50], 0.5, 5)
+    result = cluster.run_trace([a, b])
+    assert result.assignments["A"] != result.assignments["B"], \
+        "arrival during an in-flight batch was routed onto the busy replica"
+    # B on the idle replica finishes promptly instead of queueing behind A
+    assert result.merged.latencies["B"] < result.merged.latencies["A"]
+
+
+def test_merged_report_consistency():
+    cluster = _mk_cluster(4)
+    result = cluster.run_trace(copy.deepcopy(TRACE))
+    merged, parts = result.merged, result.per_replica
+    assert sum(len(p.latencies) for p in parts) == len(merged.latencies)
+    assert merged.end_to_end == max(p.end_to_end for p in parts)
+    assert len(merged.events) == sum(len(p.events) for p in parts)
+    starts = [e.start for e in merged.events]
+    assert starts == sorted(starts)          # merged timeline is time-ordered

@@ -1,0 +1,88 @@
+"""EngineCore step semantics: caller-owned clock, one batch per tick, idle
+signalling, and the descriptive deadlock error replacing silent drops."""
+import pytest
+
+from repro.core.latency_model import a100_opt13b
+from repro.core.policies import SCHEDULERS
+from repro.core.priority import BatchLimits
+from repro.core.relquery import make_relquery
+from repro.engine.engine import EngineCore, EngineDeadlockError, ServingEngine
+from repro.engine.simulator import SimulatedExecutor
+
+
+def _core(cap=16384, sched_name="relserve"):
+    lm = a100_opt13b()
+    sched = SCHEDULERS[sched_name](limits=BatchLimits(cap=cap), latency_model=lm)
+    return EngineCore(sched, SimulatedExecutor(lm))
+
+
+def test_tick_steps_one_batch_at_a_time():
+    core = _core()
+    assert core.tick(0.0) is None            # nothing admitted -> idle
+    rq = make_relquery("a", [[1] * 40] * 3, 0.0, 2)
+    core.admit(rq, 0.0)
+    assert core.has_work() and core.load() == 3
+
+    ev = core.tick(5.0)                      # caller chose the clock
+    assert ev.kind == "prefill" and ev.start == 5.0 and ev.end > 5.0
+    assert rq.first_prefill_start == 5.0
+
+    ev2 = core.tick(ev.end)
+    assert ev2.kind == "decode" and ev2.start == ev.end
+    assert not core.has_work()               # OL=2: prefill tok + 1 decode tok
+    assert core.tick(ev2.end) is None        # drained -> idle again
+    assert core.iterations == 2
+    assert rq.latency() == pytest.approx(ev2.end)
+
+
+def test_tick_raises_descriptive_deadlock():
+    core = _core(cap=50)                     # request needs 100 + 10 > 50
+    rq = make_relquery("stuck", [[1] * 100], 0.0, 10)
+    core.admit(rq, 0.0)
+    with pytest.raises(EngineDeadlockError) as ei:
+        core.tick(0.0)
+    err = ei.value
+    assert err.tokens_in_use == 0 and err.cap == 50
+    assert err.stuck_rel_ids == ["stuck"]
+    assert "stuck" in str(err) and "cap=50" in str(err)
+
+
+def test_run_trace_surfaces_deadlock_instead_of_silent_drop():
+    lm = a100_opt13b()
+    sched = SCHEDULERS["vllm"](limits=BatchLimits(cap=64), latency_model=lm)
+    engine = ServingEngine(sched, SimulatedExecutor(lm))
+    ok = make_relquery("fits", [[1] * 10], 0.0, 4)
+    bad = make_relquery("too-big", [[1] * 200], 1.0, 4)
+    with pytest.raises(EngineDeadlockError) as ei:
+        engine.run_trace([ok, bad])
+    assert "too-big" in ei.value.stuck_rel_ids
+
+
+def test_run_trace_equivalent_to_manual_ticks():
+    """ServingEngine is exactly the EngineCore step loop."""
+    trace = [make_relquery("a", [[1] * 30] * 2, 0.0, 3),
+             make_relquery("b", [[2] * 25] * 2, 0.1, 3)]
+    import copy
+    t1, t2 = copy.deepcopy(trace), copy.deepcopy(trace)
+
+    lm = a100_opt13b()
+    eng = ServingEngine(SCHEDULERS["relserve"](latency_model=lm),
+                        SimulatedExecutor(lm))
+    rep = eng.run_trace(t1)
+
+    core = EngineCore(SCHEDULERS["relserve"](latency_model=lm),
+                      SimulatedExecutor(lm))
+    now, idx = 0.0, 0
+    pending = sorted(t2, key=lambda r: r.arrival_time)
+    while idx < len(pending) or core.has_work():
+        while idx < len(pending) and pending[idx].arrival_time <= now:
+            core.admit(pending[idx], now)
+            idx += 1
+        if not core.has_work():
+            now = pending[idx].arrival_time
+            continue
+        ev = core.tick(now)
+        now = ev.end
+    manual = core.report(now)
+    assert manual.latencies == rep.latencies
+    assert manual.end_to_end == rep.end_to_end

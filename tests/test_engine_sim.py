@@ -69,7 +69,8 @@ def test_starvation_threshold_bounds_max_latency():
     t_off = copy.deepcopy(TRACE)
     t_on = copy.deepcopy(TRACE)
     rep_off, _ = _run("relserve", t_off)
-    rep_on, _ = _run("relserve", t_on, starvation_threshold=0.05)
+    rep_on, sched_on = _run("relserve", t_on, starvation_threshold=0.05)
+    assert sched_on.dpu.stats["starvation_promotions"] > 0
     assert rep_on.max_latency <= rep_off.max_latency + 1e-9
 
 

@@ -3,7 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.distributed.sharding import (
     gqa_layout, pack_kv_weight, pack_q_weight, unpack_q_output,

@@ -1,6 +1,7 @@
 """Prefix cache + paged block manager invariants (unit + hypothesis)."""
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.engine.kv_cache import BlockManager, OutOfBlocks
 from repro.engine.prefix_cache import PrefixCache, block_hashes

@@ -1,15 +1,16 @@
 """Scheduler-core unit + property tests: Algorithm 1 decomposition, DPU
 reuse/starvation, ABA case logic (Eq. 14-17), queue-state invariants."""
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core.arranger import AdaptiveBatchArranger, CandidateBatch
+from _hypothesis_compat import given, settings, st
+from repro.core.arranger import AdaptiveBatchArranger
+from repro.core.batch import Batch
 from repro.core.latency_model import BatchLatencyModel, a100_opt13b, fit
 from repro.core.priority import (
     BatchLimits, DPUConfig, DynamicPriorityUpdater, batch_decompose,
 )
 from repro.core.relquery import RequestState, make_relquery
-from repro.core.scheduler import BatchResult, RelServeScheduler, ScheduledBatch
+from repro.core.scheduler import BatchResult, RelServeScheduler
 
 
 # ---------------------------------------------------------------- Algorithm 1
@@ -100,7 +101,7 @@ def test_cache_miss_ratio_sampling():
 
 # ---------------------------------------------------------------- ABA
 def _cand(reqs, utok=0, rq=None):
-    return CandidateBatch(requests=reqs, uncached_tokens=utok, relquery=rq)
+    return Batch.prefill(reqs, uncached_tokens=utok, relquery=rq)
 
 
 def test_aba_cases():
@@ -112,19 +113,74 @@ def test_aba_cases():
         r.state = RequestState.RUNNING
         r.prefilled = True
     prio = {"run": 5.0, "wait": 1.0}
-    d = _cand(run_rq.requests)
+    d = Batch.decode(run_rq.requests)
     p = _cand(wait_rq.requests, utok=400, rq=wait_rq)
-    dec = aba.choose(p, d, [run_rq], [wait_rq], lambda r: prio[r.rel_id])
+    dec = aba.choose([p, d], [run_rq], [wait_rq], lambda r: prio[r.rel_id])
     assert dec.kind == "prefill" and dec.case == "preempt"    # m+ > m-
 
     prio = {"run": 1.0, "wait": 1.0}
-    dec = aba.choose(p, d, [run_rq], [wait_rq], lambda r: prio[r.rel_id])
+    dec = aba.choose([p, d], [run_rq], [wait_rq], lambda r: prio[r.rel_id])
     assert dec.kind == "prefill" and dec.case == "internal"   # m+ == m-
 
     prio = {"run": 1.0, "wait": 5.0}
-    dec = aba.choose(p, d, [run_rq], [wait_rq], lambda r: prio[r.rel_id])
+    dec = aba.choose([p, d], [run_rq], [wait_rq], lambda r: prio[r.rel_id])
     assert dec.case == "transitional"                          # m+ < m-
     assert dec.delta is not None
+
+
+def test_aba_multi_candidate_mixed_beats_prefill():
+    """Transitional case with three candidates: the chunked-mixed batch stalls
+    the running relQuery less than a pure prefill pass (the decode rides
+    along), so when Δ picks a winner it must be the mixed batch."""
+    lm = a100_opt13b()
+    aba = AdaptiveBatchArranger(lm)
+    run_rq = _mk_rq("run", 4, 100, 20)
+    for r in run_rq.requests:
+        r.state = RequestState.RUNNING
+        r.prefilled = True
+    wait_rq = _mk_rq("wait", 8, 100, 20)
+    p = _cand(wait_rq.requests, utok=800, rq=wait_rq)
+    m = Batch.mixed(wait_rq.requests, run_rq.requests,
+                    {r.req_id: r.num_prompt_tokens for r in wait_rq.requests},
+                    uncached_tokens=800)
+    d = Batch.decode(run_rq.requests)
+    prio = {"run": 1.0, "wait": 5.0}                     # m+ < m-: transitional
+    waiting = [_mk_rq(f"w{i}", 4, 100, 20) for i in range(30)]
+
+    assert aba.delta_latency(m, [run_rq], waiting) < \
+        aba.delta_latency(p, [run_rq], waiting) < 0
+    dec = aba.choose([p, d, m], [run_rq], waiting, lambda r: prio[r.rel_id])
+    assert dec.kind == "mixed" and dec.case == "transitional"
+    assert aba.stats["transitional_mixed"] == 1
+
+    # with nobody waiting to amortize, both prefill-side deltas are positive
+    # and the arranger sticks to decoding
+    dec = aba.choose([p, d, m], [run_rq], [], lambda r: prio[r.rel_id])
+    assert dec.kind == "decode" and dec.case == "transitional"
+
+
+def test_relserve_emits_mixed_on_loaded_trace():
+    """End-to-end: the ABA actually schedules chunked-mixed batches (a case
+    the pre-unification scheduler could not construct)."""
+    import copy
+
+    from repro.data.trace import quick_trace
+    from repro.engine.engine import ServingEngine
+    from repro.engine.prefix_cache import PrefixCache
+    from repro.engine.simulator import SimulatedExecutor
+
+    lm = a100_opt13b()
+    pc = PrefixCache(block_size=16)
+    sched = RelServeScheduler(limits=BatchLimits(), latency_model=lm,
+                              prefix_cache=pc)
+    trace = quick_trace("rotten", num_relqueries=25, rate=1.2, seed=11,
+                        max_requests=40)
+    report = ServingEngine(sched, SimulatedExecutor(lm, prefix_cache=pc)) \
+        .run_trace(copy.deepcopy(trace))
+    kinds = {e.kind for e in report.events}
+    assert "mixed" in kinds, "ABA never chose a chunked-mixed batch"
+    assert sched.aba.stats["transitional_mixed"] >= 1
+    assert len(report.latencies) == len(trace)
 
 
 def test_aba_delta_signs():
@@ -168,6 +224,92 @@ def test_scheduler_state_machine():
     assert rq.waiting_time() == 0.0
     assert rq.core_running_time() == 1.0
     assert rq.tail_running_time() == 2.0
+
+
+def test_chunked_prefill_respects_kv_cap():
+    """Regression: starting a chunked prefill commits the request's whole
+    prompt+output KV footprint. Without the reservation, co-chunking a second
+    request against the cap overcommits once both prompts complete."""
+    from repro.core.policies import SarathiScheduler
+    from repro.engine.engine import EngineCore
+    from repro.engine.simulator import SimulatedExecutor
+
+    lm = a100_opt13b()
+    limits = BatchLimits(max_num_batched_tokens=32, max_num_seqs=8, cap=260)
+    sched = SarathiScheduler(limits=limits, latency_model=lm)
+    core = EngineCore(sched, SimulatedExecutor(lm))
+    a = make_relquery("A", [[1] * 200], 0.0, 20)   # footprint 220
+    b = make_relquery("B", [[2] * 100], 0.0, 20)   # footprint 120: can't coexist
+    core.admit(a, 0.0)
+    core.admit(b, 0.0)
+    now, peak = 0.0, 0
+    while core.has_work():
+        ev = core.tick(now)
+        now = ev.end
+        peak = max(peak, sched.tokens_in_use)
+        assert sched.tokens_in_use <= sched.committed_tokens <= limits.cap
+    assert peak <= limits.cap
+    assert sched.tokens_in_use == 0 and sched.committed_tokens == 0
+    assert a.is_finished() and b.is_finished()
+
+
+def test_prefill_admission_reserves_decode_growth():
+    """Regression (review finding): admitting against *current* KV usage
+    overcommits once running requests decode toward their output limit —
+    admission must price the full prompt+output footprint."""
+    from repro.core.policies import VLLMScheduler
+    from repro.engine.engine import EngineCore
+    from repro.engine.simulator import SimulatedExecutor
+
+    lm = a100_opt13b()
+    limits = BatchLimits(cap=100)
+    sched = VLLMScheduler(limits=limits, latency_model=lm)
+    core = EngineCore(sched, SimulatedExecutor(lm))
+    # footprint 60 each: only one fits under cap=100 at a time
+    core.admit(make_relquery("A", [[1] * 10], 0.0, 50), 0.0)
+    core.admit(make_relquery("B", [[2] * 10], 0.0, 50), 0.0)
+    now, peak = 0.0, 0
+    while core.has_work():
+        ev = core.tick(now)
+        now = ev.end
+        peak = max(peak, sched.tokens_in_use)
+        assert sched.tokens_in_use <= sched.committed_tokens <= limits.cap
+    assert peak <= limits.cap
+    assert sched.committed_tokens == 0
+
+
+def test_committed_request_not_deadlocked_behind_big_newcomer():
+    """Regression (review finding): a partially-chunked request whose KV is
+    already committed must stay schedulable when a too-big newcomer jumps
+    ahead of it in the queue — not escalate to a spurious deadlock."""
+    from repro.core.policies import VLLMScheduler
+    from repro.engine.engine import EngineCore
+    from repro.engine.simulator import SimulatedExecutor
+
+    lm = a100_opt13b()
+    sched = VLLMScheduler(limits=BatchLimits(cap=300), latency_model=lm)
+    core = EngineCore(sched, SimulatedExecutor(lm))
+    b = make_relquery("B", [[2] * 100], 0.0, 20)    # FCFS head, footprint 120
+    a = make_relquery("A", [[1] * 200], 1.0, 20)    # footprint 220
+    core.admit(b, 0.0)
+    core.admit(a, 1.0)
+    # A is mid-chunk: its whole footprint is committed, nothing is running
+    ra = a.requests[0]
+    ra.prefilled_tokens = 100
+    sched.committed_tokens = 220
+    # head-of-line B (120) does not fit on top of A's commitment (220+120>300),
+    # but A itself is already committed -> must be offered, not deadlocked
+    batch = sched.schedule(now=2.0)
+    assert batch is not None and batch.kind == "prefill"
+    assert batch.prefill_requests == [ra]
+    # and the engine drains the whole backlog without raising
+    now = 2.0
+    while core.has_work():
+        ev = core.tick(now)
+        now = ev.end
+        assert sched.tokens_in_use <= sched.committed_tokens <= sched.limits.cap
+    assert a.is_finished() and b.is_finished()
+    assert sched.committed_tokens == 0
 
 
 def test_latency_model_fit_recovers_params():
