@@ -65,3 +65,38 @@ def shared_trace(dataset: str, rate: float, num_relqueries: int = 100,
 
 def csv_row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.1f},{derived}"
+
+
+# ------------------------------------------------------------------ artifacts
+def report_metrics(report: ServiceReport) -> dict:
+    """The machine-readable slice of a ServiceReport tracked across PRs."""
+    w, c, t = report.phase_means()
+    return {
+        "relqueries": len(report.latencies),
+        "avg_latency_s": report.avg_latency,
+        "p50_latency_s": report.percentile(50),
+        "p99_latency_s": report.percentile(99),
+        "max_latency_s": report.max_latency,
+        "phase_means_s": {"waiting": w, "core": c, "tail": t},
+        "end_to_end_s": report.end_to_end,
+        "prefix_hit_ratio": report.prefix_hit_ratio,
+        "iterations": len(report.events),
+        "overheads_s": {"dpu": report.dpu_time, "aba": report.aba_time,
+                        "schedule": report.schedule_time},
+        "cancelled": list(report.cancelled_rel_ids),
+    }
+
+
+def write_bench_json(name: str, payload: dict, out_dir: Optional[str] = None) -> str:
+    """Write a ``BENCH_<name>.json`` artifact (dir override: $BENCH_OUT_DIR)
+    so the perf trajectory is diffable across PRs."""
+    import json
+    import os
+    from pathlib import Path
+
+    out = Path(out_dir or os.environ.get("BENCH_OUT_DIR", "."))
+    out.mkdir(parents=True, exist_ok=True)
+    path = out / f"BENCH_{name}.json"
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    print(f"wrote {path}", flush=True)
+    return str(path)

@@ -1,0 +1,79 @@
+"""Open-loop frontend benchmark: serving latency and frontend overhead.
+
+Replays one paper-scale trace two ways on the simulated clock —
+(a) the closed-loop compatibility shim (``ServingEngine.run_trace``) and
+(b) the open-loop ``Frontend`` with a token-streaming callback on every
+relQuery — and checks they produce identical per-relQuery latencies while
+measuring what the open-loop machinery costs in wall-clock terms (scheduler
+overheads plus streaming delivery). Writes ``BENCH_open_loop_latency.json``.
+
+  PYTHONPATH=src python -m benchmarks.open_loop_latency
+"""
+from __future__ import annotations
+
+import copy
+import time
+
+from benchmarks.common import report_metrics, shared_trace, write_bench_json
+from repro.core.latency_model import a100_opt13b
+from repro.core.policies import SCHEDULERS
+from repro.core.priority import BatchLimits, DPUConfig
+from repro.engine.engine import ServingEngine
+from repro.engine.prefix_cache import PrefixCache
+from repro.engine.simulator import SimulatedExecutor
+from repro.serving import Frontend
+
+
+def _engine(scheduler: str, seed: int) -> ServingEngine:
+    lm = a100_opt13b()
+    pc = PrefixCache(block_size=16)
+    kw = dict(limits=BatchLimits(), latency_model=lm, prefix_cache=pc)
+    if scheduler.startswith("relserve"):
+        kw["dpu_config"] = DPUConfig()
+    return ServingEngine(SCHEDULERS[scheduler](**kw),
+                         SimulatedExecutor(lm, prefix_cache=pc, seed=seed))
+
+
+def run(dataset: str = "rotten", rate: float = 1.5, num_relqueries: int = 80,
+        scheduler: str = "relserve", seed: int = 0,
+        write_json: bool = True) -> dict:
+    trace = shared_trace(dataset, rate, num_relqueries, seed)
+
+    t0 = time.perf_counter()
+    closed_report = _engine(scheduler, seed).run_trace(copy.deepcopy(trace))
+    closed_wall = time.perf_counter() - t0
+
+    streamed = {"tokens": 0}
+    fe = Frontend(_engine(scheduler, seed))
+    t0 = time.perf_counter()
+    fe.replay(copy.deepcopy(trace),
+              on_token=lambda req_id, tok: streamed.__setitem__(
+                  "tokens", streamed["tokens"] + 1))
+    open_report = fe.snapshot()
+    open_wall = time.perf_counter() - t0
+
+    if closed_report.latencies != open_report.latencies:
+        raise AssertionError("open-loop replay diverged from the closed-loop "
+                             "shim — scheduling equivalence broken")
+
+    payload = {
+        "bench": "open_loop_latency",
+        "config": {"dataset": dataset, "rate": rate,
+                   "num_relqueries": num_relqueries, "scheduler": scheduler,
+                   "seed": seed},
+        "closed_loop": {**report_metrics(closed_report),
+                        "wall_s": closed_wall},
+        "open_loop": {**report_metrics(open_report), "wall_s": open_wall,
+                      "streamed_tokens": streamed["tokens"]},
+        "frontend_overhead_wall_s": open_wall - closed_wall,
+    }
+    print(f"closed-loop wall {closed_wall:.2f}s | open-loop wall {open_wall:.2f}s "
+          f"({streamed['tokens']} tokens streamed) | "
+          f"avg latency {open_report.avg_latency:.2f}s (identical)")
+    if write_json:
+        write_bench_json("open_loop_latency", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -13,7 +13,8 @@ from __future__ import annotations
 import copy
 from typing import List
 
-from benchmarks.common import csv_row, shared_trace
+from benchmarks.common import (csv_row, report_metrics, shared_trace,
+                               write_bench_json)
 from repro.serving import build_simulated_cluster
 
 
@@ -27,17 +28,23 @@ def run_replicas(trace, num_replicas: int, scheduler: str = "relserve",
 def run(dataset: str = "rotten", rate: float = 2.0, num_relqueries: int = 120,
         replica_counts=(1, 2, 3, 4), scheduler: str = "relserve",
         router_policy: str = "affinity_spill", seed: int = 0,
-        quiet: bool = False, strict: bool = False) -> List[str]:
+        quiet: bool = False, strict: bool = False,
+        write_json: bool = True) -> List[str]:
     """Sweep replica counts on one trace. With ``strict`` (the default-trace
     acceptance check in ``__main__``) a latency regression between counts is
     an error; custom sweeps report the rows and let the caller judge —
-    statistical monotonicity need not be pointwise at every rate/seed."""
+    statistical monotonicity need not be pointwise at every rate/seed.
+    Unless ``write_json`` is off, the sweep also lands a machine-readable
+    ``BENCH_replica_scaling.json`` artifact."""
     trace = shared_trace(dataset, rate, num_relqueries, seed)
     rows = []
+    cells = []
     prev = None
     for n in replica_counts:
         result = run_replicas(trace, n, scheduler, router_policy, seed)
         rep = result.merged
+        cells.append({"replicas": n, "spilled": result.router_stats["spilled"],
+                      **report_metrics(rep)})
         note = ""
         if prev is not None:
             note = f"speedup_vs_prev={prev / rep.avg_latency:.2f}x"
@@ -56,6 +63,15 @@ def run(dataset: str = "rotten", rate: float = 2.0, num_relqueries: int = 120,
             f"{note}".strip()))
         if not quiet:
             print(rows[-1], flush=True)
+    if write_json:
+        write_bench_json("replica_scaling", {
+            "bench": "replica_scaling",
+            "config": {"dataset": dataset, "rate": rate,
+                       "num_relqueries": num_relqueries,
+                       "scheduler": scheduler, "router": router_policy,
+                       "seed": seed},
+            "cells": cells,
+        })
     return rows
 
 

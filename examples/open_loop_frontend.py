@@ -1,0 +1,70 @@
+"""Open-loop serving via the Frontend: submit relQueries against a running
+cluster, stream tokens as they decode, cancel one mid-flight, auto-cancel one
+by deadline, and read a consistent snapshot while work is still in flight.
+
+This is the serving API the trace-replay drivers are built on — a real async
+server would run the same submit/step loop on wall-clock time.
+
+  PYTHONPATH=src python examples/open_loop_frontend.py [--num-replicas 2]
+"""
+import argparse
+
+from repro.data.trace import quick_trace
+from repro.serving import (Frontend, RelQueryCancelledError, RelQueryStatus,
+                           build_simulated_cluster)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--num-replicas", type=int, default=2)
+    ap.add_argument("--num-relqueries", type=int, default=6)
+    args = ap.parse_args()
+
+    trace = quick_trace("rotten", num_relqueries=max(4, args.num_relqueries),
+                        rate=3.0, seed=5, max_requests=12)
+    cluster = build_simulated_cluster(args.num_replicas)
+    fe = Frontend(cluster)
+
+    # 1. stream the first relQuery's tokens as they are generated
+    streamed = []
+    first = fe.submit(trace[0], on_token=lambda req_id, tok: streamed.append(tok))
+
+    # 2. the rest arrive while the engine is running; one gets a tight
+    #    deadline (auto-cancelled if not finished by then), one we cancel
+    #    ourselves mid-flight
+    deadline_h = fe.submit(trace[1], deadline=fe.now + 0.05)
+    victim = fe.submit(trace[2])
+    others = [fe.submit(rq) for rq in trace[3:]]
+
+    for _ in range(6):                       # let a few batches run...
+        fe.step()
+    victim.cancel()                          # ...then change our mind
+    snap = fe.snapshot()                     # consistent mid-flight view
+    print(f"mid-flight: {len(snap.latencies)} finished, "
+          f"{snap.cancelled_rel_ids or '[]'} cancelled, "
+          f"{len(streamed)} tokens streamed so far, clock {fe.clock:.2f}s")
+
+    # 3. result() drives the engine until a relQuery is terminal
+    rq = first.result()
+    print(f"{rq.rel_id}: finished, latency {first.latency():.2f}s, "
+          f"{sum(len(r.output_tokens) for r in rq.requests)} tokens "
+          f"({len(streamed)} streamed in generation order)")
+    try:
+        victim.result()
+    except RelQueryCancelledError as e:
+        print(f"{victim.rel_id}: {e}")
+
+    report = fe.drain()                      # run everything else to completion
+    statuses = {h.rel_id: h.status().value
+                for h in [first, deadline_h, victim, *others]}
+    print(f"final statuses: {statuses}")
+    print(f"final: {len(report.latencies)} finished relQueries, "
+          f"avg latency {report.avg_latency:.2f}s, "
+          f"cancelled {report.cancelled_rel_ids}")
+    assert deadline_h.status() in (RelQueryStatus.CANCELLED,
+                                   RelQueryStatus.FINISHED)
+    assert victim.rel_id not in report.latencies
+
+
+if __name__ == "__main__":
+    main()

@@ -27,7 +27,10 @@ def main():
     ap.add_argument("--scheduler", default="relserve", choices=list(SCHEDULERS))
     ap.add_argument("--num-relqueries", type=int, default=6)
     ap.add_argument("--max-requests", type=int, default=6)
-    ap.add_argument("--output-tokens", type=int, default=6)
+    ap.add_argument("--output-tokens", type=int, default=6,
+                    help="cap on OL(R): template output limits above this are "
+                         "clamped at trace construction (keeps CPU decoding "
+                         "affordable); smaller template limits are kept")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
@@ -37,12 +40,9 @@ def main():
     ds = make_dataset("rotten", num_rows=500, seed=0)
     trace = build_trace(ds, TraceConfig(num_relqueries=args.num_relqueries,
                                         rate=2.0, seed=1,
-                                        max_requests=args.max_requests),
+                                        max_requests=args.max_requests,
+                                        output_token_cap=args.output_tokens),
                         tokenizer=tok)
-    for rq in trace:
-        rq.max_output_tokens = args.output_tokens
-        for r in rq.requests:
-            r.max_output_tokens = args.output_tokens
 
     pc = PrefixCache(block_size=16)
     sched = SCHEDULERS[args.scheduler](limits=BatchLimits(cap=100_000),

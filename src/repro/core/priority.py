@@ -96,6 +96,10 @@ class DynamicPriorityUpdater:
         self.stats = {"pem_calls": 0, "reuses": 0, "starvation_promotions": 0,
                       "sampled_requests": 0}
 
+    def forget(self, rel_id: str) -> None:
+        """Drop per-relQuery DPU state (used when a relQuery is cancelled)."""
+        self._last_sampled.pop(rel_id, None)
+
     # ---------------------------------------------------------------- Eq. 11
     def _estimate_miss_ratio(self, rq: RelQuery, prefix_cache: Optional[PrefixCacheView]) -> float:
         if prefix_cache is None:

@@ -18,6 +18,7 @@ class RequestState(enum.Enum):
     WAITING = "waiting"
     RUNNING = "running"    # prefilled; decoding
     FINISHED = "finished"
+    CANCELLED = "cancelled"  # terminal: evicted by relQuery cancellation
 
 
 @dataclass
@@ -52,6 +53,10 @@ class Request:
     def is_finished(self) -> bool:
         return self.state == RequestState.FINISHED
 
+    def is_terminal(self) -> bool:
+        """Finished or cancelled: this request will never be scheduled again."""
+        return self.state in (RequestState.FINISHED, RequestState.CANCELLED)
+
 
 @dataclass
 class RelQuery:
@@ -67,6 +72,7 @@ class RelQuery:
     first_prefill_start: Optional[float] = None
     last_prefill_end: Optional[float] = None
     finish_time: Optional[float] = None
+    cancel_time: Optional[float] = None    # terminal: set once by cancellation
 
     # --- scheduling state ---
     priority: float = 0.0
@@ -86,8 +92,12 @@ class RelQuery:
         return len(self.requests)
 
     def active_requests(self) -> List[Request]:
-        """R_t: requests not yet finished."""
-        return [r for r in self.requests if not r.is_finished()]
+        """R_t: requests not yet finished (or cancelled)."""
+        return [r for r in self.requests if not r.is_terminal()]
+
+    @property
+    def cancelled(self) -> bool:
+        return self.cancel_time is not None
 
     def waiting_requests(self) -> List[Request]:
         return [r for r in self.requests if r.state == RequestState.WAITING]

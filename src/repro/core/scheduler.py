@@ -74,7 +74,8 @@ class SchedulerBase:
         pass
 
     def active_relqueries(self) -> List[RelQuery]:
-        return [rq for rq in self.relqueries.values() if not rq.is_finished()]
+        return [rq for rq in self.relqueries.values()
+                if not rq.is_finished() and not rq.cancelled]
 
     def waiting_requests(self) -> List[Request]:
         out = []
@@ -233,6 +234,40 @@ class SchedulerBase:
         return Batch.mixed(prefill_reqs, decode_reqs, chunks,
                            uncached_tokens=utok_sum)
 
+    # ------------------------------------------------------------- cancellation
+    def cancel_relquery(self, rel_id: str, now: float) -> List[Request]:
+        """Evict every waiting and running request of ``rel_id`` and reclaim
+        its KV commitment. The relQuery becomes terminal (``cancel_time`` set)
+        and is excluded from latency reporting; already-finished requests keep
+        their outputs. Returns the evicted requests (for executor cleanup —
+        they may hold decode slots). Idempotent: a finished or already
+        cancelled relQuery returns []."""
+        rq = self.relqueries.get(rel_id)
+        if rq is None or rq.finish_time is not None or rq.cancel_time is not None:
+            return []
+        cancelled = list(self._waiting_of.pop(rel_id, []))
+        mine = [r for r in self._running if r.rel_id == rel_id]
+        if mine:
+            self._running = [r for r in self._running if r.rel_id != rel_id]
+            cancelled.extend(mine)
+        for r in cancelled:
+            # RUNNING requests hold prompt + generated tokens in the KV cache;
+            # any request past its first prefill chunk holds a full-footprint
+            # commitment (mirrors complete_batch / _finish_request accounting).
+            if r.state == RequestState.RUNNING:
+                self.tokens_in_use -= r.total_tokens
+            if r.prefilled_tokens > 0:
+                self.committed_tokens -= self._kv_footprint(r)
+            r.state = RequestState.CANCELLED
+            r.finish_time = now
+        rq.cancel_time = now
+        self._unfinished -= 1
+        self.on_relquery_cancelled(rq, now)
+        return cancelled
+
+    def on_relquery_cancelled(self, rq: RelQuery, now: float) -> None:
+        pass
+
     # ------------------------------------------------------------- lifecycle
     def schedule(self, now: float) -> Optional[Batch]:
         raise NotImplementedError
@@ -311,6 +346,11 @@ class RelServeScheduler(SchedulerBase):
         # wall-clock overhead instrumentation (paper Table 6)
         self.dpu_time = 0.0
         self.aba_time = 0.0
+
+    def on_relquery_cancelled(self, rq: RelQuery, now: float) -> None:
+        # The DPU keeps a per-relQuery resample clock; drop it so the entry
+        # can't alias a future relQuery reusing the id.
+        self.dpu.forget(rq.rel_id)
 
     def _dpu_targets(self) -> List[RelQuery]:
         """relQueries whose priority may need a refresh this iteration: every

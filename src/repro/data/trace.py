@@ -20,6 +20,11 @@ class TraceConfig:
     max_requests: int = 100
     seed: int = 0
     output_len_jitter: float = 0.35    # EOS terminates before OL sometimes
+    # Clamp on the per-template OL(R), applied at construction. Traces are
+    # immutable once built (they may be shared between runs/replicas), so
+    # drivers that need short outputs — e.g. real-JAX smoke mode keeping CPU
+    # decoding affordable — set this instead of mutating built relQueries.
+    output_token_cap: Optional[int] = None
 
 
 def poisson_arrivals(n: int, rate: float, rng: random.Random) -> List[float]:
@@ -42,12 +47,15 @@ def build_trace(dataset: Dataset, cfg: TraceConfig,
         offset = rng.randrange(0, max(1, len(dataset.table) - n_req))
         rows = dataset.table.rows[offset:offset + n_req]
         prompts = [tokenizer.encode(tpl.render(row)) for row in rows]
-        rq = make_relquery(f"q{qi}", prompts, arr, tpl.max_output_tokens,
+        ol = tpl.max_output_tokens
+        if cfg.output_token_cap is not None:
+            ol = max(1, min(ol, cfg.output_token_cap))
+        rq = make_relquery(f"q{qi}", prompts, arr, ol,
                            template_id=tpl.template_id, eos_token=tokenizer.eos)
         # simulated actual output lengths (EOS can fire before the limit)
         for r in rq.requests:
-            lo = max(1, int(tpl.max_output_tokens * (1 - cfg.output_len_jitter)))
-            r.sim_output_len = rng.randint(lo, tpl.max_output_tokens)
+            lo = max(1, int(ol * (1 - cfg.output_len_jitter)))
+            r.sim_output_len = rng.randint(lo, ol)
         trace.append(rq)
     return trace
 

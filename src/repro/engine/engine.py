@@ -13,14 +13,14 @@ real JAX executor (smoke-scale models). One tick = one scheduled batch.
 from __future__ import annotations
 
 import time as _time
-from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.batch import Batch
-from repro.core.relquery import RelQuery
-from repro.core.scheduler import SchedulerBase
+from repro.core.relquery import RelQuery, Request
+from repro.core.scheduler import BatchResult, SchedulerBase
 
 
 @dataclass
@@ -63,6 +63,7 @@ class ServiceReport:
     prefix_hit_ratio: float = 0.0
     prefix_lookup_tokens: int = 0   # hits + misses behind prefix_hit_ratio
     schedule_time: float = 0.0
+    cancelled_rel_ids: List[str] = field(default_factory=list)
 
     @property
     def avg_latency(self) -> float:
@@ -100,7 +101,9 @@ def merge_reports(reports: Sequence[ServiceReport]) -> ServiceReport:
         # hit ratio is a per-token quantity: weight by lookup volume
         merged.prefix_lookup_tokens += rep.prefix_lookup_tokens
         hit_tokens += rep.prefix_hit_ratio * rep.prefix_lookup_tokens
+        merged.cancelled_rel_ids.extend(rep.cancelled_rel_ids)
     merged.events.sort(key=lambda e: (e.start, e.replica))
+    merged.cancelled_rel_ids.sort()
     merged.prefix_hit_ratio = (hit_tokens / merged.prefix_lookup_tokens
                                if merged.prefix_lookup_tokens else 0.0)
     return merged
@@ -118,6 +121,10 @@ class EngineCore:
         self.events: List[BatchEvent] = []
         self.schedule_time = 0.0
         self.iterations = 0
+        # Batch-completion listener (event, batch, result) — the open-loop
+        # Frontend subscribes here to stream tokens and observe completions.
+        self.on_batch: Optional[
+            Callable[[BatchEvent, Batch, BatchResult], None]] = None
 
     # ------------------------------------------------------------------ steps
     def admit(self, rq: RelQuery, now: float) -> None:
@@ -155,11 +162,31 @@ class EngineCore:
                            self.replica_id)
         if self.record_events:
             self.events.append(event)
+        if self.on_batch is not None:
+            self.on_batch(event, batch, result)
         return event
+
+    def cancel_relquery(self, rel_id: str, now: float) -> List[Request]:
+        """Cancel a relQuery between ticks: evict its queued/running requests
+        from the scheduler (reclaiming ``tokens_in_use``/``committed_tokens``)
+        and release any executor-side state (decode slots) they hold. Returns
+        the evicted requests; [] if the relQuery is unknown or terminal."""
+        cancelled = self.scheduler.cancel_relquery(rel_id, now)
+        release = getattr(self.executor, "release_request", None)
+        if release is not None:
+            for r in cancelled:
+                release(r.req_id)
+        return cancelled
 
     # ------------------------------------------------------------------ report
     def report(self, end_time: float) -> ServiceReport:
-        rqs = list(self.scheduler.relqueries.values())
+        """Service metrics as of ``end_time``. Safe to call mid-flight (the
+        Frontend's ``snapshot()``): unfinished relQueries simply have no
+        latency entry yet. Cancelled relQueries are excluded from every
+        latency statistic and listed in ``cancelled_rel_ids``."""
+        all_rqs = list(self.scheduler.relqueries.values())
+        cancelled = [rq.rel_id for rq in all_rqs if rq.cancelled]
+        rqs = [rq for rq in all_rqs if not rq.cancelled]
         lat = {rq.rel_id: rq.latency() for rq in rqs if rq.latency() is not None}
         waiting = {rq.rel_id: rq.waiting_time() for rq in rqs}
         core = {rq.rel_id: rq.core_running_time() for rq in rqs}
@@ -174,6 +201,7 @@ class EngineCore:
             prefix_lookup_tokens=(getattr(pc, "hits", 0) + getattr(pc, "misses", 0)
                                   if pc is not None else 0),
             schedule_time=self.schedule_time,
+            cancelled_rel_ids=cancelled,
         )
 
 
@@ -201,24 +229,19 @@ class ServingEngine:
 
     def run_trace(self, trace: Sequence[RelQuery], max_iterations: int = 2_000_000,
                   record_events: bool = True) -> ServiceReport:
-        """Run a full arrival trace on the simulated clock."""
+        """Replay a full arrival trace on the simulated clock.
+
+        .. deprecated:: closed-loop compatibility shim. The open-loop
+           ``repro.serving.Frontend`` (submit / stream / cancel / snapshot) is
+           the serving API; this method is now a thin trace-replay driver over
+           it and produces the identical ``ServiceReport``.
+        """
+        from repro.serving.frontend import Frontend
+
         self.core.record_events = record_events
-        pending = sorted(trace, key=lambda r: r.arrival_time)
-        now = 0.0
-        it = 0
-        idx = 0
-        while idx < len(pending) or self.core.has_work():
-            # admit arrivals up to the current clock
-            while idx < len(pending) and pending[idx].arrival_time <= now:
-                self.core.admit(pending[idx], now)
-                idx += 1
-            if not self.core.has_work():
-                now = max(now, pending[idx].arrival_time)
-                continue
-            event = self.core.tick(now)   # raises EngineDeadlockError if stuck
-            assert event is not None      # has_work() checked above
-            now = event.end
-            it += 1
-            if it >= max_iterations:
-                raise RuntimeError("engine exceeded max_iterations — likely livelock")
-        return self.core.report(now)
+        fe = Frontend(self.core)
+        try:
+            fe.replay(trace, max_iterations=max_iterations)
+        finally:
+            fe.close()
+        return self.core.report(fe.clock)

@@ -72,6 +72,11 @@ class RealExecutor:
         if i is not None:
             self.slots[i] = None
 
+    def release_request(self, req_id: str) -> None:
+        """Free executor-side state held for a request (its decode slot).
+        Called by the engine on cancellation; unknown req_ids are a no-op."""
+        self._free_slot(req_id)
+
     # ------------------------------------------------------------------ prefill
     def _prefill_one(self, req: Request) -> Tuple[int, int]:
         """Prefill a request, write its KV into a slot; returns (token, utok)."""
@@ -169,7 +174,11 @@ class RealExecutor:
             self.decode_samples.append((len(reqs), decode_dur))
             for r in reqs:
                 tok = toks[r.req_id]
-                finished = self._is_finish_token(r, tok, len(r.output_tokens) + 2)
+                # r.output_tokens holds the tokens of *previous* iterations
+                # (complete_batch appends after execute), so this token is the
+                # (len + 1)-th produced — matching the simulated executor's
+                # count; the old "+ 2" finished every request one token early.
+                finished = self._is_finish_token(r, tok, len(r.output_tokens) + 1)
                 outputs[r.req_id] = (tok, finished)
                 if finished:
                     self._free_slot(r.req_id)

@@ -1,6 +1,6 @@
-"""Serving driver: RelServe (or any baseline) over a relQuery trace.
+"""Serving driver: RelServe (or any baseline) over a relQuery workload.
 
-Two modes:
+Two execution modes:
   --simulate      paper-scale traces on the simulated clock (default constants
                   match the paper's OPT-13B/A100 regime); supports
                   --num-replicas N data-parallel engine replicas behind the
@@ -8,8 +8,15 @@ Two modes:
   (default)       real JAX execution of a smoke-scale model on this host
                   (single replica — one model fits this machine)
 
+and two drive modes:
+  (default)       closed-loop trace replay through the Frontend shim
+  --open-loop     scripted open-loop session on the Frontend: mid-flight
+                  submission, token streaming, cancellation and a live
+                  snapshot — the smoke test for the serving API
+
   PYTHONPATH=src python -m repro.launch.serve --simulate --scheduler relserve
   PYTHONPATH=src python -m repro.launch.serve --simulate --num-replicas 4
+  PYTHONPATH=src python -m repro.launch.serve --simulate --open-loop
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --num-relqueries 4
 """
 from __future__ import annotations
@@ -23,7 +30,8 @@ from repro.data.datasets import ALL_DATASETS, make_dataset
 from repro.data.trace import TraceConfig, build_trace
 from repro.engine.engine import ServingEngine
 from repro.engine.prefix_cache import PrefixCache
-from repro.serving import ROUTER_POLICIES, build_simulated_cluster
+from repro.serving import ROUTER_POLICIES, Frontend, build_simulated_cluster
+from repro.serving.frontend import RelQueryStatus
 
 
 def _print_report(tag: str, report) -> None:
@@ -36,11 +44,94 @@ def _print_report(tag: str, report) -> None:
           f"iterations {len(report.events)}")
 
 
+def run_open_loop(frontend: Frontend, trace) -> "object":
+    """Scripted open-loop session over ``frontend``: replay-style arrivals
+    interleaved with engine steps, plus — mid-flight — a token-streaming
+    subscription, one cancellation, one interactive late submission and a
+    live snapshot. Returns the final merged ServiceReport; asserts the
+    invariants CI relies on (KV fully reclaimed, cancellation terminal)."""
+    pending = sorted(trace, key=lambda r: r.arrival_time)
+    if len(pending) < 4:
+        raise SystemExit("--open-loop needs --num-relqueries >= 4")
+    late = pending[-1]            # held back, submitted interactively
+    pending = pending[:-1]
+
+    streamed = {"tokens": 0}
+
+    def on_token(req_id: str, token: int) -> None:
+        streamed["tokens"] += 1
+
+    handles = []
+    cancel_handle = None
+    late_handle = None
+    snapshot_taken = False
+    idx = 0
+    steps = 0
+    while idx < len(pending) or frontend.has_work():
+        nxt = frontend.next_step_time()
+        if idx < len(pending) and (nxt is None or
+                                   pending[idx].arrival_time <= nxt):
+            rq = pending[idx]
+            idx += 1
+            handles.append(frontend.submit(
+                rq, now=rq.arrival_time,
+                on_token=on_token if len(handles) == 0 else None))
+            continue
+        frontend.step()
+        steps += 1
+        if steps >= 5 and cancel_handle is None and len(handles) >= 3:
+            live = [h for h in handles[1:]   # keep the streaming handle alive
+                    if h.status() in (RelQueryStatus.QUEUED,
+                                      RelQueryStatus.RUNNING)]
+            if live:
+                cancel_handle = live[-1]
+                cancel_handle.cancel()
+                print(f"[open-loop] cancelled {cancel_handle.rel_id} "
+                      f"mid-flight at t={frontend.now:.2f}s")
+        if steps >= 8 and late_handle is None and cancel_handle is not None:
+            late_handle = frontend.submit(late)   # arrives "now"
+            handles.append(late_handle)
+            print(f"[open-loop] late-submitted {late.rel_id} "
+                  f"at t={late.arrival_time:.2f}s")
+        if not snapshot_taken and late_handle is not None and steps >= 12:
+            snapshot_taken = True
+            snap = frontend.snapshot()
+            print(f"[open-loop] mid-flight snapshot: "
+                  f"{len(snap.latencies)} finished, "
+                  f"{len(snap.cancelled_rel_ids)} cancelled, "
+                  f"clock {snap.end_to_end:.2f}s")
+
+    report = frontend.snapshot()
+    done = sum(1 for h in handles if h.status() is RelQueryStatus.FINISHED)
+    print(f"[open-loop] {done} finished / {len(report.cancelled_rel_ids)} "
+          f"cancelled, {streamed['tokens']} tokens streamed on "
+          f"{handles[0].rel_id}")
+    # invariants the smoke lane pins — strict: if the workload drains before
+    # the scripted cancel/late-submit/snapshot fire, the smoke exercised
+    # nothing and must fail loudly, not pass vacuously.
+    for core in frontend.cores:
+        assert core.scheduler.tokens_in_use == 0, "KV tokens leaked"
+        assert core.scheduler.committed_tokens == 0, "KV commitment leaked"
+    assert cancel_handle is not None, \
+        "smoke never cancelled — raise --num-relqueries/--rate"
+    assert cancel_handle.status() is RelQueryStatus.CANCELLED
+    assert cancel_handle.rel_id not in report.latencies
+    assert streamed["tokens"] > 0, "no tokens streamed"
+    assert late_handle is not None, "smoke never late-submitted"
+    assert late_handle.status() is RelQueryStatus.FINISHED
+    assert snapshot_taken, "smoke never took a mid-flight snapshot"
+    print("OPEN-LOOP SMOKE OK")
+    return report
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scheduler", default="relserve", choices=list(SCHEDULERS))
     ap.add_argument("--dataset", default="rotten", choices=list(ALL_DATASETS))
     ap.add_argument("--simulate", action="store_true")
+    ap.add_argument("--open-loop", action="store_true",
+                    help="scripted open-loop Frontend session (submit/stream/"
+                         "cancel/snapshot) instead of closed-loop replay")
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--num-relqueries", type=int, default=100)
     ap.add_argument("--rate", type=float, default=1.0)
@@ -55,6 +146,13 @@ def main() -> None:
 
     if args.num_replicas < 1:
         raise SystemExit("--num-replicas must be >= 1")
+    if args.rate <= 0:
+        raise SystemExit(f"--rate must be > 0 relQueries/s (got {args.rate})")
+    if args.num_relqueries < 1:
+        raise SystemExit(
+            f"--num-relqueries must be >= 1 (got {args.num_relqueries})")
+    if args.max_requests < 1:
+        raise SystemExit(f"--max-requests must be >= 1 (got {args.max_requests})")
     lm = a100_opt13b()
 
     if args.simulate:
@@ -66,16 +164,21 @@ def main() -> None:
         cluster = build_simulated_cluster(
             args.num_replicas, scheduler=args.scheduler, latency_model=lm,
             router_policy=args.router, dpu_config=dpu, seed=args.seed)
-        result = cluster.run_trace(trace)
         print(f"scheduler={args.scheduler} replicas={args.num_replicas} "
               f"router={args.router}")
-        for i, rep in enumerate(result.per_replica):
-            _print_report(f"replica {i}", rep)
-        _print_report("merged", result.merged)
-        report = result.merged
+        if args.open_loop:
+            report = run_open_loop(Frontend(cluster), trace)
+            _print_report("open-loop", report)
+        else:
+            result = cluster.run_trace(trace)
+            for i, rep in enumerate(result.per_replica):
+                _print_report(f"replica {i}", rep)
+            _print_report("merged", result.merged)
+            report = result.merged
         if args.num_replicas > 1:
-            print(f"router: {result.router_stats['routed']} routed, "
-                  f"{result.router_stats['spilled']} spilled")
+            stats = cluster.router.stats
+            print(f"router: {stats['routed']} routed, "
+                  f"{stats['spilled']} spilled")
     else:
         import jax
 
@@ -98,20 +201,22 @@ def main() -> None:
         params = model.init_params(jax.random.PRNGKey(args.seed))
         tok = HashTokenizer(vocab_size=cfg.vocab_size - 2)
         ds = make_dataset(args.dataset, num_rows=1000, seed=args.seed)
+        # output_token_cap keeps CPU decoding affordable without mutating the
+        # built trace (relQueries are immutable once constructed)
         trace = build_trace(ds, TraceConfig(
             num_relqueries=min(args.num_relqueries, 8), rate=args.rate,
-            seed=args.seed, max_requests=min(args.max_requests, 8)),
-            tokenizer=tok)
-        for rq in trace:     # keep CPU decoding affordable
-            rq.max_output_tokens = min(rq.max_output_tokens, 8)
-            for r in rq.requests:
-                r.max_output_tokens = rq.max_output_tokens
+            seed=args.seed, max_requests=min(args.max_requests, 8),
+            output_token_cap=8), tokenizer=tok)
         executor = RealExecutor(model, params, max_slots=64, max_len=1024,
                                 prefix_cache=pc)
         engine = ServingEngine(sched, executor)
-        report = engine.run_trace(trace)
         print(f"scheduler={args.scheduler}")
-        _print_report("merged", report)
+        if args.open_loop:
+            report = run_open_loop(Frontend(engine), trace)
+            _print_report("open-loop", report)
+        else:
+            report = engine.run_trace(trace)
+            _print_report("merged", report)
 
     print(f"overheads: DPU {report.dpu_time:.3f}s  ABA {report.aba_time:.3f}s  "
           f"schedule {report.schedule_time:.3f}s")

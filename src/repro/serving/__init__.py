@@ -1,8 +1,12 @@
-"""Multi-replica serving layer: a relQuery-affine ``Router`` in front of a
-``Cluster`` of steppable ``EngineCore`` replicas sharing one clock."""
+"""Serving layer: the open-loop ``Frontend`` (submit / stream / cancel /
+snapshot) over a relQuery-affine ``Router`` and a ``Cluster`` of steppable
+``EngineCore`` replicas sharing one clock."""
 from repro.serving.cluster import Cluster, ClusterReport
 from repro.serving.factory import build_simulated_cluster
+from repro.serving.frontend import (Frontend, RelQueryCancelledError,
+                                    RelQueryHandle, RelQueryStatus)
 from repro.serving.router import ROUTER_POLICIES, Router, route_relquery
 
-__all__ = ["Cluster", "ClusterReport", "Router", "ROUTER_POLICIES",
+__all__ = ["Cluster", "ClusterReport", "Frontend", "RelQueryCancelledError",
+           "RelQueryHandle", "RelQueryStatus", "Router", "ROUTER_POLICIES",
            "build_simulated_cluster", "route_relquery"]

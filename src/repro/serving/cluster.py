@@ -1,11 +1,15 @@
 """``Cluster``: N data-parallel ``EngineCore`` replicas on one simulated clock.
 
-A discrete-event loop interleaves two event kinds in global-time order:
-arrivals (routed to a replica the moment they occur, using the replicas'
-queue depths at that moment plus an in-flight-batch indicator — load state
-is one-batch granular because a tick retires its batch atomically) and
-per-replica batch completions (each replica executes its batches serially;
-replicas run in parallel with each other).
+The cluster is an *open-loop* backend: ``submit(rq, now)`` routes a relQuery
+to a replica the moment it arrives (using the replicas' queue depths at that
+moment plus an in-flight-batch indicator — load state is one-batch granular
+because a tick retires its batch atomically) and ``step()`` advances the
+earliest busy replica by one batch (each replica executes its batches
+serially; replicas run in parallel with each other). ``repro.serving.
+Frontend`` drives these two calls for interactive submit/stream/cancel
+serving; ``run_trace`` is the closed-loop compatibility shim that replays a
+prebuilt arrival trace through the same loop.
+
 This is the simulated-clock analogue of N engine processes behind a front-end
 router, and it reuses the exact single-replica scheduler/executor stack —
 the scheduling decisions per replica are identical to what ``ServingEngine``
@@ -13,12 +17,12 @@ would make for that replica's sub-trace.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Sequence
 
-from repro.core.relquery import RelQuery
-from repro.engine.engine import EngineCore, ServiceReport, merge_reports
+from repro.core.relquery import RelQuery, Request
+from repro.engine.engine import (BatchEvent, EngineCore, ServiceReport,
+                                 merge_reports)
 from repro.serving.router import Router
 
 
@@ -54,46 +58,80 @@ class Cluster:
         if self.router.num_replicas != num_replicas:
             raise ValueError("router sized for a different replica count")
         self.assignments: dict = {}
+        self.clocks: List[float] = [0.0] * num_replicas  # replica-local frontier
+
+    # ------------------------------------------------------------- open loop
+    def submit(self, rq: RelQuery, now: float) -> int:
+        """Route ``rq`` at service time ``now`` and admit it to its replica.
+        Returns the replica index. Queue depth plus an in-flight indicator:
+        a tick retires its batch at the batch's *start* ordering, so a
+        replica whose frontier is past ``now`` was still busy at it —
+        without the indicator, load-aware routing reads post-completion
+        state and dumps work on a replica that is hours from free."""
+        loads = [c.load() + (1 if self.clocks[i] > now else 0)
+                 for i, c in enumerate(self.cores)]
+        replica = self.router.route(rq, loads)
+        self.assignments[rq.rel_id] = replica
+        core = self.cores[replica]
+        if not core.has_work():   # replica idled until this arrival
+            self.clocks[replica] = max(self.clocks[replica], now)
+        core.admit(rq, now)
+        return replica
+
+    def step(self) -> Optional[BatchEvent]:
+        """Tick the earliest busy replica (one batch). None when all idle;
+        raises ``EngineDeadlockError`` on a truly stuck replica."""
+        busy = [i for i, c in enumerate(self.cores) if c.has_work()]
+        if not busy:
+            return None
+        i = min(busy, key=lambda j: self.clocks[j])
+        event = self.cores[i].tick(self.clocks[i])
+        if event is not None:
+            self.clocks[i] = event.end
+        return event
+
+    def has_work(self) -> bool:
+        return any(c.has_work() for c in self.cores)
+
+    def frontier(self) -> Optional[float]:
+        """Start time of the next batch across the fleet; None when idle."""
+        busy = [self.clocks[i] for i, c in enumerate(self.cores) if c.has_work()]
+        return min(busy) if busy else None
+
+    def end_time(self) -> float:
+        return max(self.clocks)
+
+    def cancel_relquery(self, rel_id: str, now: float) -> List[Request]:
+        """Cancel on whichever replica the relQuery was routed to."""
+        replica = self.assignments.get(rel_id)
+        if replica is None:
+            return []
+        return self.cores[replica].cancel_relquery(rel_id, now)
+
+    def reports(self) -> List[ServiceReport]:
+        return [core.report(self.clocks[i]) for i, core in enumerate(self.cores)]
+
+    def report(self) -> ClusterReport:
+        reports = self.reports()
+        return ClusterReport(merged=merge_reports(reports), per_replica=reports,
+                             assignments=dict(self.assignments),
+                             router_stats=dict(self.router.stats))
 
     # ------------------------------------------------------------------
     def run_trace(self, trace: Sequence[RelQuery],
                   max_iterations: int = 2_000_000) -> ClusterReport:
-        pending = sorted(trace, key=lambda r: r.arrival_time)
-        clocks = [0.0] * len(self.cores)   # replica-local frontier
-        idx = 0
-        it = 0
-        while True:
-            # next batch start: the earliest replica frontier with work queued
-            busy = [i for i, c in enumerate(self.cores) if c.has_work()]
-            next_step = min((clocks[i] for i in busy), default=math.inf)
-            next_arrival = pending[idx].arrival_time if idx < len(pending) else math.inf
-            if math.isinf(next_step) and math.isinf(next_arrival):
-                break
-            if next_arrival <= next_step:
-                rq = pending[idx]
-                idx += 1
-                # Queue depth plus an in-flight indicator: a tick retires its
-                # batch at the batch's *start* ordering, so a replica whose
-                # frontier is past this arrival was still busy at it — without
-                # the indicator, load-aware routing reads post-completion
-                # state and dumps work on a replica that is hours from free.
-                loads = [c.load() + (1 if clocks[i] > rq.arrival_time else 0)
-                         for i, c in enumerate(self.cores)]
-                replica = self.router.route(rq, loads)
-                self.assignments[rq.rel_id] = replica
-                core = self.cores[replica]
-                if not core.has_work():   # replica idled until this arrival
-                    clocks[replica] = max(clocks[replica], rq.arrival_time)
-                core.admit(rq, rq.arrival_time)
-                continue
-            i = min(busy, key=lambda j: clocks[j])
-            event = self.cores[i].tick(clocks[i])   # raises on true deadlock
-            if event is not None:
-                clocks[i] = event.end
-            it += 1
-            if it >= max_iterations:
-                raise RuntimeError("cluster exceeded max_iterations — likely livelock")
-        reports = [core.report(clocks[i]) for i, core in enumerate(self.cores)]
-        return ClusterReport(merged=merge_reports(reports), per_replica=reports,
-                             assignments=dict(self.assignments),
-                             router_stats=dict(self.router.stats))
+        """Replay a full arrival trace across the fleet.
+
+        .. deprecated:: closed-loop compatibility shim. Drive the open-loop
+           ``repro.serving.Frontend`` over this cluster instead; this method
+           is now a thin trace-replay driver over it and produces the
+           identical merged ``ClusterReport``.
+        """
+        from repro.serving.frontend import Frontend
+
+        fe = Frontend(self)
+        try:
+            fe.replay(trace, max_iterations=max_iterations)
+        finally:
+            fe.close()
+        return self.report()

@@ -1,0 +1,94 @@
+"""EOS early termination: a request that hits EOS (or its simulated actual
+output length) before max_output_tokens finishes early in BOTH executors,
+frees its KV footprint, and the relQuery's tail latency reflects it."""
+import jax
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.latency_model import a100_opt13b
+from repro.core.policies import SCHEDULERS
+from repro.core.priority import BatchLimits
+from repro.core.relquery import make_relquery
+from repro.engine.engine import ServingEngine
+from repro.engine.executor import RealExecutor
+from repro.engine.prefix_cache import PrefixCache
+from repro.engine.simulator import SimulatedExecutor
+from repro.models.registry import build_model
+
+
+EOS = 7
+
+
+def _sim_run(sim_output_len, max_output=12):
+    lm = a100_opt13b()
+    rq = make_relquery("q", [[1, 2, 3] * 8] * 3, 0.0, max_output, eos_token=EOS)
+    for r in rq.requests:
+        r.sim_output_len = sim_output_len
+    sched = SCHEDULERS["relserve"](latency_model=lm)
+    engine = ServingEngine(sched, SimulatedExecutor(lm))
+    report = engine.run_trace([rq])
+    return rq, sched, report
+
+
+def test_simulated_executor_eos_early_stop():
+    rq, sched, _ = _sim_run(sim_output_len=3)
+    for r in rq.requests:
+        assert len(r.output_tokens) == 3          # stopped well before OL=12
+        assert r.output_tokens[-1] == EOS         # the final token is EOS
+    # KV footprint fully released
+    assert sched.tokens_in_use == 0
+    assert sched.committed_tokens == 0
+
+    full_rq, _, _ = _sim_run(sim_output_len=12)
+    assert rq.latency() < full_rq.latency()       # tail latency reflects EOS
+    assert rq.tail_running_time() < full_rq.tail_running_time()
+
+
+@pytest.fixture(scope="module")
+def qwen_model():
+    cfg = get_smoke_config("qwen3-1.7b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _real_run(model, params, eos_token, max_output=6):
+    prompts = [[11, 12, 13, 14, 15], [21, 22, 23, 24]]
+    rq = make_relquery("q", prompts, 0.0, max_output, eos_token=eos_token)
+    sched = SCHEDULERS["relserve"](limits=BatchLimits(cap=100_000))
+    ex = RealExecutor(model, params, max_slots=8, max_len=256,
+                      prefix_cache=PrefixCache(block_size=16))
+    ServingEngine(sched, ex).run_trace([rq])
+    return rq, sched, ex
+
+
+def test_real_executor_eos_early_stop(qwen_model):
+    _, model, params = qwen_model
+    # Greedy decoding is deterministic: learn the token stream without EOS,
+    # then declare the second generated token to *be* EOS and re-run.
+    probe_rq, _, _ = _real_run(model, params, eos_token=None)
+    probe = probe_rq.requests[0]
+    assert len(probe.output_tokens) == probe.max_output_tokens  # full length
+    eos = probe.output_tokens[1]
+
+    rq, sched, ex = _real_run(model, params, eos_token=eos)
+    early = rq.requests[0]
+    assert len(early.output_tokens) < early.max_output_tokens
+    assert early.output_tokens[-1] == eos         # stopped exactly at EOS
+    # engine-side KV and executor-side decode slots fully released
+    assert sched.tokens_in_use == 0
+    assert sched.committed_tokens == 0
+    assert ex._slot_of == {}
+    assert all(s is None for s in ex.slots)
+    # the relQuery's latency bookkeeping reflects the early finish
+    assert rq.finish_time is not None
+    assert rq.latency() <= probe_rq.latency()
+
+
+def test_real_executor_honors_exact_output_budget(qwen_model):
+    """Regression for the decode off-by-one: with no EOS configured a request
+    must produce exactly max_output_tokens, not one fewer."""
+    _, model, params = qwen_model
+    rq, _, _ = _real_run(model, params, eos_token=None, max_output=4)
+    for r in rq.requests:
+        assert len(r.output_tokens) == 4

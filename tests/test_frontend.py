@@ -1,0 +1,339 @@
+"""Open-loop Frontend: submit/stream/cancel lifecycle, mid-flight snapshots,
+and the equivalence pin — the run_trace compatibility shims must reproduce the
+pre-frontend closed-loop results exactly."""
+import copy
+import math
+
+import pytest
+
+from repro.core.latency_model import a100_opt13b
+from repro.core.policies import SCHEDULERS
+from repro.core.priority import BatchLimits, DPUConfig
+from repro.core.relquery import RequestState, make_relquery
+from repro.data.datasets import make_dataset
+from repro.data.trace import TraceConfig, build_trace, quick_trace
+from repro.engine.engine import EngineCore, ServingEngine
+from repro.engine.prefix_cache import PrefixCache
+from repro.engine.simulator import SimulatedExecutor
+from repro.serving import (Frontend, RelQueryCancelledError, RelQueryStatus,
+                           build_simulated_cluster)
+
+
+def _engine(scheduler="relserve", seed=0, limits=None):
+    lm = a100_opt13b()
+    pc = PrefixCache(block_size=16)
+    kw = dict(limits=limits or BatchLimits(), latency_model=lm, prefix_cache=pc)
+    if scheduler.startswith("relserve"):
+        kw["dpu_config"] = DPUConfig()
+    return ServingEngine(SCHEDULERS[scheduler](**kw),
+                         SimulatedExecutor(lm, prefix_cache=pc, seed=seed))
+
+
+def _default_trace(num_relqueries=100, max_requests=100, rate=1.0, seed=0):
+    """The default --simulate trace (launch/serve.py defaults)."""
+    ds = make_dataset("rotten", num_rows=10_000, seed=seed)
+    return build_trace(ds, TraceConfig(num_relqueries=num_relqueries,
+                                       rate=rate, seed=seed,
+                                       max_requests=max_requests))
+
+
+# ----------------------------------------------------------- equivalence pin
+def _pinned_closed_loop(engine: ServingEngine, trace):
+    """The pre-frontend ServingEngine.run_trace loop, verbatim — the shim
+    must reproduce this trajectory batch for batch."""
+    core = engine.core
+    pending = sorted(trace, key=lambda r: r.arrival_time)
+    now, idx = 0.0, 0
+    while idx < len(pending) or core.has_work():
+        while idx < len(pending) and pending[idx].arrival_time <= now:
+            core.admit(pending[idx], now)
+            idx += 1
+        if not core.has_work():
+            now = max(now, pending[idx].arrival_time)
+            continue
+        event = core.tick(now)
+        now = event.end
+    return core.report(now)
+
+
+@pytest.mark.parametrize("sched_name", ["relserve", "vllm"])
+def test_shim_reproduces_pre_frontend_run_trace(sched_name):
+    """Acceptance pin: the default --simulate trace through the new
+    Frontend-based shim gives the exact per-relQuery latencies of the pre-PR
+    closed loop, for RelServe and a baseline."""
+    trace = _default_trace()
+    pinned = _pinned_closed_loop(_engine(sched_name), copy.deepcopy(trace))
+    shimmed = _engine(sched_name).run_trace(copy.deepcopy(trace))
+    assert shimmed.latencies == pinned.latencies
+    assert shimmed.waiting == pinned.waiting
+    assert shimmed.core == pinned.core
+    assert shimmed.tail == pinned.tail
+    assert shimmed.end_to_end == pinned.end_to_end
+    assert len(shimmed.events) == len(pinned.events)
+
+
+def test_cluster_shim_reproduces_pre_frontend_loop():
+    """Same pin for the 2-replica cluster: the pre-PR Cluster.run_trace
+    discrete-event loop, re-implemented here, vs the Frontend-based shim."""
+    trace = quick_trace("rotten", num_relqueries=30, rate=1.5, seed=11,
+                        max_requests=40)
+
+    def pinned(trace):
+        cluster = build_simulated_cluster(2)
+        cores = cluster.cores
+        pending = sorted(trace, key=lambda r: r.arrival_time)
+        clocks = [0.0] * len(cores)
+        idx = 0
+        while True:
+            busy = [i for i, c in enumerate(cores) if c.has_work()]
+            next_step = min((clocks[i] for i in busy), default=math.inf)
+            next_arrival = (pending[idx].arrival_time if idx < len(pending)
+                            else math.inf)
+            if math.isinf(next_step) and math.isinf(next_arrival):
+                break
+            if next_arrival <= next_step:
+                rq = pending[idx]
+                idx += 1
+                loads = [c.load() + (1 if clocks[i] > rq.arrival_time else 0)
+                         for i, c in enumerate(cores)]
+                replica = cluster.router.route(rq, loads)
+                core = cores[replica]
+                if not core.has_work():
+                    clocks[replica] = max(clocks[replica], rq.arrival_time)
+                core.admit(rq, rq.arrival_time)
+                continue
+            i = min(busy, key=lambda j: clocks[j])
+            event = cores[i].tick(clocks[i])
+            if event is not None:
+                clocks[i] = event.end
+        from repro.engine.engine import merge_reports
+        return merge_reports([c.report(clocks[i]) for i, c in enumerate(cores)])
+
+    pin = pinned(copy.deepcopy(trace))
+    shim = build_simulated_cluster(2).run_trace(copy.deepcopy(trace)).merged
+    assert shim.latencies == pin.latencies
+    assert shim.end_to_end == pin.end_to_end
+
+
+# ----------------------------------------------------------- streaming
+def test_on_token_streams_in_generation_order():
+    trace = quick_trace("rotten", num_relqueries=3, rate=4.0, seed=2,
+                        max_requests=5)
+    fe = Frontend(_engine())
+    streamed = {}
+
+    def on_token(req_id, tok):
+        streamed.setdefault(req_id, []).append(tok)
+
+    handles = [fe.submit(rq, now=rq.arrival_time, on_token=on_token)
+               for rq in sorted(trace, key=lambda r: r.arrival_time)]
+    fe.drain()
+    for h in handles:
+        assert h.status() is RelQueryStatus.FINISHED
+        for r in h.rq.requests:
+            assert streamed[r.req_id] == r.output_tokens  # exact, in order
+        assert h.partial_outputs() == {r.req_id: r.output_tokens
+                                       for r in h.rq.requests}
+
+
+def test_snapshot_midflight_is_consistent():
+    trace = quick_trace("rotten", num_relqueries=12, rate=3.0, seed=4,
+                        max_requests=20)
+    fe = Frontend(_engine())
+    for rq in sorted(trace, key=lambda r: r.arrival_time):
+        fe.submit(rq, now=rq.arrival_time)
+    for _ in range(40):                      # stop mid-flight
+        fe.step()
+    mid = fe.snapshot()
+    assert fe.has_work()                     # genuinely mid-flight
+    final = fe.drain()
+    assert set(mid.latencies) <= set(final.latencies)
+    assert mid.end_to_end <= final.end_to_end
+    for rel_id, lat in mid.latencies.items():
+        assert lat == final.latencies[rel_id]   # finished latencies are final
+    assert len(final.latencies) == len(trace)
+
+
+def test_result_and_status_lifecycle():
+    rq = make_relquery("a", [[1] * 20] * 2, 0.0, 3)
+    fe = Frontend(_engine())
+    h = fe.submit(rq)
+    assert h.status() is RelQueryStatus.QUEUED
+    out = h.result()
+    assert out is rq and h.status() is RelQueryStatus.FINISHED
+    assert h.latency() is not None
+    assert h.cancel() is False               # terminal: cancel is a no-op
+
+
+# ----------------------------------------------------------- cancellation
+def test_cancel_before_first_tick_matches_never_submitted():
+    """A relQuery cancelled before it ever participates in a tick leaves the
+    trajectory byte-identical to never submitting it (full no-op reclaim)."""
+    base = quick_trace("rotten", num_relqueries=6, rate=3.0, seed=9,
+                       max_requests=10)
+
+    ref = Frontend(_engine())
+    ref.replay([rq for rq in copy.deepcopy(base) if rq.rel_id != "q3"])
+    ref_report = ref.snapshot()
+
+    fe = Frontend(_engine())
+    pending = sorted(copy.deepcopy(base), key=lambda r: r.arrival_time)
+    handles = {}
+    idx = 0
+    while idx < len(pending) or fe.has_work():
+        nxt = fe.next_step_time()
+        if idx < len(pending) and (nxt is None or
+                                   pending[idx].arrival_time <= nxt):
+            rq = pending[idx]
+            idx += 1
+            handles[rq.rel_id] = fe.submit(rq, now=rq.arrival_time)
+            if rq.rel_id == "q3":
+                handles["q3"].cancel()       # before any tick sees it
+            continue
+        fe.step()
+    report = fe.snapshot()
+    assert handles["q3"].status() is RelQueryStatus.CANCELLED
+    assert report.cancelled_rel_ids == ["q3"]
+    assert report.latencies == ref_report.latencies
+    assert report.end_to_end == ref_report.end_to_end
+
+
+def test_cancel_midflight_reclaims_kv_and_drains():
+    """Cancelling a relQuery mid-core-run reclaims its entire KV commitment
+    immediately and the remaining relQueries finish (no deadlock)."""
+    trace = quick_trace("rotten", num_relqueries=8, rate=4.0, seed=6,
+                        max_requests=15)
+    fe = Frontend(_engine())
+    handles = [fe.submit(rq, now=rq.arrival_time)
+               for rq in sorted(trace, key=lambda r: r.arrival_time)]
+    victim = None
+    for _ in range(10_000):
+        fe.step()
+        if victim is None:
+            running = [h for h in handles
+                       if h.status() is RelQueryStatus.RUNNING]
+            if running:
+                victim = running[-1]
+                break
+    assert victim is not None, "no relQuery reached RUNNING"
+    sched = fe.cores[0].scheduler
+    victim.cancel()
+    others = [r for rel_id, rq in sched.relqueries.items() if not rq.cancelled
+              for r in rq.requests]
+    # KV accounting now reflects only the surviving requests
+    expected_in_use = sum(r.total_tokens for r in others
+                          if r.state == RequestState.RUNNING)
+    expected_committed = sum(sched._kv_footprint(r) for r in others
+                             if r.prefilled_tokens > 0
+                             and r.state != RequestState.FINISHED)
+    assert sched.tokens_in_use == expected_in_use
+    assert sched.committed_tokens == expected_committed
+    assert all(r.state is RequestState.CANCELLED
+               for r in victim.rq.requests if not r.is_finished())
+
+    report = fe.drain()
+    assert victim.rel_id not in report.latencies
+    assert victim.rel_id in report.cancelled_rel_ids
+    assert len(report.latencies) == len(trace) - 1     # everyone else finished
+    assert sched.tokens_in_use == 0 and sched.committed_tokens == 0
+    with pytest.raises(RelQueryCancelledError):
+        victim.result()
+
+
+def test_cancel_on_two_replica_cluster():
+    trace = quick_trace("rotten", num_relqueries=10, rate=3.0, seed=3,
+                        max_requests=12)
+    cluster = build_simulated_cluster(2)
+    fe = Frontend(cluster)
+    handles = [fe.submit(rq, now=rq.arrival_time)
+               for rq in sorted(trace, key=lambda r: r.arrival_time)]
+    for _ in range(12):
+        fe.step()
+    live = [h for h in handles if not h.done()]
+    assert live, "everything finished before the cancel point"
+    victim = live[0]
+    assert victim.cancel() is True
+    report = fe.drain()
+    assert victim.rel_id in report.cancelled_rel_ids
+    assert victim.rel_id not in report.latencies
+    assert len(report.latencies) == len(trace) - 1
+    for core in cluster.cores:
+        assert core.scheduler.tokens_in_use == 0
+        assert core.scheduler.committed_tokens == 0
+    # the cancellation happened on the replica the router chose
+    assert cluster.assignments[victim.rel_id] == victim.replica
+
+
+def test_deadline_auto_cancels():
+    long_rq = make_relquery("slow", [[1] * 50] * 4, 0.0, 400)
+    quick_rq = make_relquery("quick", [[2] * 10], 0.0, 2)
+    fe = Frontend(_engine())
+    slow = fe.submit(long_rq, deadline=0.5)
+    quick = fe.submit(quick_rq)
+    report = fe.drain()
+    assert slow.status() is RelQueryStatus.CANCELLED
+    assert long_rq.cancel_time == 0.5
+    assert quick.status() is RelQueryStatus.FINISHED
+    assert report.cancelled_rel_ids == ["slow"]
+
+
+def test_duplicate_submit_rejected():
+    rq = make_relquery("a", [[1] * 5], 0.0, 2)
+    fe = Frontend(_engine())
+    fe.submit(rq)
+    with pytest.raises(ValueError, match="already submitted"):
+        fe.submit(rq)
+
+
+def test_second_frontend_does_not_detach_streaming():
+    """The deprecated shims build throwaway frontends over the same backend;
+    they must chain onto (and on close, restore) the live frontend's batch
+    listener instead of clobbering it."""
+    engine = _engine()
+    fe = Frontend(engine)
+    streamed = {}
+    h = fe.submit(make_relquery("a", [[1] * 20] * 2, 0.0, 6),
+                  on_token=lambda rid, tok: streamed.setdefault(rid, []).append(tok))
+    fe.step()                                # some tokens flow
+    before = sum(len(v) for v in streamed.values())
+    assert before > 0
+
+    inner = Frontend(engine)                 # e.g. what run_trace would build
+    fe.step()                                # streaming still reaches fe
+    assert sum(len(v) for v in streamed.values()) > before
+    inner.close()                            # restores fe's listener
+    assert engine.core.on_batch is not None  # fe is still subscribed
+
+    h.result()
+    for r in h.rq.requests:
+        assert streamed[r.req_id] == r.output_tokens
+
+
+def test_closed_frontend_goes_inert_even_out_of_order():
+    """Closing an older frontend while a newer one is chained on top cannot
+    unhook its listener from the chain — but it must stop delivering."""
+    engine = _engine()
+    fe1 = Frontend(engine)
+    streamed = []
+    fe1.submit(make_relquery("a", [[1] * 20] * 2, 0.0, 8),
+               on_token=lambda rid, tok: streamed.append(tok))
+    fe2 = Frontend(engine)                   # chains over fe1's listener
+    fe1.step()
+    assert streamed                          # fe1 live: tokens flow
+    n = len(streamed)
+    fe1.close()                              # out of stacking order
+    fe2.step()
+    fe2.step()
+    assert len(streamed) == n                # inert: no further delivery
+    fe2.close()
+
+
+def test_scheduler_cancel_is_idempotent():
+    rq = make_relquery("a", [[1] * 5] * 2, 0.0, 4)
+    core = _engine().core
+    core.admit(rq, 0.0)
+    assert len(core.cancel_relquery("a", 1.0)) == 2
+    assert core.cancel_relquery("a", 2.0) == []      # already cancelled
+    assert core.cancel_relquery("ghost", 0.0) == []  # unknown rel_id
+    assert rq.cancel_time == 1.0
+    assert not core.has_work()

@@ -1,0 +1,39 @@
+"""launch/serve.py CLI: argument validation fails fast with clear messages,
+and the --open-loop smoke mode exercises submit/stream/cancel/snapshot."""
+import sys
+
+import pytest
+
+from repro.launch import serve
+
+
+def _run(monkeypatch, *argv):
+    monkeypatch.setattr(sys, "argv", ["serve", *argv])
+    serve.main()
+
+
+@pytest.mark.parametrize("argv,match", [
+    (["--simulate", "--rate", "0"], "--rate must be > 0"),
+    (["--simulate", "--rate", "-1.5"], "--rate must be > 0"),
+    (["--simulate", "--num-relqueries", "0"], "--num-relqueries must be >= 1"),
+    (["--simulate", "--max-requests", "0"], "--max-requests must be >= 1"),
+    (["--simulate", "--num-replicas", "0"], "--num-replicas must be >= 1"),
+])
+def test_cli_validation(monkeypatch, argv, match):
+    with pytest.raises(SystemExit, match=match):
+        _run(monkeypatch, *argv)
+
+
+def test_open_loop_smoke_simulated(monkeypatch, capsys):
+    _run(monkeypatch, "--simulate", "--open-loop", "--num-relqueries", "12",
+         "--rate", "3.0", "--max-requests", "10", "--num-replicas", "2")
+    out = capsys.readouterr().out
+    assert "OPEN-LOOP SMOKE OK" in out
+    assert "cancelled" in out and "tokens streamed" in out
+
+
+def test_closed_loop_simulated_still_works(monkeypatch, capsys):
+    _run(monkeypatch, "--simulate", "--num-relqueries", "8",
+         "--max-requests", "8", "--rate", "4.0")
+    out = capsys.readouterr().out
+    assert "[merged] relqueries=8" in out
