@@ -84,6 +84,7 @@ def report_metrics(report: ServiceReport) -> dict:
         "overheads_s": {"dpu": report.dpu_time, "aba": report.aba_time,
                         "schedule": report.schedule_time},
         "cancelled": list(report.cancelled_rel_ids),
+        "preemptions": report.preemptions,
     }
 
 

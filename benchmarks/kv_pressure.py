@@ -1,0 +1,125 @@
+"""KV-pressure benchmark: conservative vs optimistic admission under tight caps.
+
+Sweeps the KV-resident token cap for the relserve and vllm schedulers in both
+admission modes on one shared trace. Conservative admission reserves every
+request's worst-case prompt+output footprint upfront — at tight caps the
+decode batches shrink and the tail-phase HoL blocking the paper fights gets
+*worse*. Optimistic admission commits only the current footprint and lets
+priority-aware preemption (re-prefill restarts, generation preserved) resolve
+pressure, trading some recompute for much larger effective batches.
+
+Writes ``BENCH_kv_pressure.json``: per-cell metrics plus a summary verdict
+that optimistic+preemption beats conservative on avg latency at the tightest
+cap, with zero deadlocks, for both schedulers.
+
+    PYTHONPATH=src python -m benchmarks.kv_pressure
+    PYTHONPATH=src python -m benchmarks.kv_pressure --smoke   # CI: tiny + asserts
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+
+from benchmarks.common import report_metrics, shared_trace, write_bench_json
+from repro.core.latency_model import a100_opt13b
+from repro.core.policies import SCHEDULERS
+from repro.core.priority import BatchLimits
+from repro.engine.engine import EngineDeadlockError, ServingEngine
+from repro.engine.prefix_cache import PrefixCache
+from repro.engine.simulator import SimulatedExecutor
+
+SCHED_NAMES = ("relserve", "vllm")
+MODES = ("conservative", "optimistic")
+
+
+def run_cell(scheduler: str, mode: str, cap: int, trace) -> dict:
+    lm = a100_opt13b()
+    pc = PrefixCache(block_size=16)
+    sched = SCHEDULERS[scheduler](limits=BatchLimits(cap=cap), latency_model=lm,
+                                  prefix_cache=pc, kv_admission=mode)
+    engine = ServingEngine(sched, SimulatedExecutor(lm, prefix_cache=pc))
+    try:
+        report = engine.run_trace(copy.deepcopy(trace))
+    except EngineDeadlockError as e:
+        return {"deadlock": True, "error": str(e),
+                "preemptions": sched.preemptions}
+    cell = report_metrics(report)   # includes 'preemptions'
+    cell.update(deadlock=False, preempted_tokens=report.preempted_tokens)
+    assert sched.tokens_in_use == 0 and sched.committed_tokens == 0 \
+        and sched.partial_prefill_tokens == 0, \
+        "KV ledger leaked tokens after drain"
+    return cell
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep + hard asserts (CI smoke lane)")
+    ap.add_argument("--num-relqueries", type=int, default=None)
+    ap.add_argument("--rate", type=float, default=2.0)
+    ap.add_argument("--seed", type=int, default=3)
+    args = ap.parse_args()
+
+    n_rq = args.num_relqueries or (12 if args.smoke else 40)
+    max_req = 16 if args.smoke else 30
+    trace = shared_trace("rotten", rate=args.rate, num_relqueries=n_rq,
+                         seed=args.seed)
+    for rq in trace:
+        del rq.requests[max_req:]
+    # caps relative to the workload: the tightest cap still fits every single
+    # request (conservative must throttle, not deadlock)
+    max_fp = max(r.num_prompt_tokens + r.max_output_tokens
+                 for rq in trace for r in rq.requests)
+    caps = [int(max_fp * m) for m in ((1.2, 2.0) if args.smoke
+                                      else (1.2, 2.0, 4.0, 8.0))]
+
+    cells = {}
+    for cap in caps:
+        for name in SCHED_NAMES:
+            for mode in MODES:
+                key = f"{name}/{mode}/cap{cap}"
+                cells[key] = run_cell(name, mode, cap, trace)
+                tag = ("DEADLOCK" if cells[key]["deadlock"] else
+                       f"avg {cells[key]['avg_latency_s']:8.2f}s  "
+                       f"preempt {cells[key]['preemptions']:4d}")
+                print(f"[kv_pressure] {key:36s} {tag}", flush=True)
+
+    tight = caps[0]
+    summary = {"max_request_footprint": max_fp, "caps": caps,
+               "tight_cap": tight, "verdict": {}}
+    for name in SCHED_NAMES:
+        cons = cells[f"{name}/conservative/cap{tight}"]
+        opti = cells[f"{name}/optimistic/cap{tight}"]
+        summary["verdict"][name] = {
+            "conservative_avg_s": cons.get("avg_latency_s"),
+            "optimistic_avg_s": opti.get("avg_latency_s"),
+            "optimistic_preemptions": opti["preemptions"],
+            "deadlocks": int(cons["deadlock"]) + int(opti["deadlock"]),
+            "optimistic_wins": (not cons["deadlock"] and not opti["deadlock"]
+                                and opti["avg_latency_s"] < cons["avg_latency_s"]),
+        }
+        v = summary["verdict"][name]
+        fmt = lambda x: "DEADLOCK" if x is None else f"{x:.2f}s"
+        print(f"[kv_pressure] {name}: tight cap {tight} — conservative "
+              f"{fmt(v['conservative_avg_s'])} vs optimistic "
+              f"{fmt(v['optimistic_avg_s'])} "
+              f"({'WIN' if v['optimistic_wins'] else 'NO WIN'})", flush=True)
+
+    write_bench_json("kv_pressure", {"config": {
+        "num_relqueries": n_rq, "rate": args.rate, "seed": args.seed,
+        "max_requests": max_req, "smoke": args.smoke,
+    }, "cells": cells, "summary": summary})
+
+    for name in SCHED_NAMES:
+        v = summary["verdict"][name]
+        assert v["deadlocks"] == 0, f"{name}: deadlock at tight cap"
+        assert v["optimistic_preemptions"] > 0, \
+            f"{name}: optimistic mode never preempted — cap not tight enough"
+        assert v["optimistic_wins"], \
+            f"{name}: optimistic did not beat conservative at cap {tight}"
+    print("KV-PRESSURE OK: optimistic+preemption beats conservative at "
+          f"cap {tight} for {', '.join(SCHED_NAMES)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -68,12 +68,13 @@ class Batch:
 
     def chunk_of(self, r: Request) -> int:
         """Prompt tokens this batch prefills for ``r``: the scheduled chunk, or
-        the whole remaining prompt for non-chunked prefill."""
-        default = r.num_prompt_tokens - r.prefilled_tokens
+        the whole remaining prompt (prompt + preserved generation for a
+        preempted request's restart) for non-chunked prefill."""
+        default = r.prefill_target_tokens - r.prefilled_tokens
         return self.prefill_chunks.get(r.req_id, default)
 
     def completes_prompt(self, r: Request) -> bool:
-        return r.prefilled_tokens + self.chunk_of(r) >= r.num_prompt_tokens
+        return r.prefilled_tokens + self.chunk_of(r) >= r.prefill_target_tokens
 
     def min_priority(self, prio_of) -> float:
         return min(prio_of(r) for r in self.all_requests())

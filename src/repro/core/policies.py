@@ -29,7 +29,7 @@ class VLLMScheduler(SchedulerBase):
     def rq_sort_key(self, rq: RelQuery):
         return (rq.arrival_time, rq.rel_id)
 
-    def schedule(self, now: float) -> Optional[Batch]:
+    def choose_batch(self, now: float) -> Optional[Batch]:
         p_cand = self.build_prefill_candidate(single_relquery=False)
         if p_cand is not None:
             return p_cand
@@ -47,14 +47,15 @@ class StaticPriorityScheduler(SchedulerBase):
 
     name = "vllm_sp"
 
-    def __init__(self, limits=None, latency_model=None, prefix_cache=None):
-        super().__init__(limits, latency_model, prefix_cache)
+    def __init__(self, limits=None, latency_model=None, prefix_cache=None,
+                 kv_admission: str = "conservative"):
+        super().__init__(limits, latency_model, prefix_cache, kv_admission)
         self.estimator = StaticPriorityEstimator(self.lm, self.limits)
 
     def on_relquery_added(self, rq: RelQuery, now: float) -> None:
         self.estimator.assign(rq)
 
-    def schedule(self, now: float) -> Optional[Batch]:
+    def choose_batch(self, now: float) -> Optional[Batch]:
         p_cand = self.build_prefill_candidate(single_relquery=True)
         if p_cand is not None:
             return p_cand
@@ -71,7 +72,7 @@ class SarathiScheduler(SchedulerBase):
     def rq_sort_key(self, rq: RelQuery):
         return (rq.arrival_time, rq.rel_id)
 
-    def schedule(self, now: float) -> Optional[Batch]:
+    def choose_batch(self, now: float) -> Optional[Batch]:
         return self.build_mixed_candidate(single_relquery=False)
 
 

@@ -104,7 +104,7 @@ class DynamicPriorityUpdater:
     def _estimate_miss_ratio(self, rq: RelQuery, prefix_cache: Optional[PrefixCacheView]) -> float:
         if prefix_cache is None:
             return 1.0
-        pending = rq.waiting_requests()
+        pending = rq.waiting_requests() + rq.preempted_requests()
         if not pending:
             return rq.cache_miss_ratio
         sample = pending if len(pending) <= self.cfg.sample_size else \
@@ -120,14 +120,20 @@ class DynamicPriorityUpdater:
         self.stats["pem_calls"] += 1
         ratio = rq.cache_miss_ratio
         waiting = rq.waiting_requests()
+        preempted = rq.preempted_requests()
         utoks = [max(1, round(r.num_prompt_tokens * ratio)) for r in waiting]
+        # Preempted requests restart with a re-prefill of prompt + generation
+        # so far; the generated suffix is never prefix-cached. Pricing this
+        # keeps Prio(R) honest after the memory subsystem evicts R's KV.
+        utoks += [max(1, round(r.num_prompt_tokens * ratio))
+                  + r.preserved_output_tokens for r in preempted]
         running = rq.running_requests()
         # remaining decode iterations: not-yet-prefilled requests need the full
-        # OL; otherwise only the longest-remaining running request matters
-        if waiting or not running:
+        # OL; otherwise only the longest-remaining in-flight request matters
+        if waiting or not (running or preempted):
             rem_out = rq.max_output_tokens
         else:
-            rem_out = max(r.remaining_output for r in running)
+            rem_out = max(r.remaining_output for r in running + preempted)
         batches = batch_decompose(utoks, rem_out, len(running), self.limits)
         total = 0.0
         for b in batches:

@@ -17,6 +17,7 @@ _req_counter = itertools.count()
 class RequestState(enum.Enum):
     WAITING = "waiting"
     RUNNING = "running"    # prefilled; decoding
+    PREEMPTED = "preempted"  # KV reclaimed under pressure; awaiting re-prefill
     FINISHED = "finished"
     CANCELLED = "cancelled"  # terminal: evicted by relQuery cancellation
 
@@ -37,10 +38,29 @@ class Request:
     prefilled: bool = False
     prefilled_tokens: int = 0          # chunked-prefill progress (Sarathi)
     finish_time: Optional[float] = None
+    # Output tokens generated before the last preemption. A preempted request
+    # restarts recompute-style: its next prefill pass re-loads the prompt plus
+    # these preserved tokens (they are kept in ``output_tokens``), then decode
+    # resumes from where it left off.
+    preserved_output_tokens: int = 0
 
     @property
     def num_prompt_tokens(self) -> int:
         return len(self.tokens)
+
+    @property
+    def prefill_target_tokens(self) -> int:
+        """Tokens the next prefill pass must load into KV: the prompt, plus —
+        after a preemption — the generated tokens being recomputed."""
+        return self.num_prompt_tokens + self.preserved_output_tokens
+
+    def prefill_token_ids(self) -> Tuple[int, ...]:
+        """The token sequence a prefill pass computes over (prompt, or prompt
+        + preserved generation for a preempted request's restart)."""
+        if not self.preserved_output_tokens:
+            return tuple(self.tokens)
+        return tuple(self.tokens) + \
+            tuple(self.output_tokens[:self.preserved_output_tokens])
 
     @property
     def remaining_output(self) -> int:
@@ -79,6 +99,7 @@ class RelQuery:
     priority_fresh: bool = False       # was recomputed this iteration
     _was_all_waiting: bool = False     # Eq. 12 reuse predicate memo
     cache_miss_ratio: float = 1.0      # sampled utok*/tok estimate (Eq. 11)
+    preemptions: int = 0               # times any request of R was preempted
 
     def __post_init__(self):
         for r in self.requests:
@@ -104,6 +125,9 @@ class RelQuery:
 
     def running_requests(self) -> List[Request]:
         return [r for r in self.requests if r.state == RequestState.RUNNING]
+
+    def preempted_requests(self) -> List[Request]:
+        return [r for r in self.requests if r.state == RequestState.PREEMPTED]
 
     def is_finished(self) -> bool:
         return all(r.is_finished() for r in self.requests)

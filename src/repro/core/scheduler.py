@@ -40,24 +40,43 @@ class BatchResult:
     uncached_tokens: Optional[int] = None   # engine-measured true utok
 
 
+KV_ADMISSION_MODES = ("conservative", "optimistic")
+
+
 class SchedulerBase:
     def __init__(self, limits: Optional[BatchLimits] = None,
                  latency_model: Optional[BatchLatencyModel] = None,
-                 prefix_cache: Optional[PrefixCacheView] = None):
+                 prefix_cache: Optional[PrefixCacheView] = None,
+                 kv_admission: str = "conservative"):
         from repro.core.latency_model import a100_opt13b
+        if kv_admission not in KV_ADMISSION_MODES:
+            raise ValueError(f"kv_admission must be one of {KV_ADMISSION_MODES}"
+                             f" (got {kv_admission!r})")
         self.limits = limits or BatchLimits()
         self.lm = latency_model or a100_opt13b()
         self.prefix_cache = prefix_cache
+        self.kv_admission = kv_admission
         self.relqueries: Dict[str, RelQuery] = {}
         self.tokens_in_use = 0
         # Worst-case KV commitment: the full prompt+output footprint of every
         # request that has started prefilling (chunked or complete) and not
-        # finished. Admission checks use this, not tokens_in_use — running
-        # requests grow into their footprint as they decode, so admitting
-        # against current usage overcommits the cap.
+        # finished. Conservative admission checks use this, not tokens_in_use —
+        # running requests grow into their footprint as they decode, so
+        # admitting against current usage overcommits the cap. Optimistic
+        # admission checks ``kv_demand()`` (current footprint) instead and
+        # relies on priority-aware preemption when decode growth hits the cap.
         self.committed_tokens = 0
+        # KV held by in-flight chunked prefills (chunks landed, prompt not yet
+        # complete) — tokens_in_use only counts completed prefills, so the
+        # optimistic demand measure needs this ledger on top.
+        self.partial_prefill_tokens = 0
         self.iteration = 0
         self.finished_relqueries: List[RelQuery] = []
+        # preemption instrumentation + executor-release handoff
+        self.preemptions = 0
+        self.preempted_tokens = 0          # KV tokens reclaimed by preemption
+        self.missing_decode_outputs = 0    # decode reqs absent from BatchResult
+        self._preempt_release: List[str] = []
         # incremental queues
         self._waiting_of: Dict[str, List[Request]] = {}
         self._running: List[Request] = []
@@ -131,21 +150,45 @@ class SchedulerBase:
     def estimated_utok(self, r: Request) -> int:
         """Estimated uncached tokens of the whole remaining prompt — the
         chunk estimate with the chunk covering everything left."""
-        remaining = r.num_prompt_tokens - r.prefilled_tokens
+        remaining = r.prefill_target_tokens - r.prefilled_tokens
         return max(1, self.estimated_chunk_utok(r, remaining))
 
     def estimated_chunk_utok(self, r: Request, chunk: int) -> int:
         """Estimated uncached tokens of the next ``chunk`` prompt tokens,
         mirroring the executor's chunked-prefill cache accounting with the
-        sampled miss ratio in place of an exact prefix-cache probe."""
+        sampled miss ratio in place of an exact prefix-cache probe. A
+        preempted request's preserved generation is part of the target and
+        never prefix-cached."""
         rq = self.relqueries[r.rel_id]
         n = r.num_prompt_tokens
         est_cached = n - max(1, round(n * rq.cache_miss_ratio))
         done = r.prefilled_tokens
-        return max(0, min(done + chunk, n) - max(done, est_cached))
+        return max(0, min(done + chunk, r.prefill_target_tokens)
+                   - max(done, est_cached))
 
     def _kv_footprint(self, r: Request) -> int:
+        """Worst-case KV a request may ever hold. The prompt+OL bound also
+        covers preempted restarts: preserved tokens count toward OL."""
         return r.num_prompt_tokens + r.max_output_tokens
+
+    # ------------------------------------------------------------- KV admission
+    def kv_demand(self) -> int:
+        """Tokens the admission check must assume resident. Conservative:
+        worst-case commitment of every started request. Optimistic: the KV
+        actually held right now (completed prefills + generation so far +
+        landed chunks)."""
+        if self.kv_admission == "conservative":
+            return self.committed_tokens
+        return self.tokens_in_use + self.partial_prefill_tokens
+
+    def _admission_need(self, r: Request) -> int:
+        """Cap headroom required to schedule the rest of ``r``'s prefill.
+        Conservative: the full footprint, charged once (already-started
+        requests are pre-committed). Optimistic: only the KV this prefill
+        pass will write, plus the decode token emitted on completion."""
+        if self.kv_admission == "conservative":
+            return 0 if r.prefilled_tokens else self._kv_footprint(r)
+        return (r.prefill_target_tokens - r.prefilled_tokens) + 1
 
     def build_prefill_candidate(self, single_relquery: bool = True) -> Optional[Batch]:
         full_order = self.sorted_waiting_rqs()
@@ -161,9 +204,8 @@ class SchedulerBase:
                     break
                 if len(chosen) + 1 > self.limits.max_num_seqs:
                     break
-                # partially-chunked requests are already committed
-                needed = 0 if r.prefilled_tokens else self._kv_footprint(r)
-                if self.committed_tokens + full_tok_sum + needed > self.limits.cap:
+                needed = self._admission_need(r)
+                if self.kv_demand() + full_tok_sum + needed > self.limits.cap:
                     break  # head-of-line: don't skip ahead of the cap-blocked rq
                 chosen.append(r)
                 utok_sum += u
@@ -175,21 +217,30 @@ class SchedulerBase:
             rel = self.relqueries[chosen[0].rel_id] if single_relquery else None
             return Batch.prefill(chosen, uncached_tokens=utok_sum, relquery=rel)
         # Cap-blocked head of line. Fall back to requests whose KV is already
-        # committed (partially chunked): finishing them adds nothing to the
-        # commitment and is the only way the queue can drain — without this,
-        # a committed request stranded behind a too-big newcomer would turn
-        # into a spurious engine deadlock.
+        # committed (partially chunked): under conservative admission finishing
+        # them adds nothing to the commitment and is the only way the queue can
+        # drain — without this, a committed request stranded behind a too-big
+        # newcomer would turn into a spurious engine deadlock. Under optimistic
+        # admission a mid-chunk request's *remaining* prefill is NOT yet
+        # resident, so it still needs real cap headroom — requests that don't
+        # fit are skipped (if none fit, the engine's preempt-and-retry reclaims
+        # someone's partial chunks instead of overshooting the device cap).
         for rq in full_order:
             committed = [r for r in self._waiting_of[rq.rel_id] if r.prefilled_tokens]
-            if committed:
-                reqs, utok = [], 0
-                for r in committed:   # same budget discipline as the main path
-                    u = self.estimated_utok(r)
-                    if reqs and (utok + u > self.limits.max_num_batched_tokens
-                                 or len(reqs) >= self.limits.max_num_seqs):
-                        break
-                    reqs.append(r)
-                    utok += u
+            reqs, utok, need_sum = [], 0, 0
+            for r in committed:   # same budget discipline as the main path
+                u = self.estimated_utok(r)
+                if reqs and (utok + u > self.limits.max_num_batched_tokens
+                             or len(reqs) >= self.limits.max_num_seqs):
+                    break
+                if self.kv_admission == "optimistic":
+                    need = self._admission_need(r)
+                    if self.kv_demand() + need_sum + need > self.limits.cap:
+                        continue   # its remaining chunks don't fit right now
+                    need_sum += need
+                reqs.append(r)
+                utok += u
+            if reqs:
                 return Batch.prefill(reqs, uncached_tokens=utok,
                                      relquery=rq if single_relquery else None)
         return None
@@ -218,12 +269,25 @@ class SchedulerBase:
                 if budget <= 0 or \
                         len(decode_reqs) + len(prefill_reqs) >= self.limits.max_num_seqs:
                     break
-                remaining = r.num_prompt_tokens - r.prefilled_tokens
-                needed = 0 if r.prefilled_tokens else self._kv_footprint(r)
-                if self.committed_tokens + full_tok_sum + needed > self.limits.cap:
-                    budget = 0
-                    break
-                chunk = min(remaining, budget)
+                remaining = r.prefill_target_tokens - r.prefilled_tokens
+                if self.kv_admission == "conservative":
+                    needed = 0 if r.prefilled_tokens else self._kv_footprint(r)
+                    if self.kv_demand() + full_tok_sum + needed > self.limits.cap:
+                        budget = 0
+                        break
+                    chunk = min(remaining, budget)
+                else:
+                    # optimistic: the chunk itself is the commitment; shrink it
+                    # to the cap headroom left after this pass's decode growth
+                    free = self.limits.cap - self.kv_demand() \
+                        - len(decode_reqs) - full_tok_sum
+                    chunk = min(remaining, budget, max(0, free))
+                    if chunk == remaining and chunk + 1 > free:
+                        chunk -= 1   # completing the prompt emits a decode token
+                    if chunk <= 0:
+                        budget = 0
+                        break
+                    needed = chunk + (1 if chunk == remaining else 0)
                 chunks[r.req_id] = chunk
                 prefill_reqs.append(r)
                 budget -= chunk
@@ -252,10 +316,14 @@ class SchedulerBase:
             cancelled.extend(mine)
         for r in cancelled:
             # RUNNING requests hold prompt + generated tokens in the KV cache;
-            # any request past its first prefill chunk holds a full-footprint
-            # commitment (mirrors complete_batch / _finish_request accounting).
+            # requests mid-chunk hold their landed chunks; any request past its
+            # first prefill chunk holds a full-footprint commitment (mirrors
+            # complete_batch / _finish_request accounting). PREEMPTED requests
+            # hold nothing — their KV was reclaimed at preemption.
             if r.state == RequestState.RUNNING:
                 self.tokens_in_use -= r.total_tokens
+            elif r.prefilled_tokens > 0:
+                self.partial_prefill_tokens -= r.prefilled_tokens
             if r.prefilled_tokens > 0:
                 self.committed_tokens -= self._kv_footprint(r)
             r.state = RequestState.CANCELLED
@@ -268,8 +336,110 @@ class SchedulerBase:
     def on_relquery_cancelled(self, rq: RelQuery, now: float) -> None:
         pass
 
+    # ------------------------------------------------------------- preemption
+    def preempt_request(self, r: Request, now: float) -> None:
+        """Reclaim ``r``'s KV under memory pressure. A RUNNING victim moves to
+        ``PREEMPTED`` at the front of its relQuery's waiting list and restarts
+        recompute-style (re-prefill of prompt + generation so far, generated
+        tokens preserved); a mid-chunk victim just loses its landed chunks.
+        The engine drains ``drain_preempt_releases`` to free executor slots."""
+        rq = self.relqueries[r.rel_id]
+        if r.state == RequestState.RUNNING:
+            self.tokens_in_use -= r.total_tokens
+            self.preempted_tokens += r.total_tokens
+            self._running.remove(r)
+            r.preserved_output_tokens = len(r.output_tokens)
+            r.prefilled = False
+            r.state = RequestState.PREEMPTED
+            self._waiting_of.setdefault(r.rel_id, []).insert(0, r)
+        elif r.prefilled_tokens > 0:
+            self.partial_prefill_tokens -= r.prefilled_tokens
+            self.preempted_tokens += r.prefilled_tokens
+        else:
+            return                      # nothing on the device: no-op
+        self.committed_tokens -= self._kv_footprint(r)
+        r.prefilled_tokens = 0
+        self.preemptions += 1
+        rq.preemptions += 1
+        self._preempt_release.append(r.req_id)
+
+    def drain_preempt_releases(self) -> List[str]:
+        """req_ids preempted since the last drain — the engine frees their
+        executor-side decode slots."""
+        out, self._preempt_release = self._preempt_release, []
+        return out
+
+    def _pick_preemption_victim(self) -> Optional[Request]:
+        """Lowest-priority victim per the DPU: the running relQuery with the
+        *highest* priority value (ascending priority == most urgent first, the
+        same order ``rq_sort_key`` gives the waiting queue — FCFS baselines
+        therefore preempt the latest arrival). Within the victim relQuery,
+        the most recently started request yields first (least wasted work)."""
+        rqs = self.running_rqs()
+        if not rqs:
+            return None
+        victim_rq = max(rqs, key=self.rq_sort_key)
+        for r in reversed(self._running):
+            if r.rel_id == victim_rq.rel_id:
+                return r
+        return None
+
+    def preempt_for_headroom(self, now: float) -> None:
+        """Optimistic-mode pressure valve, run before every batch choice:
+        while the next decode step over the running queue would exceed the
+        cap, preempt victims until it fits (or nothing is left running)."""
+        while self._running:
+            growth = min(len(self._running), self.limits.max_num_seqs)
+            if self.kv_demand() + growth <= self.limits.cap:
+                break
+            victim = self._pick_preemption_victim()
+            if victim is None:
+                break
+            self.preempt_request(victim, now)
+
+    def preempt_for_progress(self, now: float) -> List[Request]:
+        """Engine-deadlock escape hatch: when no batch is schedulable but work
+        remains, reclaim the lowest-priority victim's KV and let the engine
+        retry — a running request if any, else a mid-chunk request's landed
+        chunks (two half-loaded prompts can wedge against the cap with nothing
+        running). Returns the victims ([] when nothing can be preempted —
+        conservative mode, or no KV left to reclaim: a genuine deadlock)."""
+        if self.kv_admission != "optimistic":
+            return []
+        victim = self._pick_preemption_victim() or self._pick_chunk_victim()
+        if victim is None:
+            return []
+        self.preempt_request(victim, now)
+        return [victim]
+
+    def _pick_chunk_victim(self) -> Optional[Request]:
+        """A mid-chunk waiting request holding partial KV, from the
+        lowest-priority relQuery that has one. Preempting it strictly shrinks
+        resident partial KV, so the engine's retry loop terminates."""
+        best_rq = None
+        for rel_id, lst in self._waiting_of.items():
+            if any(r.prefilled_tokens for r in lst):
+                rq = self.relqueries[rel_id]
+                if best_rq is None or self.rq_sort_key(rq) > self.rq_sort_key(best_rq):
+                    best_rq = rq
+        if best_rq is None:
+            return None
+        mine = [r for r in self._waiting_of[best_rq.rel_id] if r.prefilled_tokens]
+        return mine[-1]   # least queue-progress first: deterministic, minimal waste
+
     # ------------------------------------------------------------- lifecycle
     def schedule(self, now: float) -> Optional[Batch]:
+        """Template: refresh priorities, relieve KV pressure (optimistic
+        admission), then let the policy pick this iteration's batch."""
+        self.refresh_priorities(now)
+        if self.kv_admission == "optimistic":
+            self.preempt_for_headroom(now)
+        return self.choose_batch(now)
+
+    def refresh_priorities(self, now: float) -> None:
+        """Hook: recompute relQuery priorities before victim/batch choice."""
+
+    def choose_batch(self, now: float) -> Optional[Batch]:
         raise NotImplementedError
 
     def complete_batch(self, batch: Batch, result: BatchResult,
@@ -280,15 +450,25 @@ class SchedulerBase:
             rq = self.relqueries[r.rel_id]
             if rq.first_prefill_start is None:
                 rq.first_prefill_start = start_ts
-            if r.prefilled_tokens == 0:   # first chunk (or whole prompt) lands
+            before = r.prefilled_tokens
+            if before == 0:   # first chunk (or whole prompt) lands
                 self.committed_tokens += self._kv_footprint(r)
-            r.prefilled_tokens = min(r.num_prompt_tokens,
-                                     r.prefilled_tokens + batch.chunk_of(r))
-            if r.prefilled_tokens >= r.num_prompt_tokens and not r.prefilled:
+            target = r.prefill_target_tokens
+            r.prefilled_tokens = min(target, before + batch.chunk_of(r))
+            self.partial_prefill_tokens += r.prefilled_tokens - before
+            if r.prefilled_tokens >= target and not r.prefilled:
+                self.partial_prefill_tokens -= r.prefilled_tokens
                 self._finish_prefill(r, rq, result, end_ts)
                 touched_rels.add(r.rel_id)
         for r in batch.decode_requests:
-            tok, finished = result.outputs.get(r.req_id, (0, False))
+            if r.req_id not in result.outputs:
+                # The executor produced nothing for this request (e.g. its
+                # slot vanished mid-batch). Fabricating a token here would
+                # corrupt the output stream *and* the KV ledger — count it
+                # and let the request be rescheduled instead.
+                self.missing_decode_outputs += 1
+                continue
+            tok, finished = result.outputs[r.req_id]
             r.output_tokens.append(tok)
             self.tokens_in_use += 1
             if finished or r.remaining_output <= 0:
@@ -307,11 +487,17 @@ class SchedulerBase:
             if not wl:
                 del self._waiting_of[r.rel_id]
         self._running.append(r)
-        self.tokens_in_use += r.num_prompt_tokens
-        tok, finished = result.outputs.get(r.req_id, (0, False))
+        self.tokens_in_use += r.prefill_target_tokens
+        rq.last_prefill_end = end_ts   # monotone: last prefill wins
+        out = result.outputs.get(r.req_id)
+        if out is None:
+            # Same guard as the decode path: no fabricated token 0 — the
+            # prefill landed, so the request decodes next iteration instead.
+            self.missing_decode_outputs += 1
+            return
+        tok, finished = out
         r.output_tokens.append(tok)
         self.tokens_in_use += 1
-        rq.last_prefill_end = end_ts   # monotone: last prefill wins
         if finished or r.remaining_output <= 0:
             self._finish_request(r, end_ts)
 
@@ -339,8 +525,9 @@ class RelServeScheduler(SchedulerBase):
     enable_mixed = True        # offer a chunked-mixed candidate to ABA
 
     def __init__(self, limits=None, latency_model=None, prefix_cache=None,
-                 dpu_config: Optional[DPUConfig] = None):
-        super().__init__(limits, latency_model, prefix_cache)
+                 dpu_config: Optional[DPUConfig] = None,
+                 kv_admission: str = "conservative"):
+        super().__init__(limits, latency_model, prefix_cache, kv_admission)
         self.dpu = DynamicPriorityUpdater(self.lm, self.limits, dpu_config)
         self.aba = AdaptiveBatchArranger(self.lm)
         # wall-clock overhead instrumentation (paper Table 6)
@@ -365,12 +552,14 @@ class RelServeScheduler(SchedulerBase):
                 out.append(self.relqueries[rel_id])
         return out
 
-    def schedule(self, now: float) -> Optional[Batch]:
+    def refresh_priorities(self, now: float) -> None:
         import time as _time
         t0 = _time.perf_counter()
         self.dpu.update(self._dpu_targets(), now, self.prefix_cache)
         self.dpu_time += _time.perf_counter() - t0
 
+    def choose_batch(self, now: float) -> Optional[Batch]:
+        import time as _time
         d_cand = self.build_decode_candidate()
         p_cand = self.build_prefill_candidate(single_relquery=True)
         m_cand = None

@@ -64,6 +64,10 @@ class ServiceReport:
     prefix_lookup_tokens: int = 0   # hits + misses behind prefix_hit_ratio
     schedule_time: float = 0.0
     cancelled_rel_ids: List[str] = field(default_factory=list)
+    # KV-pressure subsystem: preempt/restart cycles under optimistic admission
+    preemptions: int = 0
+    preempted_tokens: int = 0
+    missing_decode_outputs: int = 0
 
     @property
     def avg_latency(self) -> float:
@@ -102,6 +106,9 @@ def merge_reports(reports: Sequence[ServiceReport]) -> ServiceReport:
         merged.prefix_lookup_tokens += rep.prefix_lookup_tokens
         hit_tokens += rep.prefix_hit_ratio * rep.prefix_lookup_tokens
         merged.cancelled_rel_ids.extend(rep.cancelled_rel_ids)
+        merged.preemptions += rep.preemptions
+        merged.preempted_tokens += rep.preempted_tokens
+        merged.missing_decode_outputs += rep.missing_decode_outputs
     merged.events.sort(key=lambda e: (e.start, e.replica))
     merged.cancelled_rel_ids.sort()
     merged.prefix_hit_ratio = (hit_tokens / merged.prefix_lookup_tokens
@@ -139,19 +146,22 @@ class EngineCore:
 
     def tick(self, now: float) -> Optional[BatchEvent]:
         """Schedule + execute one batch at clock ``now``. Returns ``None`` when
-        the replica is idle (nothing admitted and unfinished); raises
-        ``EngineDeadlockError`` if work exists but can never be scheduled."""
-        t0 = _time.perf_counter()
-        batch = self.scheduler.schedule(now)
-        self.schedule_time += _time.perf_counter() - t0
-        if batch is None:
-            if self.scheduler.has_work():
-                # No candidate is constructible and no batch in flight can free
-                # KV — admitting more work or advancing the clock cannot help.
+        the replica is idle (nothing admitted and unfinished). Under optimistic
+        KV admission a stalled scheduler is first asked to preempt the
+        lowest-priority running relQuery and retry; ``EngineDeadlockError`` is
+        reserved for work that can never be scheduled no matter what is
+        evicted (a single request that does not fit under the cap)."""
+        batch = self._schedule(now)
+        while batch is None and self.scheduler.has_work():
+            if not self.scheduler.preempt_for_progress(now):
+                # Nothing left to evict — admitting more work, advancing the
+                # clock or reclaiming KV cannot help.
                 raise EngineDeadlockError(self.scheduler.tokens_in_use,
                                           self.scheduler.limits.cap,
                                           self.scheduler.stuck_rel_ids(),
                                           self.replica_id)
+            batch = self._schedule(now)
+        if batch is None:
             return None
         duration, result = self.executor.execute(batch, now)
         start, end = now, now + duration
@@ -165,6 +175,22 @@ class EngineCore:
         if self.on_batch is not None:
             self.on_batch(event, batch, result)
         return event
+
+    def _schedule(self, now: float) -> Optional[Batch]:
+        """One timed scheduler call, then free executor slots of any requests
+        the scheduler preempted while choosing (headroom or retry preemption
+        both funnel through ``drain_preempt_releases``)."""
+        t0 = _time.perf_counter()
+        batch = self.scheduler.schedule(now)
+        self.schedule_time += _time.perf_counter() - t0
+        self._release_preempted()
+        return batch
+
+    def _release_preempted(self) -> None:
+        release = getattr(self.executor, "release_request", None)
+        for req_id in self.scheduler.drain_preempt_releases():
+            if release is not None:
+                release(req_id)
 
     def cancel_relquery(self, rel_id: str, now: float) -> List[Request]:
         """Cancel a relQuery between ticks: evict its queued/running requests
@@ -202,6 +228,10 @@ class EngineCore:
                                   if pc is not None else 0),
             schedule_time=self.schedule_time,
             cancelled_rel_ids=cancelled,
+            preemptions=getattr(self.scheduler, "preemptions", 0),
+            preempted_tokens=getattr(self.scheduler, "preempted_tokens", 0),
+            missing_decode_outputs=getattr(self.scheduler,
+                                           "missing_decode_outputs", 0),
         )
 
 

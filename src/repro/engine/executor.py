@@ -79,10 +79,15 @@ class RealExecutor:
 
     # ------------------------------------------------------------------ prefill
     def _prefill_one(self, req: Request) -> Tuple[int, int]:
-        """Prefill a request, write its KV into a slot; returns (token, utok)."""
-        n = req.num_prompt_tokens
+        """Prefill a request, write its KV into a slot; returns (token, utok).
+        For a preempted request's restart the pass recomputes prompt +
+        preserved generation (recompute-style preemption recovery)."""
+        seq = req.prefill_token_ids()
+        n = len(seq)
         if self.prefix_cache is not None:
-            cached = self.prefix_cache.count_cached(req.tokens)
+            cached = self.prefix_cache.count_cached(seq)
+            # only the prompt enters the cache — generated tokens are never
+            # prefix-cached (the estimator/PEM invariant)
             self.prefix_cache.insert(req.tokens)
         else:
             cached = 0
@@ -93,7 +98,7 @@ class RealExecutor:
                 lambda p, t, sl: self.model.prefill(p, t, seq_lens=sl,
                                                     max_len=self.max_len))
         toks = np.zeros((1, bucket), np.int32)
-        toks[0, :n] = req.tokens
+        toks[0, :n] = seq
         logits, kv = self._prefill_fn[bucket](
             self.params, jnp.asarray(toks), jnp.asarray([n], jnp.int32))
         slot = self._alloc_slot(req)
@@ -159,7 +164,9 @@ class RealExecutor:
             tok, utok = self._prefill_one(r)
             total_utok += utok
             prefilled_any = True
-            finished = self._is_finish_token(r, tok, 1)
+            # a restarted (preempted) request already produced its preserved
+            # tokens; this prefill emits the (len + 1)-th
+            finished = self._is_finish_token(r, tok, len(r.output_tokens) + 1)
             outputs[r.req_id] = (tok, finished)
             if finished:
                 self._free_slot(r.req_id)

@@ -59,13 +59,21 @@ class SimulatedExecutor:
     # ------------------------------------------------------------------
     def _true_utok(self, r: Request, chunk: int) -> int:
         """Uncached tokens of the ``chunk`` next prompt tokens of ``r`` —
-        prefix-cache savings apply to the front of the prompt."""
+        prefix-cache savings apply to the front of the prompt (for a preempted
+        request's restart, the prompt + preserved generation). Only the first
+        chunk of a prefill pass probes with stats: one stats-bearing lookup
+        per pass keeps hits+misses equal to the prompt tokens actually looked
+        up, instead of inflating once per chunk."""
+        seq = r.prefill_token_ids()
         if self.prefix_cache is None:
             n_cached = 0
+        elif r.prefilled_tokens == 0:
+            n_cached = self.prefix_cache.count_cached(seq)
         else:
-            n_cached = self.prefix_cache.count_cached(r.tokens)
+            n_cached = self.prefix_cache.peek_cached(seq)
         done = r.prefilled_tokens
-        return max(0, min(done + chunk, r.num_prompt_tokens) - max(done, n_cached))
+        return max(0, min(done + chunk, r.prefill_target_tokens)
+                   - max(done, n_cached))
 
     def _token_for(self, r: Request) -> Tuple[int, bool]:
         produced = len(r.output_tokens) + 1
@@ -86,6 +94,9 @@ class SimulatedExecutor:
             self.total_prefill_tokens += chunk
             if batch.completes_prompt(r):
                 if self.prefix_cache is not None:
+                    # only the *prompt* enters the prefix cache: generated
+                    # tokens are never prefix-cached, the invariant the utok
+                    # estimator and PEM's re-prefill pricing rely on
                     self.prefix_cache.insert(r.tokens)
                 outputs[r.req_id] = self._token_for(r)
         for r in batch.decode_requests:

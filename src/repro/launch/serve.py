@@ -42,6 +42,9 @@ def _print_report(tag: str, report) -> None:
     print(f"[{tag}] phases: waiting {w:.2f}s  core {c:.2f}s  tail {t:.2f}s  |  "
           f"e2e {report.end_to_end:.1f}s  prefix-hit {report.prefix_hit_ratio:.2%}  "
           f"iterations {len(report.events)}")
+    if report.preemptions:
+        print(f"[{tag}] kv-pressure: {report.preemptions} preemptions  "
+              f"{report.preempted_tokens} tokens reclaimed")
 
 
 def run_open_loop(frontend: Frontend, trace) -> "object":
@@ -140,6 +143,15 @@ def main() -> None:
                     help="data-parallel engine replicas (simulate mode)")
     ap.add_argument("--router", default="affinity_spill",
                     choices=list(ROUTER_POLICIES))
+    ap.add_argument("--kv-admission", default="conservative",
+                    choices=["conservative", "optimistic"],
+                    help="KV-cap admission policy: 'conservative' reserves "
+                         "each request's worst-case prompt+output footprint "
+                         "upfront; 'optimistic' admits on current footprint "
+                         "and preempts the lowest-priority running relQuery "
+                         "(re-prefill restart) when decode growth hits the cap")
+    ap.add_argument("--kv-cap", type=int, default=None,
+                    help="override the KV-resident token cap (BatchLimits.cap)")
     ap.add_argument("--starvation-threshold", type=float, default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -153,7 +165,10 @@ def main() -> None:
             f"--num-relqueries must be >= 1 (got {args.num_relqueries})")
     if args.max_requests < 1:
         raise SystemExit(f"--max-requests must be >= 1 (got {args.max_requests})")
+    if args.kv_cap is not None and args.kv_cap < 1:
+        raise SystemExit(f"--kv-cap must be >= 1 (got {args.kv_cap})")
     lm = a100_opt13b()
+    limits = BatchLimits() if args.kv_cap is None else BatchLimits(cap=args.kv_cap)
 
     if args.simulate:
         ds = make_dataset(args.dataset, num_rows=10_000, seed=args.seed)
@@ -163,9 +178,10 @@ def main() -> None:
         dpu = DPUConfig(starvation_threshold=args.starvation_threshold)
         cluster = build_simulated_cluster(
             args.num_replicas, scheduler=args.scheduler, latency_model=lm,
-            router_policy=args.router, dpu_config=dpu, seed=args.seed)
+            router_policy=args.router, dpu_config=dpu, seed=args.seed,
+            limits=limits, kv_admission=args.kv_admission)
         print(f"scheduler={args.scheduler} replicas={args.num_replicas} "
-              f"router={args.router}")
+              f"router={args.router} kv-admission={args.kv_admission}")
         if args.open_loop:
             report = run_open_loop(Frontend(cluster), trace)
             _print_report("open-loop", report)
@@ -191,7 +207,8 @@ def main() -> None:
             raise SystemExit("real-JAX mode runs a single replica on this host; "
                              "use --simulate for --num-replicas > 1")
         pc = PrefixCache(block_size=16)
-        kw = dict(limits=BatchLimits(), latency_model=lm, prefix_cache=pc)
+        kw = dict(limits=limits, latency_model=lm, prefix_cache=pc,
+                  kv_admission=args.kv_admission)
         if args.scheduler.startswith("relserve"):
             kw["dpu_config"] = DPUConfig(
                 starvation_threshold=args.starvation_threshold)

@@ -17,11 +17,19 @@ shims over it that reproduce their historical reports exactly.
 Lifecycle of one relQuery::
 
     submit(rq) ─► QUEUED ──first prefill──► RUNNING ──last request──► FINISHED
-                     │                        │    ╲
+                     │                        │ ▲  ╲
                      │       on_token(req_id, tok)  ╲ handle.cancel() /
-                     │                               ╲ deadline exceeded
+                     │                        │ │    ╲ deadline exceeded
+                     │                 KV pressure re-prefill
+                     │                 (requests PREEMPTED,     ╲
+                     │                  generation preserved)    ╲
                      └───────────────────────────────► CANCELLED
                                        (queue + KV commitment reclaimed)
+
+Under ``kv_admission="optimistic"`` individual requests of a RUNNING relQuery
+may be preempted (KV reclaimed, restart by re-prefill of prompt + generation
+so far) — the handle stays RUNNING throughout; ``handle.preemptions`` counts
+the cycles and ``snapshot().preemptions`` aggregates them fleet-wide.
 """
 from __future__ import annotations
 
@@ -81,8 +89,15 @@ class RelQueryHandle:
 
     def partial_outputs(self) -> Dict[str, List[int]]:
         """Per-request generated tokens so far (generation order), at any
-        point of the lifecycle — including after cancellation."""
+        point of the lifecycle — including after cancellation. Preemption
+        never rolls these back: preserved tokens survive the restart."""
         return {r.req_id: list(r.output_tokens) for r in self.rq.requests}
+
+    @property
+    def preemptions(self) -> int:
+        """Preempt→restart cycles this relQuery's requests went through under
+        KV pressure (0 under conservative admission)."""
+        return self.rq.preemptions
 
     def latency(self) -> Optional[float]:
         return self.rq.latency()

@@ -1,0 +1,398 @@
+"""KV-pressure subsystem: optimistic admission + priority-aware preemption.
+
+Covers the preemption lifecycle invariants (ledger conservation across
+preempt→restart cycles, output preservation), cancellation of preempted
+relQueries, the satellite accounting fixes (prefix-cache lookup volume under
+chunked prefill, no fabricated decode outputs), and the exact-equivalence pin
+that conservative admission (the default) reproduces the pre-subsystem
+per-relQuery latencies bit-for-bit for both relserve and vllm.
+"""
+import copy
+
+import pytest
+
+from repro.core.batch import Batch
+from repro.core.latency_model import a100_opt13b
+from repro.core.policies import SCHEDULERS
+from repro.core.priority import BatchLimits
+from repro.core.relquery import RequestState, make_relquery
+from repro.core.scheduler import BatchResult, RelServeScheduler
+from repro.data.trace import quick_trace
+from repro.engine.engine import (EngineCore, EngineDeadlockError,
+                                 ServingEngine)
+from repro.engine.prefix_cache import PrefixCache
+from repro.engine.simulator import SimulatedExecutor
+
+
+def _engine(name="relserve", cap=16384, mode="optimistic", pc=None, seed=0):
+    lm = a100_opt13b()
+    sched = SCHEDULERS[name](limits=BatchLimits(cap=cap), latency_model=lm,
+                             prefix_cache=pc, kv_admission=mode)
+    return EngineCore(sched, SimulatedExecutor(lm, prefix_cache=pc, seed=seed))
+
+
+def _drain(core, now=0.0, max_iters=100_000):
+    while core.has_work():
+        ev = core.tick(now)
+        now = ev.end
+        yield ev
+
+
+# ------------------------------------------------------------------ lifecycle
+def test_optimistic_preempts_instead_of_deadlocking():
+    """Workload whose combined worst case exceeds the cap: conservative
+    serializes (or deadlocks), optimistic packs and preempts — everything
+    still finishes, and the KV ledgers conserve to zero."""
+    core = _engine(cap=260, mode="optimistic")
+    sched = core.scheduler
+    a = make_relquery("A", [[1] * 100] * 2, 0.0, 60)   # worst case 320 > cap
+    b = make_relquery("B", [[2] * 60], 0.0, 30)
+    core.admit(a, 0.0)
+    core.admit(b, 0.0)
+    for _ in _drain(core):
+        # optimistic invariant: actually-resident KV never exceeds the cap
+        assert sched.tokens_in_use + sched.partial_prefill_tokens \
+            <= sched.limits.cap
+    assert a.is_finished() and b.is_finished()
+    assert sched.preemptions > 0
+    assert sched.tokens_in_use == 0
+    assert sched.committed_tokens == 0
+    assert sched.partial_prefill_tokens == 0
+
+
+def test_preempted_request_preserves_generation():
+    """Recompute-style restart: tokens generated before the preemption stay
+    in output_tokens, and the final stream equals the no-pressure stream."""
+    trace = [make_relquery("A", [[1] * 50] * 2, 0.0, 30),
+             make_relquery("B", [[2] * 50] * 2, 0.0, 30)]
+    loose = _engine(cap=16384, mode="optimistic")
+    tight = _engine(cap=220, mode="optimistic")
+    t1, t2 = copy.deepcopy(trace), copy.deepcopy(trace)
+    for rq in t1:
+        loose.admit(rq, 0.0)
+    for rq in t2:
+        tight.admit(rq, 0.0)
+    list(_drain(loose))
+    list(_drain(tight))
+    assert tight.scheduler.preemptions > 0
+    for rq1, rq2 in zip(t1, t2):
+        for r1, r2 in zip(rq1.requests, rq2.requests):
+            # same req ids on both copies -> same deterministic sim tokens
+            assert r1.output_tokens == r2.output_tokens, \
+                "preemption altered the token stream"
+
+
+def test_preemption_state_machine_and_ledger_conservation():
+    """Drive one preempt→restart cycle by hand and check every ledger."""
+    lm = a100_opt13b()
+    sched = RelServeScheduler(limits=BatchLimits(cap=1000), latency_model=lm,
+                              kv_admission="optimistic")
+    rq = make_relquery("A", [[1] * 40], 0.0, 20)
+    sched.add_relquery(rq, 0.0)
+    r = rq.requests[0]
+    batch = sched.schedule(0.0)
+    assert batch.kind == "prefill"
+    sched.complete_batch(batch, BatchResult({r.req_id: (5, False)}), 0.0, 1.0)
+    assert r.state == RequestState.RUNNING
+    assert sched.tokens_in_use == 41 and sched.committed_tokens == 60
+
+    sched.preempt_request(r, 1.0)
+    assert r.state == RequestState.PREEMPTED
+    assert r.preserved_output_tokens == 1 and r.output_tokens == [5]
+    assert r.prefilled_tokens == 0 and not r.prefilled
+    assert sched.tokens_in_use == 0 and sched.committed_tokens == 0
+    assert sched.preemptions == 1 and rq.preemptions == 1
+    assert sched.drain_preempt_releases() == [r.req_id]
+    assert sched.drain_preempt_releases() == []   # drained exactly once
+    assert r.prefill_target_tokens == 41          # prompt + 1 preserved token
+    assert r.prefill_token_ids() == tuple([1] * 40) + (5,)
+
+    # restart rides the normal prefill candidate path
+    batch = sched.schedule(2.0)
+    assert batch.kind == "prefill" and batch.prefill_requests == [r]
+    sched.complete_batch(batch, BatchResult({r.req_id: (7, False)}), 2.0, 3.0)
+    assert r.state == RequestState.RUNNING
+    assert r.output_tokens == [5, 7]              # preserved + new
+    assert sched.tokens_in_use == 42              # 40 prompt + 2 outputs
+    assert sched.committed_tokens == 60           # footprint re-committed
+
+    # decode to completion: ledgers conserve back to zero
+    while not rq.is_finished():
+        batch = sched.schedule(4.0)
+        outs = {x.req_id: (9, False) for x in batch.decode_requests}
+        sched.complete_batch(batch, BatchResult(outs), 4.0, 5.0)
+    assert sched.tokens_in_use == 0 and sched.committed_tokens == 0
+    assert sched.partial_prefill_tokens == 0
+
+
+def test_victim_is_lowest_priority_running_relquery():
+    """Per the DPU, the running relQuery with the *highest* priority value
+    (= least urgent) yields its KV first."""
+    lm = a100_opt13b()
+    sched = RelServeScheduler(limits=BatchLimits(cap=10_000), latency_model=lm,
+                              kv_admission="optimistic")
+    small = make_relquery("small", [[1] * 20], 0.0, 10)
+    big = make_relquery("big", [[2] * 20] * 3, 0.0, 200)
+    for rq in (small, big):
+        sched.add_relquery(rq, 0.0)
+        batch = sched.build_prefill_candidate(single_relquery=True)
+        outs = {r.req_id: (5, False) for r in batch.prefill_requests}
+        sched.complete_batch(batch, BatchResult(outs), 0.0, 1.0)
+    assert len(sched.running_requests()) == 4
+    sched.refresh_priorities(2.0)
+    assert big.priority > small.priority          # more remaining work
+    victim = sched._pick_preemption_victim()
+    assert victim.rel_id == "big"
+
+
+def test_cancel_while_preempted():
+    """Cancelling a relQuery whose requests sit in PREEMPTED must be terminal
+    and leak nothing (satellite: cancelled-while-preempted)."""
+    lm = a100_opt13b()
+    sched = RelServeScheduler(limits=BatchLimits(cap=1000), latency_model=lm,
+                              kv_admission="optimistic")
+    rq = make_relquery("A", [[1] * 40] * 2, 0.0, 20)
+    sched.add_relquery(rq, 0.0)
+    batch = sched.schedule(0.0)
+    outs = {r.req_id: (5, False) for r in batch.prefill_requests}
+    sched.complete_batch(batch, BatchResult(outs), 0.0, 1.0)
+    for r in list(sched.running_requests()):
+        sched.preempt_request(r, 1.0)
+    assert all(r.state == RequestState.PREEMPTED for r in rq.requests)
+
+    cancelled = sched.cancel_relquery("A", 2.0)
+    assert sorted(r.req_id for r in cancelled) == \
+        sorted(r.req_id for r in rq.requests)
+    assert all(r.state == RequestState.CANCELLED for r in rq.requests)
+    assert rq.cancelled and not sched.has_work()
+    assert sched.tokens_in_use == 0 and sched.committed_tokens == 0
+    assert sched.partial_prefill_tokens == 0
+    # preserved outputs survive for partial-result consumers
+    assert all(r.output_tokens for r in rq.requests)
+    # terminal: nothing schedulable afterwards
+    assert sched.schedule(3.0) is None
+
+
+def test_deadlock_reserved_for_single_unfittable_request():
+    """Optimistic mode only raises when one request can never fit."""
+    core = _engine(cap=50, mode="optimistic")
+    core.admit(make_relquery("huge", [[1] * 100], 0.0, 10), 0.0)
+    with pytest.raises(EngineDeadlockError) as ei:
+        core.tick(0.0)
+    assert "huge" in ei.value.stuck_rel_ids
+
+
+def test_real_executor_slots_released_on_preemption():
+    """The engine frees RealExecutor-style decode slots for every preempted
+    request (drain_preempt_releases handoff)."""
+    released = []
+
+    class SpyExecutor(SimulatedExecutor):
+        def release_request(self, req_id):
+            released.append(req_id)
+
+    lm = a100_opt13b()
+    sched = SCHEDULERS["vllm"](limits=BatchLimits(cap=230), latency_model=lm,
+                               kv_admission="optimistic")
+    core = EngineCore(sched, SpyExecutor(lm))
+    core.admit(make_relquery("A", [[1] * 80] * 2, 0.0, 40), 0.0)
+    list(_drain(core))
+    assert sched.preemptions > 0
+    assert len(released) == sched.preemptions
+
+
+def test_optimistic_fallback_respects_cap_with_midchunk_request():
+    """Review regression: the cap-blocked prefill fallback must not schedule a
+    mid-chunk request's remaining prefill past the cap under optimistic
+    admission (its remaining chunks are NOT yet resident, unlike the
+    conservative pre-commitment the fallback was written for)."""
+    lm = a100_opt13b()
+    sched = SCHEDULERS["vllm"](limits=BatchLimits(cap=100), latency_model=lm,
+                               kv_admission="optimistic")
+    core = EngineCore(sched, SimulatedExecutor(lm))
+    a = make_relquery("A", [[1] * 60], 0.0, 30)   # mid-chunk: 5 of 60 landed
+    b = make_relquery("B", [[2] * 80], 1.0, 10)   # running: holds 81 tokens
+    core.admit(a, 0.0)
+    core.admit(b, 1.0)
+    ra, rb = a.requests[0], b.requests[0]
+    ra.prefilled_tokens = 5
+    sched.partial_prefill_tokens += 5
+    sched.committed_tokens += sched._kv_footprint(ra)
+    sched.complete_batch(Batch.prefill([rb]), BatchResult({rb.req_id: (3, False)}),
+                         1.0, 2.0)
+    assert sched.kv_demand() == 81 + 5   # B resident (80+1) + A's landed chunk
+    now = 2.0
+    for _ in _drain(core, now):
+        assert sched.tokens_in_use + sched.partial_prefill_tokens \
+            <= sched.limits.cap, "fallback overshot the device cap"
+    assert a.is_finished() and b.is_finished()
+    assert sched.tokens_in_use == 0 and sched.partial_prefill_tokens == 0
+
+
+def test_tick_reclaims_wedged_chunk_partials_instead_of_deadlock():
+    """Review regression: two half-loaded prompts wedged against the cap with
+    nothing running — the engine's preempt-and-retry must reclaim one's
+    partial chunks and drain, not raise EngineDeadlockError."""
+    lm = a100_opt13b()
+    sched = SCHEDULERS["vllm"](limits=BatchLimits(cap=100), latency_model=lm,
+                               kv_admission="optimistic")
+    core = EngineCore(sched, SimulatedExecutor(lm))
+    a = make_relquery("A", [[1] * 60], 0.0, 10)
+    b = make_relquery("B", [[2] * 60], 1.0, 10)
+    core.admit(a, 0.0)
+    core.admit(b, 1.0)
+    for rq in (a, b):   # 50 + 50 landed: demand == cap, neither remainder fits
+        r = rq.requests[0]
+        r.prefilled_tokens = 50
+        sched.partial_prefill_tokens += 50
+        sched.committed_tokens += sched._kv_footprint(r)
+    assert sched.choose_batch(2.0) is None   # no candidate is constructible
+    now = 2.0
+    for _ in _drain(core, now):
+        assert sched.tokens_in_use + sched.partial_prefill_tokens \
+            <= sched.limits.cap
+    assert a.is_finished() and b.is_finished()
+    assert sched.preemptions >= 1          # the retry path actually fired
+    assert b.preemptions >= 1              # FCFS victim: the later arrival
+    assert sched.tokens_in_use == 0 and sched.committed_tokens == 0
+    assert sched.partial_prefill_tokens == 0
+
+
+def test_real_executor_preemption_end_to_end():
+    """The real-JAX path survives preempt→re-prefill cycles: slots are
+    recycled, restarts recompute prompt+generated, everything finishes."""
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.engine.executor import RealExecutor
+    from repro.engine.tokenizer import HashTokenizer
+    from repro.models.registry import build_model
+
+    cfg = get_smoke_config("qwen3-1.7b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    tok = HashTokenizer(vocab_size=cfg.vocab_size - 2)
+    prompts = [tok.encode(f"row {i} of the relational table") for i in range(3)]
+    out = 12
+    rq = make_relquery("A", prompts, 0.0, out)
+    max_fp = max(len(p) + out for p in prompts)
+    lm = a100_opt13b()
+    sched = SCHEDULERS["relserve"](limits=BatchLimits(cap=max_fp + len(prompts[0])),
+                                   latency_model=lm, kv_admission="optimistic")
+    ex = RealExecutor(model, params, max_slots=8, max_len=256)
+    core = EngineCore(sched, ex)
+    core.admit(rq, 0.0)
+    list(_drain(core))
+    assert rq.is_finished()
+    assert sched.preemptions > 0, "cap was not tight enough to preempt"
+    assert sched.tokens_in_use == 0 and sched.committed_tokens == 0
+    assert all(s is None for s in ex.slots), "decode slots leaked"
+    for r in rq.requests:
+        assert 1 <= len(r.output_tokens) <= out
+
+
+# ------------------------------------------------------------------ satellites
+def test_chunked_prefill_lookup_volume_counts_prompt_once():
+    """Satellite: _true_utok must probe the prefix cache with stats exactly
+    once per prefill pass — hits+misses equals the prompt tokens looked up,
+    no matter how many chunks the prompt is split into."""
+    lm = a100_opt13b()
+    prompt = [7] * 96
+
+    def run(chunked: bool):
+        pc = PrefixCache(block_size=16)
+        ex = SimulatedExecutor(lm, prefix_cache=pc)
+        rq = make_relquery("A", [prompt], 0.0, 4)
+        r = rq.requests[0]
+        if chunked:
+            for _ in range(3):   # 3 chunks of 32
+                b = Batch.mixed([r], [], {r.req_id: 32})
+                ex.execute(b, 0.0)
+                r.prefilled_tokens += 32
+        else:
+            ex.execute(Batch.prefill([r]), 0.0)
+        return pc.hits + pc.misses
+
+    assert run(chunked=False) == 96
+    assert run(chunked=True) == 96, \
+        "chunked prefill must not inflate prefix-cache lookup volume"
+
+
+def test_chunked_prefill_hit_ratio_matches_unchunked():
+    """End-to-end: sarathi (always-chunked) reports the same order of lookup
+    volume as the prompt stream — the per-chunk double counting is gone."""
+    lm = a100_opt13b()
+    pc = PrefixCache(block_size=16)
+    sched = SCHEDULERS["sarathi"](limits=BatchLimits(max_num_batched_tokens=64),
+                                  latency_model=lm, prefix_cache=pc)
+    engine = ServingEngine(sched, SimulatedExecutor(lm, prefix_cache=pc))
+    trace = quick_trace("rotten", num_relqueries=6, rate=4.0, seed=5,
+                        max_requests=6)
+    total_prompt = sum(r.num_prompt_tokens for rq in trace for r in rq.requests)
+    engine.run_trace(trace)
+    assert pc.hits + pc.misses == total_prompt
+
+
+def test_missing_decode_output_counted_not_fabricated():
+    """Satellite: a decode request absent from BatchResult.outputs must not
+    grow a phantom token / tokens_in_use — it is counted in a stat."""
+    lm = a100_opt13b()
+    sched = SCHEDULERS["vllm"](limits=BatchLimits(cap=10_000), latency_model=lm)
+    rq = make_relquery("A", [[1] * 20] * 2, 0.0, 10)
+    sched.add_relquery(rq, 0.0)
+    batch = sched.schedule(0.0)
+    outs = {r.req_id: (5, False) for r in batch.prefill_requests}
+    sched.complete_batch(batch, BatchResult(outs), 0.0, 1.0)
+    r1, r2 = rq.requests
+    tiu = sched.tokens_in_use
+
+    batch = sched.schedule(1.0)
+    assert batch.kind == "decode"
+    # executor "loses" r2: only r1 comes back
+    sched.complete_batch(batch, BatchResult({r1.req_id: (6, False)}), 1.0, 2.0)
+    assert r1.output_tokens == [5, 6]
+    assert r2.output_tokens == [5], "phantom token fabricated for lost request"
+    assert sched.tokens_in_use == tiu + 1
+    assert sched.missing_decode_outputs == 1
+    assert r2.state == RequestState.RUNNING   # reschedulable, not corrupted
+
+
+# ------------------------------------------------------------------ pins
+# Per-relQuery latencies recorded on the pre-subsystem engine (quick_trace
+# rotten, n=12, rate=1.5, seed=7, max_requests=12, cap=4096). Conservative
+# admission — the default — must reproduce them bit-for-bit.
+_PINNED = {
+    "relserve": {
+        "q0": 1.53344, "q1": 0.171367695, "q2": 3.44116395, "q3": 3.450674754,
+        "q4": 0.291090449, "q5": 0.197493264, "q6": 2.703840689,
+        "q7": 2.852453798, "q8": 5.285475997, "q9": 0.865332399,
+        "q10": 7.377775568, "q11": 3.467279223,
+    },
+    "vllm": {
+        "q0": 1.61004, "q1": 0.171367695, "q2": 3.51814395, "q3": 3.468014754,
+        "q4": 0.289490449, "q5": 0.220993264, "q6": 2.732420689,
+        "q7": 3.072253798, "q8": 4.946735997, "q9": 2.134292399,
+        "q10": 5.338875568, "q11": 5.759379223,
+    },
+}
+
+
+@pytest.mark.parametrize("name", ["relserve", "vllm"])
+def test_conservative_default_latencies_bit_identical(name):
+    lm = a100_opt13b()
+    pc = PrefixCache(block_size=16)
+    sched = SCHEDULERS[name](limits=BatchLimits(cap=4096), latency_model=lm,
+                             prefix_cache=pc)   # default admission mode
+    assert sched.kv_admission == "conservative"
+    engine = ServingEngine(sched, SimulatedExecutor(lm, prefix_cache=pc))
+    trace = quick_trace("rotten", num_relqueries=12, rate=1.5, seed=7,
+                        max_requests=12)
+    report = engine.run_trace(trace)
+    got = {k: round(v, 9) for k, v in report.latencies.items()}
+    assert got == _PINNED[name]
+    assert report.preemptions == 0
+
+
+def test_invalid_admission_mode_rejected():
+    with pytest.raises(ValueError, match="kv_admission"):
+        RelServeScheduler(kv_admission="yolo")
