@@ -85,6 +85,7 @@ def report_metrics(report: ServiceReport) -> dict:
                         "schedule": report.schedule_time},
         "cancelled": list(report.cancelled_rel_ids),
         "preemptions": report.preemptions,
+        "shared_kv_tokens": report.shared_kv_tokens,
     }
 
 

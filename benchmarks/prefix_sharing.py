@@ -1,0 +1,190 @@
+"""Prefix-sharing benchmark: sharing-aware scheduling + routing vs the PR-3
+baseline on a shared-template trace.
+
+relQueries rendered from the same task template share a long prompt prefix.
+The baseline stack (``affinity_spill`` router, prefix sharing off) scatters
+same-template relQueries across replicas by rel_id hash and prices candidates
+with the sampled miss ratio; the treatment stack routes by template
+fingerprint to the replica whose cache is warm (``prefix_affinity``), builds
+warm-then-follow prefill candidates, counts shared KV blocks once against the
+cap, and (for RelServe) prices priorities with the DPU's exact probe.
+
+Sharing may only change *timing*: the run asserts the per-request token
+streams are bit-identical with sharing on and off, and that no cell deadlocks.
+A single-replica tight-cap cell additionally shows the shared-block admission
+discount raising effective KV capacity.
+
+Writes ``BENCH_prefix_sharing.json``.
+
+    PYTHONPATH=src python -m benchmarks.prefix_sharing
+    PYTHONPATH=src python -m benchmarks.prefix_sharing --smoke   # CI: tiny + asserts
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+
+from benchmarks.common import report_metrics, write_bench_json
+from repro.core.latency_model import a100_opt13b
+from repro.core.policies import SCHEDULERS
+from repro.core.priority import BatchLimits, DPUConfig
+from repro.data.datasets import make_dataset
+from repro.data.trace import TraceConfig, build_trace
+from repro.engine.engine import EngineDeadlockError, ServingEngine
+from repro.engine.prefix_cache import PrefixCache
+from repro.engine.simulator import SimulatedExecutor
+from repro.serving import build_simulated_cluster
+
+SCHED_NAMES = ("relserve", "vllm")
+
+
+def token_streams(trace) -> dict:
+    """req_id -> generated tokens, the bit-identity invariant's subject."""
+    return {r.req_id: tuple(r.output_tokens) for rq in trace for r in rq.requests}
+
+
+def run_cluster_cell(scheduler: str, trace, *, num_replicas: int,
+                     router_policy: str, prefix_sharing: bool,
+                     exact_probe: bool = False, cap: int = 16384) -> dict:
+    trace = copy.deepcopy(trace)
+    dpu = DPUConfig(exact_probe=exact_probe)
+    cluster = build_simulated_cluster(
+        num_replicas, scheduler=scheduler, router_policy=router_policy,
+        dpu_config=dpu, limits=BatchLimits(cap=cap),
+        prefix_sharing=prefix_sharing)
+    try:
+        result = cluster.run_trace(trace)
+    except EngineDeadlockError as e:
+        return {"deadlock": True, "error": str(e)}
+    cell = report_metrics(result.merged)
+    cell.update(deadlock=False, router_stats=dict(cluster.router.stats),
+                streams=token_streams(trace))
+    for core in cluster.cores:
+        s = core.scheduler
+        assert s.tokens_in_use == 0 and s.committed_tokens == 0 \
+            and s.partial_prefill_tokens == 0, "KV ledger leaked tokens"
+        if s._shared_ledger is not None:
+            assert s._shared_ledger.discount == 0 and \
+                len(s._shared_ledger) == 0, "shared-block ledger leaked"
+    return cell
+
+
+def run_tight_cap_cell(scheduler: str, trace, *, prefix_sharing: bool,
+                       cap: int) -> dict:
+    """Single replica at a tight KV cap: the shared-block admission discount
+    is the only lever (no routing), isolating the capacity effect."""
+    trace = copy.deepcopy(trace)
+    lm = a100_opt13b()
+    pc = PrefixCache(block_size=16)
+    kw = dict(limits=BatchLimits(cap=cap), latency_model=lm, prefix_cache=pc,
+              prefix_sharing=prefix_sharing)
+    if scheduler.startswith("relserve"):
+        kw["dpu_config"] = DPUConfig(exact_probe=prefix_sharing)
+    sched = SCHEDULERS[scheduler](**kw)
+    engine = ServingEngine(sched, SimulatedExecutor(lm, prefix_cache=pc))
+    try:
+        report = engine.run_trace(trace)
+    except EngineDeadlockError as e:
+        return {"deadlock": True, "error": str(e)}
+    cell = report_metrics(report)
+    cell.update(deadlock=False, streams=token_streams(trace))
+    return cell
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny trace + hard asserts (CI smoke lane)")
+    ap.add_argument("--num-relqueries", type=int, default=None)
+    ap.add_argument("--rate", type=float, default=10.0)
+    ap.add_argument("--num-templates", type=int, default=2)
+    ap.add_argument("--num-replicas", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args()
+
+    n_rq = args.num_relqueries or (28 if args.smoke else 48)
+    max_req = 16 if args.smoke else 30
+    ds = make_dataset("rotten", num_rows=10_000, seed=args.seed)
+    trace = build_trace(ds, TraceConfig(
+        num_relqueries=n_rq, rate=args.rate, seed=args.seed,
+        max_requests=max_req, num_templates=args.num_templates))
+
+    cells = {}
+    for name in SCHED_NAMES:
+        cells[f"{name}/baseline"] = run_cluster_cell(
+            name, trace, num_replicas=args.num_replicas,
+            router_policy="affinity_spill", prefix_sharing=False)
+        cells[f"{name}/sharing"] = run_cluster_cell(
+            name, trace, num_replicas=args.num_replicas,
+            router_policy="prefix_affinity", prefix_sharing=True,
+            exact_probe=name.startswith("relserve"))
+
+    # single-replica capacity cells at a tight cap (conservative admission)
+    max_fp = max(r.num_prompt_tokens + r.max_output_tokens
+                 for rq in trace for r in rq.requests)
+    tight = int(max_fp * 1.5)
+    for name in SCHED_NAMES:
+        cells[f"{name}/cap{tight}/off"] = run_tight_cap_cell(
+            name, trace, prefix_sharing=False, cap=tight)
+        cells[f"{name}/cap{tight}/on"] = run_tight_cap_cell(
+            name, trace, prefix_sharing=True, cap=tight)
+
+    summary = {"num_templates": args.num_templates, "tight_cap": tight,
+               "verdict": {}}
+    for key, cell in cells.items():
+        tag = ("DEADLOCK" if cell["deadlock"] else
+               f"avg {cell['avg_latency_s']:8.2f}s  "
+               f"hit {cell['prefix_hit_ratio']:6.2%}  "
+               f"shared-kv {cell.get('shared_kv_tokens', 0):6d}")
+        print(f"[prefix_sharing] {key:28s} {tag}", flush=True)
+
+    for name in SCHED_NAMES:
+        base, shar = cells[f"{name}/baseline"], cells[f"{name}/sharing"]
+        off = cells[f"{name}/cap{tight}/off"]
+        on = cells[f"{name}/cap{tight}/on"]
+        deadlocks = sum(int(c["deadlock"]) for c in (base, shar, off, on))
+        verdict = {
+            "baseline_avg_s": base.get("avg_latency_s"),
+            "sharing_avg_s": shar.get("avg_latency_s"),
+            "tight_cap_off_avg_s": off.get("avg_latency_s"),
+            "tight_cap_on_avg_s": on.get("avg_latency_s"),
+            "shared_kv_tokens": shar.get("shared_kv_tokens", 0),
+            "deadlocks": deadlocks,
+            "streams_identical": (not deadlocks
+                                  and base["streams"] == shar["streams"]
+                                  and off["streams"] == on["streams"]),
+            "sharing_wins": (not deadlocks and
+                             shar["avg_latency_s"] < base["avg_latency_s"]),
+        }
+        summary["verdict"][name] = verdict
+        print(f"[prefix_sharing] {name}: baseline "
+              f"{verdict['baseline_avg_s']:.2f}s vs sharing "
+              f"{verdict['sharing_avg_s']:.2f}s "
+              f"({'WIN' if verdict['sharing_wins'] else 'NO WIN'}); tight cap "
+              f"{tight}: off {verdict['tight_cap_off_avg_s']:.2f}s vs on "
+              f"{verdict['tight_cap_on_avg_s']:.2f}s", flush=True)
+
+    for cell in cells.values():     # streams are for the identity check, not disk
+        cell.pop("streams", None)
+    write_bench_json("prefix_sharing", {"config": {
+        "num_relqueries": n_rq, "rate": args.rate, "seed": args.seed,
+        "max_requests": max_req, "num_templates": args.num_templates,
+        "num_replicas": args.num_replicas, "smoke": args.smoke,
+    }, "cells": cells, "summary": summary})
+
+    for name in SCHED_NAMES:
+        v = summary["verdict"][name]
+        assert v["deadlocks"] == 0, f"{name}: deadlock"
+        assert v["streams_identical"], \
+            f"{name}: sharing changed a token stream (must be timing-only)"
+        assert v["shared_kv_tokens"] > 0, \
+            f"{name}: shared-block admission never discounted anything"
+        assert v["sharing_wins"], \
+            f"{name}: sharing+prefix_affinity did not beat the baseline"
+    print("PREFIX-SHARING OK: sharing-aware scheduling+routing beats "
+          f"affinity_spill/off for {', '.join(SCHED_NAMES)}, token streams "
+          "bit-identical")
+
+
+if __name__ == "__main__":
+    main()

@@ -42,7 +42,16 @@ class AdaptiveBatchArranger:
         self.lm = latency_model
         self.stats = {"preempt": 0, "internal": 0, "transitional_prefill": 0,
                       "transitional_mixed": 0, "transitional_decode": 0,
-                      "forced": 0}
+                      "forced": 0, "warm_follow": 0}
+
+    def _done(self, decision: ArrangerDecision, by_kind) -> ArrangerDecision:
+        """Count wins of warm-then-follow candidates: prefill-side batches
+        whose ``uncached_tokens`` was discounted by intra-batch prefix reuse
+        — the reuse ABA saw through ``Batch.cost``."""
+        cand = by_kind.get(decision.kind)
+        if cand is not None and cand.shared_prefix_tokens > 0:
+            self.stats["warm_follow"] += 1
+        return decision
 
     def choose(
         self,
@@ -63,7 +72,8 @@ class AdaptiveBatchArranger:
         prefill_side = [by_kind[k] for k in ("prefill", "mixed") if k in by_kind]
         if d_cand is None:
             self.stats["forced"] += 1
-            return ArrangerDecision(prefill_side[0].kind, "forced")
+            return self._done(ArrangerDecision(prefill_side[0].kind, "forced"),
+                              by_kind)
         if not prefill_side:
             self.stats["forced"] += 1
             return ArrangerDecision("decode", "forced")
@@ -75,7 +85,8 @@ class AdaptiveBatchArranger:
             # running is waiting — start it with a full prefill when available.
             case = "preempt" if m_plus > m_minus else "internal"
             self.stats[case] += 1
-            return ArrangerDecision(prefill_side[0].kind, case)
+            return self._done(ArrangerDecision(prefill_side[0].kind, case),
+                              by_kind)
 
         # transitional: price every prefill-side candidate, take the cheapest.
         best, best_delta = None, None
@@ -85,7 +96,8 @@ class AdaptiveBatchArranger:
                 best, best_delta = c, delta
         if best_delta < 0:
             self.stats[f"transitional_{best.kind}"] += 1
-            return ArrangerDecision(best.kind, "transitional", best_delta)
+            return self._done(
+                ArrangerDecision(best.kind, "transitional", best_delta), by_kind)
         self.stats["transitional_decode"] += 1
         return ArrangerDecision("decode", "transitional", best_delta)
 

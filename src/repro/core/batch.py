@@ -37,6 +37,10 @@ class Batch:
     decode_requests: List[Request] = field(default_factory=list)
     prefill_chunks: Dict[str, int] = field(default_factory=dict)  # req_id -> len
     uncached_tokens: int = 0           # estimated utok of the prefill side
+    # estimated prefill tokens this batch saves through *intra-batch* prefix
+    # reuse (warm-then-follow: followers priced at the post-leader hit rate);
+    # already subtracted from uncached_tokens, carried for instrumentation
+    shared_prefix_tokens: int = 0
     relquery: Optional[RelQuery] = None  # single-relQuery prefill candidates
     decision: Optional["ArrangerDecision"] = None
 
@@ -99,9 +103,11 @@ class Batch:
     # ------------------------------------------------------------------ makers
     @classmethod
     def prefill(cls, requests: List[Request], uncached_tokens: int = 0,
-                relquery: Optional[RelQuery] = None) -> "Batch":
+                relquery: Optional[RelQuery] = None,
+                shared_prefix_tokens: int = 0) -> "Batch":
         return cls("prefill", prefill_requests=list(requests),
-                   uncached_tokens=uncached_tokens, relquery=relquery)
+                   uncached_tokens=uncached_tokens, relquery=relquery,
+                   shared_prefix_tokens=shared_prefix_tokens)
 
     @classmethod
     def decode(cls, requests: List[Request]) -> "Batch":
@@ -109,10 +115,12 @@ class Batch:
 
     @classmethod
     def mixed(cls, prefill_requests: List[Request], decode_requests: List[Request],
-              chunks: Dict[str, int], uncached_tokens: int = 0) -> "Batch":
+              chunks: Dict[str, int], uncached_tokens: int = 0,
+              shared_prefix_tokens: int = 0) -> "Batch":
         return cls("mixed", prefill_requests=list(prefill_requests),
                    decode_requests=list(decode_requests),
-                   prefill_chunks=dict(chunks), uncached_tokens=uncached_tokens)
+                   prefill_chunks=dict(chunks), uncached_tokens=uncached_tokens,
+                   shared_prefix_tokens=shared_prefix_tokens)
 
 
 # --------------------------------------------------------------------------

@@ -48,8 +48,10 @@ class StaticPriorityScheduler(SchedulerBase):
     name = "vllm_sp"
 
     def __init__(self, limits=None, latency_model=None, prefix_cache=None,
-                 kv_admission: str = "conservative"):
-        super().__init__(limits, latency_model, prefix_cache, kv_admission)
+                 kv_admission: str = "conservative",
+                 prefix_sharing: bool = False):
+        super().__init__(limits, latency_model, prefix_cache, kv_admission,
+                         prefix_sharing)
         self.estimator = StaticPriorityEstimator(self.lm, self.limits)
 
     def on_relquery_added(self, rq: RelQuery, now: float) -> None:

@@ -79,6 +79,13 @@ class DPUConfig:
     starvation_threshold: Optional[float] = None  # seconds per request (Eq. 13)
     resample_every: int = 16             # refresh miss ratio every N iterations
     seed: int = 0
+    # Exact-probe mode: replace Eq. 11's sampled miss ratio with a full probe
+    # of every pending request, *including* the intra-relQuery sharing that
+    # warm-then-follow scheduling will realize (a leader's prompt warms the
+    # cache for its followers). No RNG is consumed. Costs O(pending prompt
+    # tokens) per resample — use when priorities must reflect realized
+    # sharing, e.g. with prefix-sharing-aware scheduling enabled.
+    exact_probe: bool = False
 
 
 class DynamicPriorityUpdater:
@@ -94,7 +101,7 @@ class DynamicPriorityUpdater:
         self._last_sampled: Dict[str, int] = {}
         # instrumentation
         self.stats = {"pem_calls": 0, "reuses": 0, "starvation_promotions": 0,
-                      "sampled_requests": 0}
+                      "sampled_requests": 0, "exact_probes": 0}
 
     def forget(self, rel_id: str) -> None:
         """Drop per-relQuery DPU state (used when a relQuery is cancelled)."""
@@ -107,12 +114,44 @@ class DynamicPriorityUpdater:
         pending = rq.waiting_requests() + rq.preempted_requests()
         if not pending:
             return rq.cache_miss_ratio
+        if self.cfg.exact_probe:
+            return self._exact_miss_ratio(pending, prefix_cache)
         sample = pending if len(pending) <= self.cfg.sample_size else \
             self._rng.sample(pending, self.cfg.sample_size)
         tok = sum(r.num_prompt_tokens for r in sample)
         probe = getattr(prefix_cache, "peek_cached", prefix_cache.count_cached)
         cached = sum(probe(r.tokens) for r in sample)
         self.stats["sampled_requests"] += len(sample)
+        return (tok - cached) / max(1, tok)
+
+    def _exact_miss_ratio(self, pending: Sequence[Request],
+                          prefix_cache: PrefixCacheView) -> float:
+        """Full probe over every pending request, accumulating the warm set a
+        warm-then-follow schedule will build: once any pending request has
+        prefilled, its prompt blocks are hits for every later sibling — the
+        realized sharing Eq. 11's sample-and-scale cannot see."""
+        self.stats["exact_probes"] += 1
+        self.stats["sampled_requests"] += len(pending)
+        block_size = getattr(prefix_cache, "block_size", None)
+        has_block = getattr(prefix_cache, "has_block", None)
+        tok, cached = 0, 0
+        if block_size is None or has_block is None:
+            probe = getattr(prefix_cache, "peek_cached", prefix_cache.count_cached)
+            for r in pending:
+                tok += r.num_prompt_tokens
+                cached += probe(r.tokens)
+            return (tok - cached) / max(1, tok)
+        from repro.engine.prefix_cache import iter_block_hashes
+        warm: set = set()
+        for r in pending:
+            tok += r.num_prompt_tokens
+            keys = list(iter_block_hashes(r.tokens, block_size))
+            for k in keys:
+                if k in warm or has_block(k):
+                    cached += block_size
+                else:
+                    break
+            warm.update(keys)
         return (tok - cached) / max(1, tok)
 
     # ---------------------------------------------------------------- PEM (Eq. 10)

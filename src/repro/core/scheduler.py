@@ -22,7 +22,7 @@ The engine contract:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.core.arranger import AdaptiveBatchArranger, ArrangerDecision
 from repro.core.batch import Batch
@@ -31,6 +31,8 @@ from repro.core.priority import (
     BatchLimits, DPUConfig, DynamicPriorityUpdater, PrefixCacheView,
 )
 from repro.core.relquery import RelQuery, Request, RequestState
+from repro.engine.kv_cache import SharedPrefixLedger
+from repro.engine.prefix_cache import block_hashes
 
 
 @dataclass
@@ -47,7 +49,8 @@ class SchedulerBase:
     def __init__(self, limits: Optional[BatchLimits] = None,
                  latency_model: Optional[BatchLatencyModel] = None,
                  prefix_cache: Optional[PrefixCacheView] = None,
-                 kv_admission: str = "conservative"):
+                 kv_admission: str = "conservative",
+                 prefix_sharing: bool = False):
         from repro.core.latency_model import a100_opt13b
         if kv_admission not in KV_ADMISSION_MODES:
             raise ValueError(f"kv_admission must be one of {KV_ADMISSION_MODES}"
@@ -56,6 +59,29 @@ class SchedulerBase:
         self.lm = latency_model or a100_opt13b()
         self.prefix_cache = prefix_cache
         self.kv_admission = kv_admission
+        # Prefix-sharing-aware scheduling: warm-then-follow candidate pricing
+        # plus shared-block KV admission (each shared prefix block charged
+        # once against limits.cap). Off by default — every sharing-off code
+        # path is bit-identical to the pre-sharing scheduler.
+        self.prefix_sharing = bool(prefix_sharing)
+        if self.prefix_sharing:
+            block_size = getattr(prefix_cache, "block_size", None)
+            if block_size is None:
+                raise ValueError("prefix_sharing=True requires a block-based "
+                                 "prefix cache (PrefixCache) on the scheduler")
+            self._shared_ledger: Optional[SharedPrefixLedger] = \
+                SharedPrefixLedger(block_size)
+        else:
+            self._shared_ledger = None
+        self._prompt_keys: Dict[str, Tuple[int, ...]] = {}  # req_id -> chain
+        self._kv_charged: Set[str] = set()            # req_ids in the ledger
+        self.shared_tokens_saved = 0  # cumulative shared-block cap discount
+        # memoized warm-then-follow orders, invalidated by any waiting-list
+        # mutation (bump of _queue_version) — decode-heavy stretches rebuild
+        # candidates every tick without touching the queues, and one tick
+        # builds both the prefill and the mixed candidate from the same order
+        self._queue_version = 0
+        self._order_cache: Dict[str, Tuple[int, List[Request]]] = {}
         self.relqueries: Dict[str, RelQuery] = {}
         self.tokens_in_use = 0
         # Worst-case KV commitment: the full prompt+output footprint of every
@@ -86,6 +112,7 @@ class SchedulerBase:
     def add_relquery(self, rq: RelQuery, now: float) -> None:
         self.relqueries[rq.rel_id] = rq
         self._waiting_of[rq.rel_id] = list(rq.requests)
+        self._queue_version += 1
         self._unfinished += 1
         self.on_relquery_added(rq, now)
 
@@ -171,51 +198,193 @@ class SchedulerBase:
         covers preempted restarts: preserved tokens count toward OL."""
         return r.num_prompt_tokens + r.max_output_tokens
 
+    # ------------------------------------------------------------- prefix sharing
+    def prompt_block_keys(self, r: Request) -> Tuple[int, ...]:
+        """Chained block keys of ``r``'s prompt (cached — prompts are
+        immutable). Only meaningful with prefix sharing enabled."""
+        keys = self._prompt_keys.get(r.req_id)
+        if keys is None:
+            keys = tuple(block_hashes(r.tokens, self._shared_ledger.block_size))
+            self._prompt_keys[r.req_id] = keys
+        return keys
+
+    def _sharing_order(self, rel_id: str,
+                       reqs: Sequence[Request]) -> List[Request]:
+        """Warm-then-follow order: lexicographic in the block-key chain, so
+        requests sharing a prefix run adjacently — the first of each run is
+        the leader that warms the cache for its followers. Preempted restarts
+        keep their head-of-queue position; the sort is stable, so identical
+        chains stay FCFS. Memoized until the next waiting-list mutation to
+        preserve the module's O(#relQueries + batch size) iteration cost."""
+        cached = self._order_cache.get(rel_id)
+        if cached is not None and cached[0] == self._queue_version:
+            return cached[1]
+        ordered = sorted(reqs, key=lambda r: (
+            r.state is not RequestState.PREEMPTED,
+            self.prompt_block_keys(r)))
+        self._order_cache[rel_id] = (self._queue_version, ordered)
+        return ordered
+
+    def _sharing_utok(self, r: Request, warm_keys: Set[int],
+                      chunk: Optional[int] = None) -> Tuple[int, int]:
+        """Exact-probe estimate for ``r``'s next ``chunk`` prompt tokens
+        (default: all remaining), assuming ``warm_keys`` are resident by the
+        time ``r`` executes — the post-leader hit rate of a follower in a
+        warm-then-follow candidate. One chain walk returns both ``(uncached
+        tokens, tokens saved vs a cache-only probe)`` — the saving is the
+        intra-candidate reuse instrumentation, and walking twice for it
+        would double the hot path's probe cost. Preserved generation
+        (preempted restarts) is never prefix-cached."""
+        cached = cold_cached = 0
+        cold_alive = True       # the cache-only walk stops at the first
+        block_size = self._shared_ledger.block_size   # warm-only block
+        for k in self.prompt_block_keys(r):
+            resident = self.prefix_cache.has_block(k)
+            if resident or k in warm_keys:
+                cached += block_size
+                if resident and cold_alive:
+                    cold_cached += block_size
+                else:
+                    cold_alive = False
+            else:
+                break
+        done = r.prefilled_tokens
+        target = r.prefill_target_tokens
+        if chunk is None:
+            chunk = target - done
+        end = min(done + chunk, target)
+        u = max(0, end - max(done, cached))
+        u_cold = max(0, end - max(done, cold_cached))
+        return u, u_cold - u
+
+    def _shared_resident_tokens(self, r: Request,
+                                pending_keys: Optional[Set[int]] = None) -> int:
+        """Leading prompt tokens of ``r`` already charged against the cap by a
+        live sibling (ledger) or by an earlier request of the candidate under
+        construction (``pending_keys``) — admission may discount them."""
+        if self._shared_ledger is None:
+            return 0
+        n = 0
+        for k in self.prompt_block_keys(r):
+            if self._shared_ledger.contains(k) or \
+                    (pending_keys is not None and k in pending_keys):
+                n += self._shared_ledger.block_size
+            else:
+                break
+        return n
+
+    def _kv_acquire(self, r: Request) -> None:
+        """Register ``r``'s prompt chain in the shared-block ledger and pin
+        the blocks against prefix-cache eviction. Timing is mode-dependent:
+        conservative charges full footprints at the first chunk, so the chain
+        is acquired there; optimistic charges only resident KV, so the chain
+        is acquired at prompt *completion* — discounting a full chain while
+        only partial chunks are resident would understate (even negate)
+        ``kv_demand()`` and over-admit past the cap."""
+        if self._shared_ledger is None or r.req_id in self._kv_charged:
+            return
+        keys = self.prompt_block_keys(r)
+        self._kv_charged.add(r.req_id)
+        self.shared_tokens_saved += self._shared_ledger.acquire(keys)
+        self.prefix_cache.acquire_blocks(keys)
+
+    def _kv_release(self, r: Request) -> None:
+        """Drop ``r``'s charge from the shared-block ledger (finish, preempt
+        or cancel). Blocks still referenced by siblings stay charged through
+        the survivors — a victim never frees a sibling's shared prefix."""
+        if self._shared_ledger is None or r.req_id not in self._kv_charged:
+            return
+        self._kv_charged.discard(r.req_id)
+        keys = self.prompt_block_keys(r)
+        self._shared_ledger.release(keys)
+        self.prefix_cache.release_blocks(keys)
+
     # ------------------------------------------------------------- KV admission
     def kv_demand(self) -> int:
         """Tokens the admission check must assume resident. Conservative:
         worst-case commitment of every started request. Optimistic: the KV
         actually held right now (completed prefills + generation so far +
-        landed chunks)."""
+        landed chunks). With prefix sharing the raw per-request charges are
+        kept unchanged and the ledger's discount — tokens counted more than
+        once because they live in shared blocks — is subtracted, so shared
+        blocks count once against ``limits.cap`` in both modes."""
         if self.kv_admission == "conservative":
-            return self.committed_tokens
-        return self.tokens_in_use + self.partial_prefill_tokens
+            raw = self.committed_tokens
+        else:
+            raw = self.tokens_in_use + self.partial_prefill_tokens
+        if self._shared_ledger is not None:
+            return raw - self._shared_ledger.discount
+        return raw
 
-    def _admission_need(self, r: Request) -> int:
+    def _admission_need(self, r: Request,
+                        pending_keys: Optional[Set[int]] = None) -> int:
         """Cap headroom required to schedule the rest of ``r``'s prefill.
         Conservative: the full footprint, charged once (already-started
         requests are pre-committed). Optimistic: only the KV this prefill
-        pass will write, plus the decode token emitted on completion."""
+        pass will write, plus the decode token emitted on completion. Under
+        prefix sharing both shrink by the prefix already charged by siblings
+        — those blocks are resident once no matter how many requests share
+        them. A request already charged (mid-chunk) gets no discount: its own
+        chain is what the ledger holds, and its remaining chunks are raw."""
+        shared = 0 if r.req_id in self._kv_charged else \
+            self._shared_resident_tokens(r, pending_keys)
         if self.kv_admission == "conservative":
-            return 0 if r.prefilled_tokens else self._kv_footprint(r)
-        return (r.prefill_target_tokens - r.prefilled_tokens) + 1
+            if r.prefilled_tokens:
+                return 0
+            return max(0, self._kv_footprint(r) - shared)
+        uncharged = max(0, r.prefill_target_tokens
+                        - max(r.prefilled_tokens, shared))
+        return uncharged + 1
 
     def build_prefill_candidate(self, single_relquery: bool = True) -> Optional[Batch]:
         full_order = self.sorted_waiting_rqs()
         if not full_order:
             return None
         order = full_order[:1] if single_relquery else full_order
+        sharing = self._shared_ledger is not None
         chosen: List[Request] = []
         utok_sum, full_tok_sum = 0, 0
+        # warm-then-follow state: keys the candidate's leaders will have
+        # inserted by the time a follower prefills, and the estimated tokens
+        # that intra-candidate reuse saves (ABA instrumentation)
+        warm_keys: Set[int] = set()
+        pending_keys: Set[int] = set()
+        shared_est = 0
         for rq in order:
-            for r in self._waiting_of[rq.rel_id]:
-                u = self.estimated_utok(r)
+            waiting = self._waiting_of[rq.rel_id]
+            if sharing:
+                waiting = self._sharing_order(rq.rel_id, waiting)
+            for r in waiting:
+                if sharing:
+                    # exact probe, priced at the post-leader hit rate: the
+                    # leader of each shared-prefix run pays its real misses,
+                    # followers only their divergent suffix
+                    u, saved = self._sharing_utok(r, warm_keys)
+                    u = max(1, u)
+                else:
+                    u, saved = self.estimated_utok(r), 0
                 if chosen and utok_sum + u > self.limits.max_num_batched_tokens:
                     break
                 if len(chosen) + 1 > self.limits.max_num_seqs:
                     break
-                needed = self._admission_need(r)
+                needed = self._admission_need(r, pending_keys)
                 if self.kv_demand() + full_tok_sum + needed > self.limits.cap:
                     break  # head-of-line: don't skip ahead of the cap-blocked rq
                 chosen.append(r)
                 utok_sum += u
                 full_tok_sum += needed
+                shared_est += saved
+                if sharing:
+                    keys = self.prompt_block_keys(r)
+                    warm_keys.update(keys)
+                    pending_keys.update(keys)
             else:
                 continue
             break
         if chosen:
             rel = self.relqueries[chosen[0].rel_id] if single_relquery else None
-            return Batch.prefill(chosen, uncached_tokens=utok_sum, relquery=rel)
+            return Batch.prefill(chosen, uncached_tokens=utok_sum, relquery=rel,
+                                 shared_prefix_tokens=shared_est)
         # Cap-blocked head of line. Fall back to requests whose KV is already
         # committed (partially chunked): under conservative admission finishing
         # them adds nothing to the commitment and is the only way the queue can
@@ -256,22 +425,28 @@ class SchedulerBase:
         footprint against the cap (tracked in ``committed_tokens``)."""
         decode_reqs = self.running_requests()[: self.limits.max_num_seqs]
         budget = max(0, self.limits.max_num_batched_tokens - len(decode_reqs))
+        sharing = self._shared_ledger is not None
         chunks: Dict[str, int] = {}
         prefill_reqs: List[Request] = []
-        utok_sum, full_tok_sum = 0, 0
+        utok_sum, full_tok_sum, shared_est = 0, 0, 0
+        warm_keys: Set[int] = set()
+        pending_keys: Set[int] = set()
         order = self.sorted_waiting_rqs()
         if single_relquery:
             order = order[:1]
         for rq in order:
             if budget <= 0:
                 break
-            for r in self._waiting_of[rq.rel_id]:
+            waiting = self._waiting_of[rq.rel_id]
+            if sharing:
+                waiting = self._sharing_order(rq.rel_id, waiting)
+            for r in waiting:
                 if budget <= 0 or \
                         len(decode_reqs) + len(prefill_reqs) >= self.limits.max_num_seqs:
                     break
                 remaining = r.prefill_target_tokens - r.prefilled_tokens
                 if self.kv_admission == "conservative":
-                    needed = 0 if r.prefilled_tokens else self._kv_footprint(r)
+                    needed = self._admission_need(r, pending_keys)
                     if self.kv_demand() + full_tok_sum + needed > self.limits.cap:
                         budget = 0
                         break
@@ -291,12 +466,29 @@ class SchedulerBase:
                 chunks[r.req_id] = chunk
                 prefill_reqs.append(r)
                 budget -= chunk
-                utok_sum += self.estimated_chunk_utok(r, chunk)
+                if sharing:
+                    u, saved = self._sharing_utok(r, warm_keys, chunk)
+                    shared_est += saved
+                    keys = self.prompt_block_keys(r)
+                    completes = r.prefilled_tokens + chunk >= \
+                        r.prefill_target_tokens
+                    # the executor inserts a prompt into the prefix cache only
+                    # when it *completes*: a partial chunk warms nothing yet
+                    if completes:
+                        warm_keys.update(keys)
+                    # ledger membership mirrors _kv_acquire timing: first
+                    # chunk (conservative) vs prompt completion (optimistic)
+                    if completes or self.kv_admission == "conservative":
+                        pending_keys.update(keys)
+                else:
+                    u = self.estimated_chunk_utok(r, chunk)
+                utok_sum += u
                 full_tok_sum += needed
         if not decode_reqs and not prefill_reqs:
             return None
         return Batch.mixed(prefill_reqs, decode_reqs, chunks,
-                           uncached_tokens=utok_sum)
+                           uncached_tokens=utok_sum,
+                           shared_prefix_tokens=shared_est)
 
     # ------------------------------------------------------------- cancellation
     def cancel_relquery(self, rel_id: str, now: float) -> List[Request]:
@@ -310,6 +502,8 @@ class SchedulerBase:
         if rq is None or rq.finish_time is not None or rq.cancel_time is not None:
             return []
         cancelled = list(self._waiting_of.pop(rel_id, []))
+        self._queue_version += 1
+        self._order_cache.pop(rel_id, None)
         mine = [r for r in self._running if r.rel_id == rel_id]
         if mine:
             self._running = [r for r in self._running if r.rel_id != rel_id]
@@ -326,6 +520,8 @@ class SchedulerBase:
                 self.partial_prefill_tokens -= r.prefilled_tokens
             if r.prefilled_tokens > 0:
                 self.committed_tokens -= self._kv_footprint(r)
+            self._kv_release(r)
+            self._prompt_keys.pop(r.req_id, None)
             r.state = RequestState.CANCELLED
             r.finish_time = now
         rq.cancel_time = now
@@ -352,12 +548,16 @@ class SchedulerBase:
             r.prefilled = False
             r.state = RequestState.PREEMPTED
             self._waiting_of.setdefault(r.rel_id, []).insert(0, r)
+            self._queue_version += 1
         elif r.prefilled_tokens > 0:
             self.partial_prefill_tokens -= r.prefilled_tokens
             self.preempted_tokens += r.prefilled_tokens
         else:
             return                      # nothing on the device: no-op
         self.committed_tokens -= self._kv_footprint(r)
+        # the victim's ledger charge is dropped, but blocks its siblings still
+        # reference stay discounted — preemption never frees shared KV twice
+        self._kv_release(r)
         r.prefilled_tokens = 0
         self.preemptions += 1
         rq.preemptions += 1
@@ -453,6 +653,8 @@ class SchedulerBase:
             before = r.prefilled_tokens
             if before == 0:   # first chunk (or whole prompt) lands
                 self.committed_tokens += self._kv_footprint(r)
+                if self.kv_admission == "conservative":
+                    self._kv_acquire(r)   # leaders registered before followers
             target = r.prefill_target_tokens
             r.prefilled_tokens = min(target, before + batch.chunk_of(r))
             self.partial_prefill_tokens += r.prefilled_tokens - before
@@ -484,10 +686,13 @@ class SchedulerBase:
         wl = self._waiting_of.get(r.rel_id)
         if wl is not None and r in wl:
             wl.remove(r)
+            self._queue_version += 1
             if not wl:
                 del self._waiting_of[r.rel_id]
+                self._order_cache.pop(r.rel_id, None)
         self._running.append(r)
         self.tokens_in_use += r.prefill_target_tokens
+        self._kv_acquire(r)   # optimistic: chain resident only from here
         rq.last_prefill_end = end_ts   # monotone: last prefill wins
         out = result.outputs.get(r.req_id)
         if out is None:
@@ -508,6 +713,8 @@ class SchedulerBase:
             self._running.remove(r)
         self.tokens_in_use -= r.total_tokens
         self.committed_tokens -= self._kv_footprint(r)
+        self._kv_release(r)
+        self._prompt_keys.pop(r.req_id, None)
 
     def _maybe_finish_relquery(self, rq: RelQuery, end_ts: float) -> None:
         if rq.finish_time is None and rq.is_finished():
@@ -526,8 +733,10 @@ class RelServeScheduler(SchedulerBase):
 
     def __init__(self, limits=None, latency_model=None, prefix_cache=None,
                  dpu_config: Optional[DPUConfig] = None,
-                 kv_admission: str = "conservative"):
-        super().__init__(limits, latency_model, prefix_cache, kv_admission)
+                 kv_admission: str = "conservative",
+                 prefix_sharing: bool = False):
+        super().__init__(limits, latency_model, prefix_cache, kv_admission,
+                         prefix_sharing)
         self.dpu = DynamicPriorityUpdater(self.lm, self.limits, dpu_config)
         self.aba = AdaptiveBatchArranger(self.lm)
         # wall-clock overhead instrumentation (paper Table 6)

@@ -25,6 +25,11 @@ class TraceConfig:
     # drivers that need short outputs — e.g. real-JAX smoke mode keeping CPU
     # decoding affordable — set this instead of mutating built relQueries.
     output_token_cap: Optional[int] = None
+    # Restrict template sampling to the dataset's first N templates — the
+    # shared-template regime (many relQueries rendered from few templates)
+    # that prefix-sharing-aware scheduling and routing target. None keeps the
+    # full template set and the historical trace byte-identical.
+    num_templates: Optional[int] = None
 
 
 def poisson_arrivals(n: int, rate: float, rng: random.Random) -> List[float]:
@@ -40,9 +45,11 @@ def build_trace(dataset: Dataset, cfg: TraceConfig,
     tokenizer = tokenizer or HashTokenizer()
     rng = random.Random(cfg.seed)
     arrivals = poisson_arrivals(cfg.num_relqueries, cfg.rate, rng)
+    templates = dataset.templates if cfg.num_templates is None else \
+        dataset.templates[:max(1, cfg.num_templates)]
     trace: List[RelQuery] = []
     for qi, arr in enumerate(arrivals):
-        tpl = rng.choice(dataset.templates)
+        tpl = rng.choice(templates)
         n_req = rng.randint(cfg.min_requests, cfg.max_requests)
         offset = rng.randrange(0, max(1, len(dataset.table) - n_req))
         rows = dataset.table.rows[offset:offset + n_req]

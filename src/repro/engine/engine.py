@@ -68,6 +68,9 @@ class ServiceReport:
     preemptions: int = 0
     preempted_tokens: int = 0
     missing_decode_outputs: int = 0
+    # prefix-sharing subsystem: cumulative cap tokens the shared-block
+    # admission ledger discounted (0 with prefix sharing off)
+    shared_kv_tokens: int = 0
 
     @property
     def avg_latency(self) -> float:
@@ -109,6 +112,7 @@ def merge_reports(reports: Sequence[ServiceReport]) -> ServiceReport:
         merged.preemptions += rep.preemptions
         merged.preempted_tokens += rep.preempted_tokens
         merged.missing_decode_outputs += rep.missing_decode_outputs
+        merged.shared_kv_tokens += rep.shared_kv_tokens
     merged.events.sort(key=lambda e: (e.start, e.replica))
     merged.cancelled_rel_ids.sort()
     merged.prefix_hit_ratio = (hit_tokens / merged.prefix_lookup_tokens
@@ -232,6 +236,7 @@ class EngineCore:
             preempted_tokens=getattr(self.scheduler, "preempted_tokens", 0),
             missing_decode_outputs=getattr(self.scheduler,
                                            "missing_decode_outputs", 0),
+            shared_kv_tokens=getattr(self.scheduler, "shared_tokens_saved", 0),
         )
 
 

@@ -123,5 +123,73 @@ class BlockManager:
         free = set(self._free)
         assert not (in_use & free), "block both free and in use"
         assert all(self._ref.get(b, 0) > 0 for b in in_use)
-        total_tracked = len(free | in_use)
-        assert total_tracked <= self.num_blocks
+        # exact conservation: every block is either free or referenced by at
+        # least one sequence — shared prefix blocks appear once in ``in_use``
+        # no matter how many sequences reference them
+        assert len(free) + len(in_use) == self.num_blocks, \
+            f"{len(free)} free + {len(in_use)} in use != {self.num_blocks}"
+        assert len(self._free) == len(free), "duplicate id in free list"
+
+
+class SharedPrefixLedger:
+    """Token-granular admission twin of ``BlockManager``'s ref-counted shared
+    prefix blocks: schedulers charge the KV cap in *tokens*, so this ledger
+    tracks, per block key, how many live requests' charges include that block
+    — and exposes ``discount``, the tokens counted more than once. Admission
+    subtracts the discount from raw per-request charges, making shared prefix
+    blocks count once against ``limits.cap`` exactly as they occupy device
+    memory once in the paged ``BlockManager``.
+
+    Because keys are chained hashes, a key's holders all share the entire
+    prefix up to that block, and reference counts are non-increasing along any
+    request's chain — so the still-shared blocks after any release form a
+    leading run and the discount never goes negative.
+    """
+
+    def __init__(self, block_size: int):
+        self.block_size = block_size
+        self._ref: Dict[int, int] = {}
+        self.discount = 0          # tokens charged more than once (Σ (ref-1)·bs)
+
+    def __len__(self) -> int:
+        return len(self._ref)
+
+    def contains(self, key: int) -> bool:
+        return self._ref.get(key, 0) > 0
+
+    def shared_tokens(self, keys: Sequence[int]) -> int:
+        """Tokens of the leading blocks of ``keys`` already charged by a live
+        request — what admitting this chain would add to the discount."""
+        n = 0
+        for k in keys:
+            if self._ref.get(k, 0) > 0:
+                n += self.block_size
+            else:
+                break
+        return n
+
+    def acquire(self, keys: Sequence[int]) -> int:
+        """Register a charged request's block chain; returns the tokens newly
+        discounted (its prefix overlap with already-charged requests)."""
+        saved = self.shared_tokens(keys)
+        for k in keys:
+            self._ref[k] = self._ref.get(k, 0) + 1
+        self.discount += saved
+        return saved
+
+    def release(self, keys: Sequence[int]) -> None:
+        """Drop one charge of ``keys``. Blocks still referenced by siblings
+        stay discounted — their tokens remain charged through the survivors'
+        raw footprints, so nothing shared is double-freed."""
+        for k in keys:
+            n = self._ref.get(k, 0) - 1
+            if n > 0:
+                self._ref[k] = n
+                self.discount -= self.block_size
+            else:
+                self._ref.pop(k, None)
+
+    def check_invariants(self) -> None:
+        assert self.discount == sum(
+            max(0, n - 1) for n in self._ref.values()) * self.block_size
+        assert all(n > 0 for n in self._ref.values())

@@ -45,6 +45,9 @@ def _print_report(tag: str, report) -> None:
     if report.preemptions:
         print(f"[{tag}] kv-pressure: {report.preemptions} preemptions  "
               f"{report.preempted_tokens} tokens reclaimed")
+    if report.shared_kv_tokens:
+        print(f"[{tag}] prefix-sharing: {report.shared_kv_tokens} KV cap "
+              f"tokens counted once (shared blocks)")
 
 
 def run_open_loop(frontend: Frontend, trace) -> "object":
@@ -152,6 +155,16 @@ def main() -> None:
                          "(re-prefill restart) when decode growth hits the cap")
     ap.add_argument("--kv-cap", type=int, default=None,
                     help="override the KV-resident token cap (BatchLimits.cap)")
+    ap.add_argument("--prefix-sharing", default="off", choices=["on", "off"],
+                    help="prefix-sharing-aware scheduling: warm-then-follow "
+                         "prefill candidates and shared-block KV admission "
+                         "(shared template prefixes count once against the "
+                         "cap); 'off' is bit-identical to the pre-sharing "
+                         "scheduler")
+    ap.add_argument("--dpu-exact-probe", action="store_true",
+                    help="DPU prices priorities with a full prefix-cache "
+                         "probe (realized sharing) instead of Eq. 11's "
+                         "sampled miss ratio")
     ap.add_argument("--starvation-threshold", type=float, default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -169,19 +182,23 @@ def main() -> None:
         raise SystemExit(f"--kv-cap must be >= 1 (got {args.kv_cap})")
     lm = a100_opt13b()
     limits = BatchLimits() if args.kv_cap is None else BatchLimits(cap=args.kv_cap)
+    prefix_sharing = args.prefix_sharing == "on"
 
     if args.simulate:
         ds = make_dataset(args.dataset, num_rows=10_000, seed=args.seed)
         trace = build_trace(ds, TraceConfig(num_relqueries=args.num_relqueries,
                                             rate=args.rate, seed=args.seed,
                                             max_requests=args.max_requests))
-        dpu = DPUConfig(starvation_threshold=args.starvation_threshold)
+        dpu = DPUConfig(starvation_threshold=args.starvation_threshold,
+                        exact_probe=args.dpu_exact_probe)
         cluster = build_simulated_cluster(
             args.num_replicas, scheduler=args.scheduler, latency_model=lm,
             router_policy=args.router, dpu_config=dpu, seed=args.seed,
-            limits=limits, kv_admission=args.kv_admission)
+            limits=limits, kv_admission=args.kv_admission,
+            prefix_sharing=prefix_sharing)
         print(f"scheduler={args.scheduler} replicas={args.num_replicas} "
-              f"router={args.router} kv-admission={args.kv_admission}")
+              f"router={args.router} kv-admission={args.kv_admission} "
+              f"prefix-sharing={args.prefix_sharing}")
         if args.open_loop:
             report = run_open_loop(Frontend(cluster), trace)
             _print_report("open-loop", report)
@@ -208,10 +225,12 @@ def main() -> None:
                              "use --simulate for --num-replicas > 1")
         pc = PrefixCache(block_size=16)
         kw = dict(limits=limits, latency_model=lm, prefix_cache=pc,
-                  kv_admission=args.kv_admission)
+                  kv_admission=args.kv_admission,
+                  prefix_sharing=prefix_sharing)
         if args.scheduler.startswith("relserve"):
             kw["dpu_config"] = DPUConfig(
-                starvation_threshold=args.starvation_threshold)
+                starvation_threshold=args.starvation_threshold,
+                exact_probe=args.dpu_exact_probe)
         sched = SCHEDULERS[args.scheduler](**kw)
         cfg = get_smoke_config(args.arch)
         model = build_model(cfg)

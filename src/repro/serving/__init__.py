@@ -5,8 +5,10 @@ from repro.serving.cluster import Cluster, ClusterReport
 from repro.serving.factory import build_simulated_cluster
 from repro.serving.frontend import (Frontend, RelQueryCancelledError,
                                     RelQueryHandle, RelQueryStatus)
-from repro.serving.router import ROUTER_POLICIES, Router, route_relquery
+from repro.serving.router import (ROUTER_POLICIES, Router, route_relquery,
+                                  template_fingerprint)
 
 __all__ = ["Cluster", "ClusterReport", "Frontend", "RelQueryCancelledError",
            "RelQueryHandle", "RelQueryStatus", "Router", "ROUTER_POLICIES",
-           "build_simulated_cluster", "route_relquery"]
+           "build_simulated_cluster", "route_relquery",
+           "template_fingerprint"]

@@ -70,13 +70,30 @@ class Cluster:
         state and dumps work on a replica that is hours from free."""
         loads = [c.load() + (1 if self.clocks[i] > now else 0)
                  for i, c in enumerate(self.cores)]
-        replica = self.router.route(rq, loads)
+        warmth = self._cache_warmth(rq) \
+            if self.router.policy == "prefix_affinity" else None
+        replica = self.router.route(rq, loads, warmth=warmth)
         self.assignments[rq.rel_id] = replica
         core = self.cores[replica]
         if not core.has_work():   # replica idled until this arrival
             self.clocks[replica] = max(self.clocks[replica], now)
         core.admit(rq, now)
         return replica
+
+    def _cache_warmth(self, rq: RelQuery) -> Optional[List[int]]:
+        """Per-replica cached-token probe for ``rq``'s template prefix: how
+        much of the first request's prompt each replica's prefix cache
+        already holds. Side-effect free (``peek_cached``) — the probe must
+        not perturb LRU order or hit statistics."""
+        if not rq.requests:
+            return None
+        tokens = rq.requests[0].tokens
+        warmth = []
+        for core in self.cores:
+            pc = getattr(core.scheduler, "prefix_cache", None)
+            peek = getattr(pc, "peek_cached", None)
+            warmth.append(peek(tokens) if peek is not None else 0)
+        return warmth
 
     def step(self) -> Optional[BatchEvent]:
         """Tick the earliest busy replica (one batch). None when all idle;

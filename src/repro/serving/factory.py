@@ -22,14 +22,16 @@ def build_simulated_cluster(num_replicas: int, scheduler: str = "relserve",
                             dpu_config: Optional[DPUConfig] = None,
                             seed: int = 0, block_size: int = 16,
                             router: Optional[Router] = None,
-                            kv_admission: str = "conservative") -> Cluster:
+                            kv_admission: str = "conservative",
+                            prefix_sharing: bool = False) -> Cluster:
     lm = latency_model or a100_opt13b()
     caches = {}
 
     def make_scheduler(i: int):
         caches[i] = PrefixCache(block_size=block_size)
         kw = dict(limits=limits or BatchLimits(), latency_model=lm,
-                  prefix_cache=caches[i], kv_admission=kv_admission)
+                  prefix_cache=caches[i], kv_admission=kv_admission,
+                  prefix_sharing=prefix_sharing)
         if scheduler.startswith("relserve"):
             kw["dpu_config"] = dpu_config or DPUConfig()
         return SCHEDULERS[scheduler](**kw)

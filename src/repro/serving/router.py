@@ -8,28 +8,54 @@ least-loaded replica when the home replica is hot: a relQuery's requests still
 travel together (the spill decision is made once, at admission), only the home
 assignment moves.
 
+``prefix_affinity`` widens the affinity unit from one relQuery to one
+*template*: relQueries rendered from the same task template share a long
+prompt prefix, so sending them to the same replica turns cross-relQuery
+prefix-cache hits from a coincidence into a policy. The template fingerprint
+(template_id, or the first prompt block when untagged) maps to a sticky home
+replica chosen on first sight — preferring a replica whose cache is already
+warm for this prompt prefix when the backend supplies a warmth signal, else
+the least-loaded replica — with the same hot-home spillover as
+``affinity_spill`` (a spilled relQuery keeps its template's home assignment:
+one hot burst must not thrash the template map).
+
 Policies:
-- ``affinity``       — pure stable-hash placement, load-blind.
-- ``affinity_spill`` — affine placement unless the home replica's load exceeds
-  ``spill_factor`` x the least-loaded replica's (plus a small absolute slack);
-  then the relQuery lands on the least-loaded replica. Default.
-- ``least_loaded``   — ignore affinity, always pick the least-loaded replica.
-- ``round_robin``    — classic baseline, load- and affinity-blind.
+- ``affinity``        — pure stable-hash placement, load-blind.
+- ``affinity_spill``  — affine placement unless the home replica's load
+  exceeds ``spill_factor`` x the least-loaded replica's (plus a small absolute
+  slack); then the relQuery lands on the least-loaded replica. Default.
+- ``prefix_affinity`` — template-affine placement with warmth-aware first
+  assignment and least-loaded spillover.
+- ``least_loaded``    — ignore affinity, always pick the least-loaded replica.
+- ``round_robin``     — classic baseline, load- and affinity-blind.
 """
 from __future__ import annotations
 
 import zlib
-from typing import Optional, Sequence
+from typing import Dict, Optional, Sequence
 
 from repro.core.relquery import RelQuery
 
-ROUTER_POLICIES = ("affinity", "affinity_spill", "least_loaded", "round_robin")
+ROUTER_POLICIES = ("affinity", "affinity_spill", "prefix_affinity",
+                   "least_loaded", "round_robin")
 
 
 def route_relquery(rel_id: str, num_replicas: int) -> int:
     """Stable relQuery-affine hash (deterministic across processes, unlike
     builtin ``hash`` which is seed-randomized)."""
     return zlib.crc32(rel_id.encode()) % max(1, num_replicas)
+
+
+def template_fingerprint(rq: RelQuery, block_size: int = 16) -> int:
+    """Stable identity of the shared prompt prefix of ``rq``'s requests: the
+    template id when tagged, else the first prompt block of the first request
+    (the rendered template head — what actually lands in the prefix cache)."""
+    if rq.template_id:
+        return zlib.crc32(rq.template_id.encode())
+    if rq.requests:
+        blk = rq.requests[0].tokens[:block_size]
+        return zlib.crc32(b",".join(b"%d" % t for t in blk))
+    return zlib.crc32(rq.rel_id.encode())
 
 
 class Router:
@@ -43,12 +69,17 @@ class Router:
         self.spill_factor = spill_factor
         self.spill_slack = spill_slack
         self._rr = 0
-        self.stats = {"routed": 0, "spilled": 0}
+        self._template_home: Dict[int, int] = {}   # fingerprint -> replica
+        self.max_template_homes = 4096             # oldest dropped beyond this
+        self.stats = {"routed": 0, "spilled": 0, "template_homes": 0,
+                      "warm_hits": 0, "rehomed": 0}
 
-    def route(self, rq: RelQuery, loads: Optional[Sequence[int]] = None) -> int:
+    def route(self, rq: RelQuery, loads: Optional[Sequence[int]] = None,
+              warmth: Optional[Sequence[int]] = None) -> int:
         """Pick the replica for ``rq``. ``loads`` is the per-replica
         outstanding-request count at admission time (required by the
-        load-aware policies)."""
+        load-aware policies); ``warmth`` is an optional per-replica
+        cached-prefix-token probe for ``rq``'s prompts (prefix_affinity)."""
         self.stats["routed"] += 1
         if self.num_replicas <= 1:
             return 0
@@ -56,14 +87,50 @@ class Router:
             r = self._rr
             self._rr = (self._rr + 1) % self.num_replicas
             return r
-        home = route_relquery(rq.rel_id, self.num_replicas)
+        if self.policy == "prefix_affinity":
+            home = self._template_home_for(rq, loads, warmth)
+        else:
+            home = route_relquery(rq.rel_id, self.num_replicas)
         if self.policy == "affinity" or loads is None:
             return home
         coldest = min(range(self.num_replicas), key=lambda i: (loads[i], i))
         if self.policy == "least_loaded":
             return coldest
-        # affinity_spill: stay home unless home is disproportionately hot.
+        # affinity_spill / prefix_affinity: stay home unless home is
+        # disproportionately hot.
         if loads[home] > loads[coldest] * self.spill_factor + self.spill_slack:
             self.stats["spilled"] += 1
             return coldest
+        return home
+
+    def _template_home_for(self, rq: RelQuery, loads: Optional[Sequence[int]],
+                           warmth: Optional[Sequence[int]]) -> int:
+        """Sticky template->replica assignment. First sight of a template
+        picks the warmest replica (its cache already holds this prefix), else
+        the least-loaded one, else the stable hash; later relQueries follow."""
+        fp = template_fingerprint(rq)
+        home = self._template_home.get(fp)
+        if home is not None:
+            # sticky homes can go stale in a long-running service: if the
+            # home's cache no longer holds this prefix but another replica's
+            # does (e.g. past spillover traffic warmed it), follow the warmth
+            if warmth is not None and warmth[home] == 0 and max(warmth) > 0:
+                home = max(range(self.num_replicas), key=lambda i: (warmth[i], -i))
+                self._template_home[fp] = home
+                self.stats["rehomed"] += 1
+            return home
+        if warmth is not None and max(warmth) > 0:
+            home = max(range(self.num_replicas),
+                       key=lambda i: (warmth[i], -i))
+            self.stats["warm_hits"] += 1
+        elif loads is not None:
+            home = min(range(self.num_replicas), key=lambda i: (loads[i], i))
+        else:
+            home = fp % self.num_replicas
+        self._template_home[fp] = home
+        self.stats["template_homes"] += 1
+        while len(self._template_home) > self.max_template_homes:
+            # FIFO bound (insertion-ordered dict): an evicted template simply
+            # re-homes on next sight — the map must not grow without bound
+            self._template_home.pop(next(iter(self._template_home)))
         return home

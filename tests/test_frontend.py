@@ -19,12 +19,13 @@ from repro.serving import (Frontend, RelQueryCancelledError, RelQueryStatus,
                            build_simulated_cluster)
 
 
-def _engine(scheduler="relserve", seed=0, limits=None):
+def _engine(scheduler="relserve", seed=0, limits=None, prefix_sharing=False):
     lm = a100_opt13b()
     pc = PrefixCache(block_size=16)
-    kw = dict(limits=limits or BatchLimits(), latency_model=lm, prefix_cache=pc)
+    kw = dict(limits=limits or BatchLimits(), latency_model=lm, prefix_cache=pc,
+              prefix_sharing=prefix_sharing)
     if scheduler.startswith("relserve"):
-        kw["dpu_config"] = DPUConfig()
+        kw["dpu_config"] = DPUConfig(exact_probe=prefix_sharing)
     return ServingEngine(SCHEDULERS[scheduler](**kw),
                          SimulatedExecutor(lm, prefix_cache=pc, seed=seed))
 
@@ -113,6 +114,59 @@ def test_cluster_shim_reproduces_pre_frontend_loop():
     shim = build_simulated_cluster(2).run_trace(copy.deepcopy(trace)).merged
     assert shim.latencies == pin.latencies
     assert shim.end_to_end == pin.end_to_end
+
+
+def _shared_template_trace(num_relqueries=24, rate=4.0, seed=7,
+                           max_requests=16):
+    """A trace where relQueries share templates — the prefix-sharing regime."""
+    ds = make_dataset("rotten", num_rows=2000, seed=seed)
+    return build_trace(ds, TraceConfig(
+        num_relqueries=num_relqueries, rate=rate, seed=seed,
+        max_requests=max_requests, num_templates=2))
+
+
+@pytest.mark.parametrize("sched_name", ["relserve", "vllm"])
+def test_sharing_engine_shim_reproduces_open_loop(sched_name):
+    """Equivalence pin with prefix sharing *on*: the Frontend-based replay
+    shim still reproduces the pinned closed loop exactly — sharing changes
+    scheduling, not the open-loop == closed-loop contract."""
+    trace = _shared_template_trace()
+    pinned = _pinned_closed_loop(_engine(sched_name, prefix_sharing=True),
+                                 copy.deepcopy(trace))
+    shimmed = _engine(sched_name, prefix_sharing=True).run_trace(
+        copy.deepcopy(trace))
+    assert shimmed.latencies == pinned.latencies
+    assert shimmed.end_to_end == pinned.end_to_end
+    assert shimmed.shared_kv_tokens == pinned.shared_kv_tokens
+    assert shimmed.shared_kv_tokens > 0   # sharing actually engaged
+
+
+def test_prefix_affinity_cluster_result_equals_single_replica():
+    """Result pin for the prefix_affinity router: the same shared-template
+    trace through 1 replica and through a 2-replica prefix_affinity cluster
+    produces identical per-request token streams and the same finished set —
+    routing and sharing may only move timing."""
+    trace = _shared_template_trace()
+
+    def run(num_replicas):
+        t = copy.deepcopy(trace)
+        cluster = build_simulated_cluster(
+            num_replicas, router_policy="prefix_affinity",
+            prefix_sharing=True)
+        result = cluster.run_trace(t)
+        streams = {r.req_id: list(r.output_tokens)
+                   for rq in t for r in rq.requests}
+        return result, streams
+
+    single, streams_1 = run(1)
+    double, streams_2 = run(2)
+    assert streams_1 == streams_2
+    assert set(single.merged.latencies) == set(double.merged.latencies)
+    assert len(double.merged.latencies) == len(trace)
+    # every relQuery of a template landed on that template's home replica
+    # unless spilled; spilled or not, requests of one relQuery stay together
+    assert set(double.assignments) == {rq.rel_id for rq in trace}
+    assert double.router_stats["template_homes"] >= 1
 
 
 # ----------------------------------------------------------- streaming

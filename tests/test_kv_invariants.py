@@ -1,0 +1,217 @@
+"""Property-based invariant suite for the KV subsystem: ``BlockManager``
+(paged device blocks), ``PrefixCache`` (hash-block LRU) and
+``SharedPrefixLedger`` (shared-block admission accounting).
+
+Each test drives a random operation sequence — alloc / extend (decode
+append) / fork (shared-prefix alloc) / free — and checks the conservation
+law the rest of the system leans on:
+
+- every device block is either free or referenced: free + allocated +
+  shared == num_blocks at every step (shared blocks counted once);
+- LRU eviction never drops a ref-counted (pinned) block;
+- ``match_blocks`` always returns a chain prefix of the query's block hashes;
+- ``can_allocate`` never admits an allocation that would cross the watermark;
+- the ledger's discount always equals Σ max(0, ref-1)·block_size and drains
+  to zero.
+"""
+import random
+
+from _hypothesis_compat import given, settings, st
+
+from repro.engine.kv_cache import BlockManager, OutOfBlocks, SharedPrefixLedger
+from repro.engine.prefix_cache import PrefixCache, block_hashes
+
+OPS = st.lists(
+    st.tuples(st.sampled_from(["alloc", "fork", "extend", "free"]),
+              st.integers(1, 120), st.integers(0, 7)),
+    min_size=1, max_size=60)
+
+
+def _conservation(bm: BlockManager) -> None:
+    bm.check_invariants()
+    in_use = set()
+    for sid in list(bm._seqs):
+        in_use.update(bm.block_table(sid))
+    assert bm.free_blocks + len(in_use) == bm.num_blocks
+
+
+@given(OPS)
+@settings(max_examples=60, deadline=None)
+def test_block_manager_random_lifecycle_conserves_blocks(ops):
+    """alloc/extend/fork/free in any order: free + allocated + shared ==
+    num_blocks, with shared prefix blocks appearing once however many
+    sequences reference them."""
+    bm = BlockManager(num_blocks=96, block_size=8)
+    rng = random.Random(0xBEEF)
+    live = []                      # seq ids with an allocation
+    published = []                 # (keys,) published prefixes to fork from
+    counter = [0]
+
+    def fresh_sid():
+        counter[0] += 1
+        return f"s{counter[0]}"
+
+    for op, tokens, pick in ops:
+        if op == "alloc":
+            sid = fresh_sid()
+            try:
+                bm.allocate(sid, tokens)
+                live.append(sid)
+                # publish this sequence's full blocks as a shareable prefix
+                keys = [hash_key for hash_key in
+                        block_hashes(list(range(tokens)), 8)]
+                bm.register_prefix(sid, keys)
+                if keys:
+                    published.append(keys)
+            except OutOfBlocks:
+                pass
+        elif op == "fork" and published:
+            sid = fresh_sid()
+            keys = published[pick % len(published)]
+            want = max(tokens, len(keys) * 8)
+            # the publishing sequence may have been freed since: only the
+            # still-resident leading run of the chain is reusable
+            resident = 0
+            for key in keys:
+                if key in bm._prefix_blocks:
+                    resident += 1
+                else:
+                    break
+            if bm.can_allocate(want, cached_blocks=resident):
+                alloc = bm.allocate(sid, want, prefix_keys=keys)
+                live.append(sid)
+                assert alloc.shared_prefix_blocks == resident
+        elif op == "extend" and live:
+            sid = live[pick % len(live)]
+            try:
+                bm.append_token(sid)
+            except OutOfBlocks:
+                pass
+        elif op == "free" and live:
+            sid = live.pop(pick % len(live))
+            bm.free(sid)
+        _conservation(bm)
+
+    for sid in list(live):
+        bm.free(sid)
+    _conservation(bm)
+    assert bm.free_blocks == 96, "blocks leaked after freeing every sequence"
+
+
+@given(OPS)
+@settings(max_examples=40, deadline=None)
+def test_can_allocate_never_admits_past_watermark(ops):
+    """Whenever ``can_allocate`` says yes, performing that allocation leaves
+    at least ``watermark_blocks`` free."""
+    bm = BlockManager(num_blocks=64, block_size=8, watermark=0.1)
+    live = []
+    counter = [0]
+    for op, tokens, pick in ops:
+        admitted = bm.can_allocate(tokens)
+        if admitted:
+            counter[0] += 1
+            sid = f"s{counter[0]}"
+            bm.allocate(sid, tokens)    # must not raise: admission was checked
+            live.append(sid)
+            assert bm.free_blocks >= bm.watermark_blocks, \
+                "can_allocate admitted past the watermark"
+        elif op == "free" and live:
+            bm.free(live.pop(pick % len(live)))
+        bm.check_invariants()
+
+
+@given(st.lists(st.lists(st.integers(0, 50), min_size=1, max_size=40),
+                min_size=1, max_size=30),
+       st.lists(st.integers(0, 50), min_size=1, max_size=40))
+@settings(max_examples=60, deadline=None)
+def test_match_blocks_is_always_a_chain_prefix(seqs, query):
+    """``match_blocks`` returns exactly the leading run of the query's own
+    chained hashes — never a hole, never a foreign key."""
+    pc = PrefixCache(block_size=4, capacity_blocks=16)
+    for seq in seqs:
+        pc.insert(seq)
+        matched = pc.match_blocks(query)
+        full = block_hashes(query, 4)
+        assert matched == full[:len(matched)]
+        assert pc.peek_cached(query) == len(matched) * 4
+
+
+@given(st.lists(st.tuples(st.lists(st.integers(0, 30), min_size=4, max_size=24),
+                          st.booleans()),
+                min_size=1, max_size=40))
+@settings(max_examples=60, deadline=None)
+def test_lru_eviction_never_drops_refcounted_block(inserts):
+    """Random insert/acquire traffic over a tiny cache: every block some
+    live sequence still references (ref_count > 0) survives eviction, even
+    when that means temporarily exceeding capacity."""
+    pc = PrefixCache(block_size=4, capacity_blocks=6)
+    acquired = []                  # key chains currently pinned
+    for seq, do_acquire in inserts:
+        keys = block_hashes(seq, 4)
+        if do_acquire and keys:
+            pc.acquire_blocks(keys)
+            acquired.append(keys)
+        pc.insert(seq)
+        for chain in acquired:
+            for key in chain:
+                assert pc.has_block(key) or pc._pins.get(key, 0) > 0, \
+                    "LRU evicted a ref-counted block"
+        # pinned blocks may push the cache over capacity; unpinned may not
+        unpinned = sum(1 for k, b in pc._blocks.items() if b.ref_count == 0)
+        if len(pc) > pc.capacity_blocks:
+            assert unpinned == 0 or len(pc) - unpinned <= pc.capacity_blocks
+    for chain in acquired:
+        pc.release_blocks(chain)
+    pc.insert(list(range(7 * 4)))  # one oversized insert forces eviction
+    assert len(pc) <= pc.capacity_blocks, \
+        "cache stayed over capacity after every pin was released"
+
+
+@given(st.lists(st.tuples(st.integers(0, 5), st.integers(1, 6), st.booleans()),
+                min_size=1, max_size=40))
+@settings(max_examples=60, deadline=None)
+def test_shared_ledger_discount_invariant(ops):
+    """Random acquire/release of overlapping chains: the discount always
+    equals Σ max(0, ref-1)·block_size, shared_tokens is a leading run, and a
+    fully released ledger is empty with zero discount."""
+    ledger = SharedPrefixLedger(block_size=8)
+    # chains share prefixes by construction: chain i = first (i+1) keys of a
+    # common sequence (exactly how chained block hashes behave)
+    base = block_hashes(list(range(6 * 8)), 8)
+    held = []
+    for which, length, release in ops:
+        keys = base[:min(length, len(base))]
+        if release and held:
+            ledger.release(held.pop(which % len(held)))
+        else:
+            saved = ledger.acquire(keys)
+            held.append(keys)
+            assert saved % 8 == 0 and 0 <= saved <= len(keys) * 8
+        ledger.check_invariants()
+        assert ledger.discount >= 0
+        # shared_tokens sees a leading run: if key i is shared, so is i-1
+        shared = ledger.shared_tokens(base)
+        assert shared % 8 == 0
+        for i, k in enumerate(base):
+            if not ledger.contains(k):
+                assert shared <= i * 8
+                break
+    for keys in held:
+        ledger.release(keys)
+    assert ledger.discount == 0 and len(ledger) == 0
+
+
+def test_shared_ledger_victim_never_frees_sibling_blocks():
+    """PR-3 interaction pin: when a victim releases its chain, blocks its
+    siblings still reference stay counted (discount shrinks by exactly the
+    overlap, and the survivors' raw charges keep the blocks covered)."""
+    ledger = SharedPrefixLedger(block_size=16)
+    chain = block_hashes(list(range(64)), 16)        # 4 blocks
+    assert ledger.acquire(chain) == 0                # leader pays full
+    assert ledger.acquire(chain) == 64               # follower discounts all
+    assert ledger.discount == 64
+    ledger.release(chain)                            # preempt the leader
+    assert ledger.discount == 0                      # survivor now pays raw
+    assert all(ledger.contains(k) for k in chain)    # blocks still charged
+    ledger.release(chain)
+    assert ledger.discount == 0 and len(ledger) == 0

@@ -1,4 +1,8 @@
 """Prefix cache + paged block manager invariants (unit + hypothesis)."""
+import os
+import subprocess
+import sys
+
 import pytest
 
 from _hypothesis_compat import given, settings, st
@@ -13,6 +17,41 @@ def test_block_hash_chaining():
     assert a[0] == b[0] and a[1] != b[1]          # shared first block only
     c = block_hashes([0, 2, 3, 4, 5, 6, 7, 8], 4)
     assert a[0] != c[0] and a[1] != c[1]          # chained: divergence propagates
+
+
+def test_block_hashes_pinned_values():
+    """Keys are a 64-bit chained crc32 pair, pinned: they feed scheduling
+    order, the shared KV ledger and the router, so they may never drift (the
+    old salted ``hash((h, blk))`` gave a different cache identity every
+    process; a single 32-bit crc would birthday-collide at cache scale)."""
+    assert block_hashes([1, 2, 3, 4, 5, 6, 7, 8], 4) == \
+        [6380366929420061543, 9555590682644823222]
+    assert block_hashes(list(range(32)), 16) == \
+        [1103416033823968531, 1262309149209778443]
+    assert block_hashes([40000, 7, 123456789, 0], 2) == \
+        [7013585186073293444, 12469441396347363886]
+    assert block_hashes([1, 2, 3], 4) == []          # no full block
+    assert all(k < 2 ** 64 for k in block_hashes(list(range(64)), 8))
+
+
+def test_block_hashes_stable_across_interpreters():
+    """Regression for cross-process nondeterminism: a fresh interpreter (its
+    own hash salt, forced different via PYTHONHASHSEED) must derive the exact
+    keys this process did."""
+    script = ("import sys; sys.path.insert(0, 'src'); "
+              "from repro.engine.prefix_cache import block_hashes; "
+              "print(block_hashes(list(range(64)), 16), "
+              "block_hashes([9, 8, 7, 6, 5, 4], 3))")
+    expected = f"{block_hashes(list(range(64)), 16)} " \
+               f"{block_hashes([9, 8, 7, 6, 5, 4], 3)}"
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for seed in ("0", "12345"):
+        out = subprocess.run(
+            [sys.executable, "-c", script], capture_output=True, text=True,
+            cwd=repo_root,
+            env={"PYTHONHASHSEED": seed, "PATH": os.environ["PATH"]},
+            check=True).stdout.strip()
+        assert out == expected, f"keys drifted under PYTHONHASHSEED={seed}"
 
 
 def test_prefix_cache_match_and_insert():

@@ -1,0 +1,159 @@
+"""Cross-policy scheduler metamorphic suite.
+
+Every scheduling policy × KV-admission mode is run over randomized
+shared-template traces and checked against properties that must hold no
+matter what order batches were arranged in:
+
+- **token-ledger conservation** — after the queue drains, every KV ledger
+  (tokens_in_use, committed_tokens, partial_prefill_tokens, the shared-block
+  discount) is exactly zero;
+- **no fabricated outputs** — each request's generated stream is exactly the
+  simulated executor's deterministic sequence for that req_id (right tokens,
+  right length, EOS where the trace says), and nothing was invented for
+  requests missing from a batch;
+- **same seed ⇒ same events** — re-running an identical configuration yields
+  a bit-identical batch event stream;
+- **prefix sharing is timing-only** — enabling prefix-sharing-aware
+  scheduling changes when work runs, never what any request generates.
+"""
+import copy
+import zlib
+
+import pytest
+
+from repro.core.latency_model import a100_opt13b
+from repro.core.policies import SCHEDULERS
+from repro.core.priority import BatchLimits, DPUConfig
+from repro.data.datasets import make_dataset
+from repro.data.trace import TraceConfig, build_trace
+from repro.engine.engine import ServingEngine
+from repro.engine.prefix_cache import PrefixCache
+from repro.engine.simulator import SimulatedExecutor, sim_output_len
+
+POLICIES = tuple(SCHEDULERS)
+MODES = ("conservative", "optimistic")
+
+
+def _trace(seed, num_relqueries=8, rate=3.0, max_requests=10):
+    ds = make_dataset("rotten", num_rows=2000, seed=seed)
+    return build_trace(ds, TraceConfig(
+        num_relqueries=num_relqueries, rate=rate, seed=seed,
+        max_requests=max_requests, num_templates=2))
+
+
+def _cap_for(trace, slack=2.0):
+    """A cap tight enough to exercise admission/preemption but guaranteed to
+    fit every single request (no legitimate deadlock)."""
+    max_fp = max(r.num_prompt_tokens + r.max_output_tokens
+                 for rq in trace for r in rq.requests)
+    return int(max_fp * slack)
+
+
+def _run(policy, mode, trace, prefix_sharing=False, exec_seed=0):
+    trace = copy.deepcopy(trace)
+    lm = a100_opt13b()
+    pc = PrefixCache(block_size=16)
+    kw = dict(limits=BatchLimits(cap=_cap_for(trace)), latency_model=lm,
+              prefix_cache=pc, kv_admission=mode, prefix_sharing=prefix_sharing)
+    if policy.startswith("relserve"):
+        kw["dpu_config"] = DPUConfig(exact_probe=prefix_sharing)
+    sched = SCHEDULERS[policy](**kw)
+    engine = ServingEngine(sched, SimulatedExecutor(lm, prefix_cache=pc,
+                                                    seed=exec_seed))
+    report = engine.run_trace(trace)
+    return report, sched, trace
+
+
+def _expected_stream(r):
+    """The simulated executor's deterministic output for request ``r``."""
+    target = min(sim_output_len(r), r.max_output_tokens)
+    toks = [(zlib.crc32(f"{r.req_id}:{i}".encode()) & 0x7FFF) + 2
+            for i in range(1, target + 1)]
+    if r.eos_token is not None:
+        toks[-1] = r.eos_token
+    return toks
+
+
+def _streams(trace):
+    return {r.req_id: tuple(r.output_tokens)
+            for rq in trace for r in rq.requests}
+
+
+def _assert_conserved_and_faithful(report, sched, trace):
+    assert sched.tokens_in_use == 0, "tokens_in_use leaked"
+    assert sched.committed_tokens == 0, "committed_tokens leaked"
+    assert sched.partial_prefill_tokens == 0, "partial chunk ledger leaked"
+    if sched._shared_ledger is not None:
+        assert sched._shared_ledger.discount == 0, "shared discount leaked"
+        assert len(sched._shared_ledger) == 0, "shared ledger holds chains"
+    assert report.missing_decode_outputs == 0
+    assert len(report.latencies) == len(trace)
+    for rq in trace:
+        for r in rq.requests:
+            assert r.is_finished()
+            assert r.output_tokens == _expected_stream(r), \
+                f"fabricated/garbled output for {r.req_id}"
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("policy", POLICIES)
+def test_ledger_conservation_and_faithful_outputs(policy, mode):
+    trace = _trace(seed=3)
+    report, sched, ran = _run(policy, mode, trace)
+    _assert_conserved_and_faithful(report, sched, ran)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", [1, 9, 17])
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("policy", POLICIES)
+def test_ledger_conservation_wider_seeds(policy, mode, seed):
+    trace = _trace(seed=seed, num_relqueries=10, rate=4.0)
+    report, sched, ran = _run(policy, mode, trace,
+                              prefix_sharing=bool(seed % 2))
+    _assert_conserved_and_faithful(report, sched, ran)
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("policy", POLICIES)
+def test_same_seed_gives_identical_event_stream(policy, mode):
+    trace = _trace(seed=5)
+    rep_a, _, _ = _run(policy, mode, trace)
+    rep_b, _, _ = _run(policy, mode, trace)
+    ev_a = [(e.kind, e.start, e.end, e.num_requests, e.uncached_tokens,
+             e.rel_ids) for e in rep_a.events]
+    ev_b = [(e.kind, e.start, e.end, e.num_requests, e.uncached_tokens,
+             e.rel_ids) for e in rep_b.events]
+    assert ev_a == ev_b, "same seed produced different event streams"
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("policy", POLICIES)
+def test_prefix_sharing_changes_timing_only(policy, mode):
+    """Sharing on vs off: identical per-request token streams (only batch
+    composition/timing may differ), and the sharing run's ledgers conserve."""
+    trace = _trace(seed=7)
+    rep_off, _, ran_off = _run(policy, mode, trace, prefix_sharing=False)
+    rep_on, sched_on, ran_on = _run(policy, mode, trace, prefix_sharing=True)
+    assert _streams(ran_off) == _streams(ran_on), \
+        "prefix sharing altered a token stream"
+    _assert_conserved_and_faithful(rep_on, sched_on, ran_on)
+    assert set(rep_off.latencies) == set(rep_on.latencies)
+
+
+def test_preemption_under_sharing_preserves_streams():
+    """Optimistic admission at a cap tight enough to force preemptions, with
+    sharing on: preempt/re-prefill cycles must not corrupt outputs and the
+    shared ledger must track victim releases exactly."""
+    trace = _trace(seed=13, num_relqueries=10, rate=6.0, max_requests=12)
+    ran = copy.deepcopy(trace)
+    lm = a100_opt13b()
+    pc = PrefixCache(block_size=16)
+    sched = SCHEDULERS["relserve"](
+        limits=BatchLimits(cap=_cap_for(ran, slack=1.3)), latency_model=lm,
+        prefix_cache=pc, kv_admission="optimistic", prefix_sharing=True,
+        dpu_config=DPUConfig(exact_probe=True))
+    engine = ServingEngine(sched, SimulatedExecutor(lm, prefix_cache=pc))
+    report = engine.run_trace(ran)
+    assert report.preemptions > 0, "cap not tight enough to exercise preemption"
+    _assert_conserved_and_faithful(report, sched, ran)
