@@ -1,0 +1,233 @@
+"""Bench-regression gate for CI: compare freshly produced ``BENCH_*.json``
+artifacts against the committed baselines and fail the job on regression.
+
+Two kinds of checks:
+
+* **Invariants** (always, on the fresh artifact): no cell may report a
+  deadlock, and any summary verdict booleans (``optimistic_wins``,
+  ``paged_decode_wins``, ``streams_identical``, ``deadlocks == 0``) must
+  hold. These are machine-independent by construction.
+* **Latency comparison** (only when the fresh run's ``config`` matches the
+  baseline's, and the bench runs on the *simulated* clock): every
+  ``avg_latency_s`` / ``p99_latency_s`` metric must stay within
+  ``--tolerance`` of the committed value. Simulated-clock benches are
+  deterministic across machines (seeded traces, crc32 keys), so the default
+  tolerance only absorbs float/library drift. Wall-clock benches
+  (``real_executor``) are never latency-compared — their verdict booleans
+  carry the regression signal instead.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --baseline-dir benchmarks/baselines --fresh-dir bench_fresh
+    PYTHONPATH=src python -m benchmarks.check_regression --self-test
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+# benches whose latency metrics are host wall-clock (never compared);
+# their summary verdicts are still invariant-checked
+WALL_CLOCK_BENCHES = {"real_executor"}
+
+LATENCY_KEYS = ("avg_latency_s", "p99_latency_s")
+VERDICT_TRUE_KEYS = ("optimistic_wins", "paged_decode_wins",
+                     "streams_identical", "sharing_wins")
+
+
+def _walk(node, path=""):
+    """Yield (dotted_path, key, value) for every leaf in a JSON tree."""
+    if isinstance(node, dict):
+        for k, v in node.items():
+            yield from _walk(v, f"{path}.{k}" if path else k)
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            yield from _walk(v, f"{path}[{i}]")
+    else:
+        key = path.rsplit(".", 1)[-1]
+        yield path, key, node
+
+
+def check_invariants(name: str, fresh: dict) -> List[str]:
+    problems = []
+    for path, key, value in _walk(fresh):
+        if key == "deadlock" and value:
+            problems.append(f"{name}: {path} reports a deadlock")
+        elif key == "deadlocks" and value:
+            problems.append(f"{name}: {path} = {value} (must be 0)")
+        elif key in VERDICT_TRUE_KEYS and value is not True:
+            problems.append(f"{name}: verdict {path} = {value} (must be true)")
+    return problems
+
+
+def check_latencies(name: str, baseline: dict, fresh: dict,
+                    tolerance: float) -> Tuple[List[str], List[str]]:
+    """Returns (problems, notes). Latency metrics are matched by path."""
+    if name in WALL_CLOCK_BENCHES:
+        return [], [f"{name}: wall-clock bench — latency comparison skipped"]
+    if baseline.get("config") != fresh.get("config"):
+        return [], [f"{name}: config drift (baseline vs fresh run differ) — "
+                    f"latency comparison skipped"]
+    base_vals: Dict[str, float] = {
+        path: v for path, key, v in _walk(baseline)
+        if key in LATENCY_KEYS and isinstance(v, (int, float))}
+    problems, notes = [], []
+    fresh_vals = {path: v for path, key, v in _walk(fresh)
+                  if key in LATENCY_KEYS and isinstance(v, (int, float))}
+    for path, base in sorted(base_vals.items()):
+        cur = fresh_vals.get(path)
+        if cur is None:
+            problems.append(f"{name}: metric {path} vanished from fresh run")
+            continue
+        if base > 0 and cur > base * (1.0 + tolerance):
+            problems.append(
+                f"{name}: {path} regressed {base:.4f}s -> {cur:.4f}s "
+                f"(+{(cur / base - 1) * 100:.1f}% > {tolerance * 100:.0f}% "
+                f"tolerance)")
+    notes.append(f"{name}: {len(base_vals)} latency metrics within "
+                 f"{tolerance * 100:.0f}%"
+                 if not problems else f"{name}: LATENCY REGRESSION")
+    return problems, notes
+
+
+def run_gate(baseline_dir: Path, fresh_dir: Path, tolerance: float) -> int:
+    baselines = sorted(baseline_dir.glob("BENCH_*.json"))
+    if not baselines:
+        print(f"[check_regression] no BENCH_*.json baselines under "
+              f"{baseline_dir}", file=sys.stderr)
+        return 2
+    # union: a fresh artifact with no committed baseline still gets its
+    # invariants checked (a brand-new bench must not slip through green
+    # while its own JSON reports deadlocks)
+    names = sorted({p.name for p in baselines} |
+                   {p.name for p in fresh_dir.glob("BENCH_*.json")})
+    problems: List[str] = []
+    for fname in names:
+        name = fname[len("BENCH_"):-len(".json")]
+        bpath, fpath = baseline_dir / fname, fresh_dir / fname
+        if not fpath.exists():
+            problems.append(f"{name}: fresh artifact {fpath} missing — did "
+                            f"the bench run?")
+            continue
+        fresh = json.loads(fpath.read_text())
+        problems += check_invariants(name, fresh)
+        if not bpath.exists():
+            print(f"[check_regression] {name}: no baseline committed — "
+                  f"invariants only (commit {bpath} to start tracking)",
+                  flush=True)
+            continue
+        baseline = json.loads(bpath.read_text())
+        lat_problems, notes = check_latencies(name, baseline, fresh, tolerance)
+        problems += lat_problems
+        for note in notes:
+            print(f"[check_regression] {note}", flush=True)
+    if problems:
+        print(f"[check_regression] {len(problems)} problem(s):",
+              file=sys.stderr)
+        for p in problems:
+            print(f"  REGRESSION  {p}", file=sys.stderr)
+        return 1
+    print(f"[check_regression] OK — {len(names)} bench artifact(s) "
+          f"within tolerance, zero deadlocks")
+    return 0
+
+
+# --------------------------------------------------------------------------
+# self-test: the gate must catch an injected synthetic regression
+# --------------------------------------------------------------------------
+def self_test() -> int:
+    import tempfile
+
+    cfg = {"seed": 0, "smoke": True}
+    baseline = {"config": cfg,
+                "cells": {"a": {"avg_latency_s": 1.0, "p99_latency_s": 2.0,
+                                "deadlock": False}},
+                "summary": {"verdict": {"x": {"optimistic_wins": True,
+                                              "deadlocks": 0}}}}
+
+    def gate_with(fresh) -> int:
+        with tempfile.TemporaryDirectory() as td:
+            bdir, fdir = Path(td, "base"), Path(td, "fresh")
+            bdir.mkdir(), fdir.mkdir()
+            (bdir / "BENCH_selftest.json").write_text(json.dumps(baseline))
+            (fdir / "BENCH_selftest.json").write_text(json.dumps(fresh))
+            return run_gate(bdir, fdir, tolerance=0.10)
+
+    import copy
+    clean = copy.deepcopy(baseline)
+    clean["cells"]["a"]["avg_latency_s"] = 1.05      # inside tolerance
+    assert gate_with(clean) == 0, "self-test: clean run must pass"
+
+    slow = copy.deepcopy(baseline)
+    slow["cells"]["a"]["avg_latency_s"] = 1.5        # +50%: regression
+    assert gate_with(slow) == 1, \
+        "self-test: injected latency regression must fail the gate"
+
+    dead = copy.deepcopy(baseline)
+    dead["cells"]["a"]["deadlock"] = True
+    assert gate_with(dead) == 1, \
+        "self-test: injected deadlock must fail the gate"
+
+    lost = copy.deepcopy(baseline)
+    lost["summary"]["verdict"]["x"]["optimistic_wins"] = False
+    assert gate_with(lost) == 1, \
+        "self-test: flipped verdict boolean must fail the gate"
+
+    drift = copy.deepcopy(baseline)
+    drift["config"] = {"seed": 1, "smoke": True}
+    drift["cells"]["a"]["avg_latency_s"] = 99.0      # ignored: config drift
+    assert gate_with(drift) == 0, \
+        "self-test: config drift must skip latency comparison, not fail"
+
+    missing_rc = 0
+    with tempfile.TemporaryDirectory() as td:
+        bdir, fdir = Path(td, "base"), Path(td, "fresh")
+        bdir.mkdir(), fdir.mkdir()
+        (bdir / "BENCH_selftest.json").write_text(json.dumps(baseline))
+        missing_rc = run_gate(bdir, fdir, tolerance=0.10)
+    assert missing_rc == 1, "self-test: missing fresh artifact must fail"
+
+    # a fresh artifact with no committed baseline is still invariant-checked
+    with tempfile.TemporaryDirectory() as td:
+        bdir, fdir = Path(td, "base"), Path(td, "fresh")
+        bdir.mkdir(), fdir.mkdir()
+        (bdir / "BENCH_selftest.json").write_text(json.dumps(baseline))
+        (fdir / "BENCH_selftest.json").write_text(json.dumps(baseline))
+        newdead = copy.deepcopy(baseline)
+        newdead["cells"]["a"]["deadlock"] = True
+        (fdir / "BENCH_brandnew.json").write_text(json.dumps(newdead))
+        assert run_gate(bdir, fdir, tolerance=0.10) == 1, \
+            "self-test: baseline-less fresh artifact must still be " \
+            "invariant-checked"
+
+    print("CHECK-REGRESSION SELF-TEST OK: gate fails on injected latency "
+          "regression, deadlock, flipped verdict and missing artifact; "
+          "passes clean runs and skips config drift")
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline-dir", default="benchmarks/baselines",
+                    help="directory holding the committed BENCH_*.json "
+                         "baselines")
+    ap.add_argument("--fresh-dir", default=".",
+                    help="directory holding the freshly produced artifacts "
+                         "(point BENCH_OUT_DIR here when running the benches)")
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="allowed fractional slowdown for simulated-clock "
+                         "latency metrics (default 10%%)")
+    ap.add_argument("--self-test", action="store_true",
+                    help="verify the gate catches an injected synthetic "
+                         "regression, then exit")
+    args = ap.parse_args()
+    if args.self_test:
+        raise SystemExit(self_test())
+    raise SystemExit(run_gate(Path(args.baseline_dir), Path(args.fresh_dir),
+                              args.tolerance))
+
+
+if __name__ == "__main__":
+    main()

@@ -139,6 +139,14 @@ class EngineCore:
 
     # ------------------------------------------------------------------ steps
     def admit(self, rq: RelQuery, now: float) -> None:
+        """Admit a relQuery. Executors exposing ``validate_relquery`` (the
+        real backends) get to reject requests that can never fit their
+        per-sequence KV capacity *before* the scheduler sees them — a
+        too-long request used to overflow the dense slot buffer silently
+        mid-decode instead of failing here with a clear error."""
+        validate = getattr(self.executor, "validate_relquery", None)
+        if validate is not None:
+            validate(rq)
         self.scheduler.add_relquery(rq, now)
 
     def has_work(self) -> bool:

@@ -1,21 +1,34 @@
-"""Real JAX executor: token-by-token execution of scheduler-issued batches on
+"""Real JAX executors: token-by-token execution of scheduler-issued batches on
 an actual model (smoke-scale on CPU; the same code path drives a TPU slice).
 
-Slot-based continuous batching: the executor owns ``max_slots`` decode cache
-slots (the model's dense/ring KV layout); prefill assigns slots, decode runs
-one ``decode_step`` over all active slots (a strict superset of the scheduled
-batch is never needed — RelServe decodes the whole running queue). Prefill
-batches execute per-request with bucketed padding to bound recompilation.
+Two KV backends behind one engine-facing contract (``execute`` /
+``release_request`` / ``validate_relquery`` / ``fitted_model``):
 
-Also the calibration source for the linear batch-cost model (paper Fig. 7):
-``calibrate()`` measures (tokens, duration) / (reqs, duration) samples and fits
-α/β on this host.
+``RealExecutor`` — the dense baseline. ``max_slots`` decode cache slots of
+``max_len`` tokens each (the model's dense/ring KV layout); prefill assigns
+slots one request at a time with bucketed padding, decode runs one
+``decode_step`` over all active slots. Kept bit-identical as the reference
+the paged backend is pinned against.
+
+``PagedRealExecutor`` — block-paged KV owned by ``BlockManager``: a single
+``[num_blocks, block_size, heads, dim]`` K/V pool per layer, per-request
+block tables, batched multi-request prefill (shape-bucketed on batch and
+length to bound recompilation, optionally through the Pallas
+``flash_prefill`` kernel) and decode through the Pallas ``paged_attention``
+kernel — falling back to ``kernels/ref.py`` on CPU so CI exercises the same
+path. Prefix-sharing chains map to physically shared (ref-counted) blocks
+with copy-on-write on divergence; preemption releases real blocks instead of
+whole slots, so the scheduler's token ledger and device residency agree.
+
+Both are the calibration source for the linear batch-cost model (paper
+Fig. 7): ``fitted_model()`` fits α/β from measured (tokens, duration) /
+(reqs, duration) samples on this host.
 """
 from __future__ import annotations
 
 import time as _time
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,9 +36,16 @@ import numpy as np
 
 from repro.core import latency_model as lm_mod
 from repro.core.batch import Batch
-from repro.core.relquery import Request
+from repro.core.relquery import RelQuery, Request
 from repro.core.scheduler import BatchResult
-from repro.engine.prefix_cache import PrefixCache
+from repro.engine.kv_cache import BlockManager, OutOfBlocks
+from repro.engine.prefix_cache import PrefixCache, block_hashes
+
+
+class RequestCapacityError(ValueError):
+    """A request can never fit this executor's per-sequence KV capacity —
+    raised at admission (``EngineCore.admit``) instead of overflowing the
+    slot buffer / block table mid-flight."""
 
 
 def _bucket(n: int, buckets=(16, 32, 64, 128, 256, 512, 1024, 2048, 4096)) -> int:
@@ -35,28 +55,101 @@ def _bucket(n: int, buckets=(16, 32, 64, 128, 256, 512, 1024, 2048, 4096)) -> in
     return ((n + 4095) // 4096) * 4096
 
 
+def _pow2_bucket(n: int) -> int:
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+class _ExecutorBase:
+    """Shared mechanics of the real executors: sampling, finish detection,
+    admission-time capacity validation and cost-model calibration."""
+
+    def __init__(self, model, params, *, max_len: int,
+                 prefix_cache: Optional[PrefixCache] = None,
+                 greedy: bool = True):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.prefix_cache = prefix_cache
+        self.greedy = greedy
+        self.prefill_samples: List[Tuple[int, float]] = []
+        self.decode_samples: List[Tuple[int, float]] = []
+
+    # ------------------------------------------------------------- admission
+    def validate_relquery(self, rq: RelQuery) -> None:
+        """Reject (at admission) any request whose worst-case prompt+output
+        footprint can never fit a sequence's KV capacity — previously such a
+        request silently overflowed the dense slot buffer mid-decode."""
+        for r in rq.requests:
+            need = r.num_prompt_tokens + r.max_output_tokens
+            if need > self.max_len:
+                raise RequestCapacityError(
+                    f"request {r.req_id} of relQuery {rq.rel_id} needs up to "
+                    f"{need} KV tokens (prompt {r.num_prompt_tokens} + "
+                    f"max_output {r.max_output_tokens}) but this executor's "
+                    f"per-sequence capacity is max_len={self.max_len}; "
+                    f"shorten the prompt, lower max_output_tokens, or build "
+                    f"the executor with a larger max_len")
+
+    # ------------------------------------------------------------- shared bits
+    def _aot(self, fn, *args) -> Tuple[object, float]:
+        """Ahead-of-time compile ``fn`` for ``args``; returns (executable,
+        compile_seconds). Callers subtract the compile time from their
+        measured phase duration: throughput samples and the fitted cost model
+        must see steady-state execution, not first-shape XLA compilation
+        (the shape-bucketed paged backend compiles several decode variants
+        over a run — charging those to decode latency would skew both the
+        clock and Fig. 7's α/β fit)."""
+        t0 = _time.perf_counter()
+        exe = fn.lower(*args).compile()
+        return exe, _time.perf_counter() - t0
+
+    def _sample(self, logits) -> np.ndarray:
+        return np.asarray(jnp.argmax(logits, axis=-1))
+
+    def _is_finish_token(self, r: Request, tok: int, produced: int) -> bool:
+        if r.eos_token is not None and tok == r.eos_token:
+            return True
+        return produced >= r.max_output_tokens
+
+    def _account_prefill(self, r: Request, seq: Sequence[int]) -> int:
+        """Prefix-cache stats identical across backends (count then insert,
+        in batch order): only the prompt enters the cache — generated tokens
+        are never prefix-cached (the estimator/PEM invariant)."""
+        if self.prefix_cache is None:
+            return len(seq)
+        cached = self.prefix_cache.count_cached(seq)
+        self.prefix_cache.insert(r.tokens)
+        return len(seq) - cached
+
+    # ------------------------------------------------------------- calibration
+    def fitted_model(self):
+        return lm_mod.fit(self.prefill_samples, self.decode_samples)
+
+
 @dataclass
 class Slot:
     req: Request
     position: int          # next decode position (== tokens written so far)
 
 
-class RealExecutor:
+class RealExecutor(_ExecutorBase):
+    """Dense per-slot KV backend (the bit-identical baseline)."""
+
     def __init__(self, model, params, *, max_slots: int = 32, max_len: int = 512,
                  prefix_cache: Optional[PrefixCache] = None, greedy: bool = True):
-        self.model = model
-        self.params = params
+        super().__init__(model, params, max_len=max_len,
+                         prefix_cache=prefix_cache, greedy=greedy)
         self.max_slots = max_slots
-        self.max_len = max_len
-        self.prefix_cache = prefix_cache
-        self.greedy = greedy
         self.cache = model.init_cache(max_slots, max_len)
         self.slots: List[Optional[Slot]] = [None] * max_slots
         self._slot_of: Dict[str, int] = {}
         self._prefill_fn = {}
-        self._decode_fn = jax.jit(model.decode_step, donate_argnums=(1,))
-        self.prefill_samples: List[Tuple[int, float]] = []
-        self.decode_samples: List[Tuple[int, float]] = []
+        self._decode_fn = None
+        self._decode_jit = jax.jit(model.decode_step, donate_argnums=(1,))
+        self._compile_s = 0.0     # compile time to subtract from this batch
 
     # ------------------------------------------------------------------ slots
     def _alloc_slot(self, req: Request) -> int:
@@ -74,7 +167,8 @@ class RealExecutor:
 
     def release_request(self, req_id: str) -> None:
         """Free executor-side state held for a request (its decode slot).
-        Called by the engine on cancellation; unknown req_ids are a no-op."""
+        Called by the engine on cancellation/preemption; unknown req_ids are
+        a no-op."""
         self._free_slot(req_id)
 
     # ------------------------------------------------------------------ prefill
@@ -84,23 +178,19 @@ class RealExecutor:
         preserved generation (recompute-style preemption recovery)."""
         seq = req.prefill_token_ids()
         n = len(seq)
-        if self.prefix_cache is not None:
-            cached = self.prefix_cache.count_cached(seq)
-            # only the prompt enters the cache — generated tokens are never
-            # prefix-cached (the estimator/PEM invariant)
-            self.prefix_cache.insert(req.tokens)
-        else:
-            cached = 0
-        utok = n - cached
-        bucket = _bucket(n)  # pad-masked prefill: recurrent state frozen on pads
-        if bucket not in self._prefill_fn:
-            self._prefill_fn[bucket] = jax.jit(
-                lambda p, t, sl: self.model.prefill(p, t, seq_lens=sl,
-                                                    max_len=self.max_len))
+        utok = self._account_prefill(req, seq)
+        # pad-masked prefill (recurrent state frozen on pads); never pad past
+        # the slot length — admission guarantees n <= max_len
+        bucket = min(_bucket(n), self.max_len)
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :n] = seq
-        logits, kv = self._prefill_fn[bucket](
-            self.params, jnp.asarray(toks), jnp.asarray([n], jnp.int32))
+        args = (self.params, jnp.asarray(toks), jnp.asarray([n], jnp.int32))
+        if bucket not in self._prefill_fn:
+            fn = jax.jit(lambda p, t, sl: self.model.prefill(
+                p, t, seq_lens=sl, max_len=self.max_len))
+            self._prefill_fn[bucket], dt = self._aot(fn, *args)
+            self._compile_s += dt
+        logits, kv = self._prefill_fn[bucket](*args)
         slot = self._alloc_slot(req)
         self._write_slot_cache(slot, kv)
         self.slots[slot].position = n
@@ -130,12 +220,32 @@ class RealExecutor:
     def _decode_all(self, reqs: List[Request]) -> Dict[str, int]:
         tokens = np.zeros((self.max_slots,), np.int32)
         positions = np.zeros((self.max_slots,), np.int32)
+        # decode_step scatters every row's K/V at positions[i] — rows must
+        # never default to (token 0, position 0), which silently corrupted
+        # position 0 of any occupied slot outside the scheduled batch (e.g. a
+        # request prefilled earlier in the same mixed batch). Point occupied
+        # off-batch rows at their own next position with their own last token:
+        # for attention caches the write is idempotent (the slot's real
+        # decode rewrites the same values) and the row's logits are discarded
+        # below. Recurrent families (hymba's SSM/conv state) still advance
+        # off-batch rows — a pre-existing limitation of whole-batch
+        # decode_step that needs a per-row freeze mask to fix; the scheduler
+        # only leaves a slot out of a decode batch in the same tick that
+        # prefilled it, so attention archs are exact.
+        for i, s in enumerate(self.slots):
+            if s is not None:
+                tokens[i] = s.req.output_tokens[-1] if s.req.output_tokens else 0
+                positions[i] = s.position
         for r in reqs:
             i = self._slot_of[r.req_id]
             tokens[i] = r.output_tokens[-1] if r.output_tokens else 0
             positions[i] = self.slots[i].position
-        logits, self.cache = self._decode_fn(
-            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(positions))
+        args = (self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(positions))
+        if self._decode_fn is None:
+            self._decode_fn, dt = self._aot(self._decode_jit, *args)
+            self._compile_s += dt
+        logits, self.cache = self._decode_fn(*args)
         out = self._sample(logits)
         result = {}
         for r in reqs:
@@ -143,9 +253,6 @@ class RealExecutor:
             self.slots[i].position += 1
             result[r.req_id] = int(out[i])
         return result
-
-    def _sample(self, logits) -> np.ndarray:
-        return np.asarray(jnp.argmax(logits, axis=-1))
 
     # ------------------------------------------------------------------ engine API
     def execute(self, batch: Batch, now: float) -> Tuple[float, BatchResult]:
@@ -156,6 +263,7 @@ class RealExecutor:
         outputs: Dict[str, Tuple[int, bool]] = {}
         prefill_dur = decode_dur = 0.0
         prefilled_any = False
+        self._compile_s = 0.0
         t0 = _time.perf_counter()
         total_utok = 0
         for r in batch.prefill_requests:
@@ -170,14 +278,15 @@ class RealExecutor:
             outputs[r.req_id] = (tok, finished)
             if finished:
                 self._free_slot(r.req_id)
-        prefill_dur = _time.perf_counter() - t0
+        prefill_dur = max(0.0, _time.perf_counter() - t0 - self._compile_s)
         if prefilled_any:
             self.prefill_samples.append((total_utok, prefill_dur))
         reqs = [r for r in batch.decode_requests if r.req_id in self._slot_of]
         if reqs:
+            self._compile_s = 0.0
             t1 = _time.perf_counter()
             toks = self._decode_all(reqs)
-            decode_dur = _time.perf_counter() - t1
+            decode_dur = max(0.0, _time.perf_counter() - t1 - self._compile_s)
             self.decode_samples.append((len(reqs), decode_dur))
             for r in reqs:
                 tok = toks[r.req_id]
@@ -191,11 +300,288 @@ class RealExecutor:
                     self._free_slot(r.req_id)
         return prefill_dur + decode_dur, BatchResult(outputs)
 
-    def _is_finish_token(self, r: Request, tok: int, produced: int) -> bool:
-        if r.eos_token is not None and tok == r.eos_token:
-            return True
-        return produced >= r.max_output_tokens
 
-    # ------------------------------------------------------------------ calibration
-    def fitted_model(self):
-        return lm_mod.fit(self.prefill_samples, self.decode_samples)
+class PagedRealExecutor(_ExecutorBase):
+    """Block-paged KV backend: ``BlockManager``-owned pools, per-request
+    block tables, batched bucketed prefill and paged-attention decode.
+
+    The last pool block (id ``num_blocks``) is a scratch page: pad rows and
+    pad table entries route there, so fixed-shape scatters never touch live
+    blocks. KV demand agrees with the scheduler's token ledger: a request
+    resident from prefill completion to finish/preempt/cancel, shared prefix
+    chains (``share_prefix_blocks=True``, paired with the scheduler's
+    ``prefix_sharing``) held once and ref-counted, copy-on-write if a write
+    ever lands in a block a sibling still references.
+    """
+
+    def __init__(self, model, params, *, num_blocks: int = 1024,
+                 block_size: int = 16, max_len: int = 512,
+                 prefix_cache: Optional[PrefixCache] = None,
+                 greedy: bool = True, attn_impl: Optional[str] = None,
+                 prefill_attn: Optional[str] = None,
+                 share_prefix_blocks: bool = False):
+        if not getattr(model, "supports_paged", lambda: False)():
+            raise NotImplementedError(
+                f"model {model.cfg.name!r} does not support the paged KV "
+                f"backend (full-attention transformer families only); use "
+                f"kv_backend='dense'")
+        on_cpu = jax.default_backend() == "cpu"
+        if prefill_attn is None:
+            prefill_attn = "block" if on_cpu else "flash"
+        if prefill_attn == "flash":
+            model = model.with_prefill_attn("flash")
+        super().__init__(model, params, max_len=max_len,
+                         prefix_cache=prefix_cache, greedy=greedy)
+        # Pallas on a real accelerator, pure-jnp reference on CPU (CI's
+        # fallback); 'pallas-interpret' forces the kernel through the
+        # interpreter for parity debugging.
+        self.attn_impl = attn_impl or ("ref" if on_cpu else "pallas")
+        self.block_size = block_size
+        self.num_blocks = num_blocks
+        self.scratch_block = num_blocks          # pools hold one extra page
+        self.max_blocks_per_seq = -(-max_len // block_size)
+        self.share_prefix_blocks = share_prefix_blocks
+        self.bm = BlockManager(num_blocks, block_size=block_size)
+        self.pools = model.init_paged_pools(num_blocks + 1, block_size)
+        self._active: Dict[str, Request] = {}
+        self._prefill_fn: Dict[Tuple[int, int], object] = {}
+        self._scatter_fn: Dict[Tuple[int, int], object] = {}
+        self._decode_fn: Dict[Tuple[int, int], object] = {}
+        self._copy_fn = None
+        self.cow_copies = 0
+        self.shared_block_hits = 0    # physically shared prefix blocks reused
+        self._compile_s = 0.0     # compile time to subtract from this batch
+
+    # ------------------------------------------------------------- admission
+    def validate_relquery(self, rq: RelQuery) -> None:
+        """Beyond the per-sequence ``max_len`` bound, a request must also fit
+        the *pool*: a footprint needing more blocks than the pool holds could
+        never prefill no matter what else is evicted."""
+        super().validate_relquery(rq)
+        for r in rq.requests:
+            need = r.num_prompt_tokens + r.max_output_tokens
+            blocks = self.bm.blocks_needed(need)
+            if blocks > self.num_blocks:
+                raise RequestCapacityError(
+                    f"request {r.req_id} of relQuery {rq.rel_id} needs "
+                    f"{blocks} KV blocks (footprint {need} tokens / "
+                    f"block_size {self.block_size}) but the paged pool holds "
+                    f"only num_blocks={self.num_blocks}; grow the pool or "
+                    f"shrink the request")
+
+    # ------------------------------------------------------------- bookkeeping
+    def release_request(self, req_id: str) -> None:
+        """Free the request's blocks (cancellation/preemption): real paged
+        reclamation — siblings still referencing shared prefix blocks keep
+        them alive; only the last reference returns a block to the free list."""
+        if self._active.pop(req_id, None) is not None:
+            self.bm.free(req_id)
+
+    def kv_tokens_resident(self) -> int:
+        """Per-sequence resident tokens: shared prefix blocks count once per
+        referencing sequence — i.e. the scheduler's *raw* optimistic charge
+        (`tokens_in_use`) before the `SharedPrefixLedger` discount. Physical
+        pool occupancy is lower by exactly that discount when sharing is on."""
+        return self.bm.tokens_in_use()
+
+    def _prompt_keys(self, r: Request) -> Tuple[int, ...]:
+        return tuple(block_hashes(r.tokens, self.block_size))
+
+    # ------------------------------------------------------------- prefill
+    def _prefill_batch(self, reqs: List[Request]) -> Tuple[Dict[str, int], int]:
+        """Batched multi-request prefill, shape-bucketed on (batch, length):
+        requests are grouped by their *per-request* length bucket (the same
+        bucket the dense baseline pads each one to — keeping per-row numerics
+        identical across backends, bf16 included) and each group runs as one
+        model call followed by one scatter into the pools."""
+        seqs = {r.req_id: r.prefill_token_ids() for r in reqs}
+        utok = 0
+        for r in reqs:                      # accounting in dense batch order
+            utok += self._account_prefill(r, seqs[r.req_id])
+        bs = self.block_size
+        groups: Dict[int, List[Request]] = {}
+        for r in reqs:
+            L = min(_bucket(len(seqs[r.req_id])), self.max_len)
+            L = -(-L // bs) * bs            # block-aligned bucket
+            groups.setdefault(L, []).append(r)
+        out: Dict[str, int] = {}
+        for L in sorted(groups):
+            grp = groups[L]
+            B = _pow2_bucket(len(grp))
+            nblk = L // bs
+            toks = np.zeros((B, L), np.int32)
+            seq_lens = np.ones((B,), np.int32)
+            tables = np.full((B, nblk), self.scratch_block, np.int32)
+            for i, r in enumerate(grp):
+                seq = seqs[r.req_id]
+                n = len(seq)
+                toks[i, :n] = seq
+                seq_lens[i] = n
+                keys = self._prompt_keys(r) if self.share_prefix_blocks else ()
+                try:
+                    alloc = self.bm.allocate(r.req_id, n, prefix_keys=keys)
+                    self.shared_block_hits += alloc.shared_prefix_blocks
+                except OutOfBlocks as e:
+                    raise RuntimeError(
+                        f"paged KV pool exhausted during prefill of "
+                        f"{r.req_id}: {e} — the scheduler's cap admitted more "
+                        f"resident tokens than num_blocks*block_size covers"
+                    ) from e
+                if keys:
+                    self.bm.register_prefix(r.req_id, keys)
+                self._active[r.req_id] = r
+                row = self.bm.padded_block_table(r.req_id, nblk,
+                                                 self.scratch_block)
+                # a follower must never rewrite pages its leader already
+                # owns: the leader may be mid-decode attending them, and on
+                # kernel backends the recomputed bytes are not bit-identical
+                # — shared leading pages are written exactly once (by the
+                # leader), so route the follower's scatter there to scratch
+                for j in range(alloc.shared_prefix_blocks):
+                    row[j] = self.scratch_block
+                tables[i] = row
+            key = (B, L)
+            args = (self.params, jnp.asarray(toks), jnp.asarray(seq_lens))
+            if key not in self._prefill_fn:
+                fn = jax.jit(lambda p, t, sl, L=L: self.model.prefill(
+                    p, t, seq_lens=sl, max_len=L))
+                self._prefill_fn[key], dt = self._aot(fn, *args)
+                self._compile_s += dt
+            logits, caches = self._prefill_fn[key](*args)
+            sargs = (self.pools, caches, jnp.asarray(tables))
+            if key not in self._scatter_fn:
+                fn = jax.jit(self.model.scatter_prefill_pools,
+                             donate_argnums=(0,))
+                self._scatter_fn[key], dt = self._aot(fn, *sargs)
+                self._compile_s += dt
+            self.pools = self._scatter_fn[key](*sargs)
+            out_tokens = self._sample(logits)
+            for i, r in enumerate(grp):
+                out[r.req_id] = int(out_tokens[i])
+        return out, utok
+
+    # ------------------------------------------------------------- decode
+    def _copy_block(self, src: int, dst: int) -> None:
+        """Device-side CoW: clone page ``src`` into ``dst`` across all layers
+        before the diverging write."""
+        args = (self.pools, jnp.asarray(src, jnp.int32),
+                jnp.asarray(dst, jnp.int32))
+        if self._copy_fn is None:
+            def copy(pools, s, d):
+                pools = dict(pools)
+                for name in ("k", "v"):
+                    pools[name] = jax.lax.dynamic_update_index_in_dim(
+                        pools[name],
+                        jax.lax.dynamic_index_in_dim(pools[name], s, axis=2,
+                                                     keepdims=False),
+                        d, axis=2)
+                return pools
+            self._copy_fn, dt = self._aot(jax.jit(copy, donate_argnums=(0,)),
+                                          *args)
+            self._compile_s += dt
+        self.pools = self._copy_fn(*args)
+        self.cow_copies += 1
+
+    def _decode_batch(self, reqs: List[Request]) -> Dict[str, int]:
+        bs = self.block_size
+        positions = []
+        for r in reqs:
+            pos = self.bm.context_len(r.req_id)
+            positions.append(pos)
+            try:
+                _, cow = self.bm.append_token_cow(r.req_id)
+            except OutOfBlocks as e:
+                raise RuntimeError(
+                    f"paged KV pool exhausted during decode of {r.req_id}: "
+                    f"{e}") from e
+            if cow is not None:
+                self._copy_block(*cow)
+        width = max(len(self.bm.block_table(r.req_id)) for r in reqs)
+        NB = min(_pow2_bucket(width), self.max_blocks_per_seq)
+        NB = max(NB, width)
+        B = _pow2_bucket(len(reqs))
+        tokens = np.zeros((B,), np.int32)
+        pos_arr = np.zeros((B,), np.int32)
+        ctx = np.ones((B,), np.int32)
+        tables = np.full((B, NB), self.scratch_block, np.int32)
+        for i, (r, pos) in enumerate(zip(reqs, positions)):
+            tokens[i] = r.output_tokens[-1] if r.output_tokens else 0
+            pos_arr[i] = pos
+            ctx[i] = pos + 1
+            tables[i] = self.bm.padded_block_table(r.req_id, NB,
+                                                   self.scratch_block)
+        key = (B, NB)
+        args = (self.params, self.pools, jnp.asarray(tokens),
+                jnp.asarray(pos_arr), jnp.asarray(tables), jnp.asarray(ctx))
+        if key not in self._decode_fn:
+            fn = jax.jit(
+                lambda p, pools, t, po, bt, cl: self.model.decode_step_paged(
+                    p, pools, t, po, bt, cl, attn_impl=self.attn_impl),
+                donate_argnums=(1,))
+            self._decode_fn[key], dt = self._aot(fn, *args)
+            self._compile_s += dt
+        logits, self.pools = self._decode_fn[key](*args)
+        out = self._sample(logits)
+        return {r.req_id: int(out[i]) for i, r in enumerate(reqs)}
+
+    # ------------------------------------------------------------- engine API
+    def execute(self, batch: Batch, now: float) -> Tuple[float, BatchResult]:
+        """Same phase-separated timing contract as the dense executor."""
+        outputs: Dict[str, Tuple[int, bool]] = {}
+        prefill_dur = decode_dur = 0.0
+        prefill_reqs = [r for r in batch.prefill_requests
+                        if batch.completes_prompt(r)]
+        if prefill_reqs:
+            self._compile_s = 0.0
+            t0 = _time.perf_counter()
+            toks, utok = self._prefill_batch(prefill_reqs)
+            prefill_dur = max(0.0,
+                              _time.perf_counter() - t0 - self._compile_s)
+            self.prefill_samples.append((utok, prefill_dur))
+            for r in prefill_reqs:
+                tok = toks[r.req_id]
+                finished = self._is_finish_token(r, tok,
+                                                 len(r.output_tokens) + 1)
+                outputs[r.req_id] = (tok, finished)
+                if finished:
+                    self.release_request(r.req_id)
+        reqs = [r for r in batch.decode_requests if r.req_id in self._active]
+        if reqs:
+            self._compile_s = 0.0
+            t1 = _time.perf_counter()
+            toks = self._decode_batch(reqs)
+            decode_dur = max(0.0, _time.perf_counter() - t1 - self._compile_s)
+            self.decode_samples.append((len(reqs), decode_dur))
+            for r in reqs:
+                tok = toks[r.req_id]
+                finished = self._is_finish_token(r, tok,
+                                                 len(r.output_tokens) + 1)
+                outputs[r.req_id] = (tok, finished)
+                if finished:
+                    self.release_request(r.req_id)
+        return prefill_dur + decode_dur, BatchResult(outputs)
+
+
+KV_BACKENDS = ("dense", "paged")
+
+
+def make_real_executor(kv_backend: str, model, params, *, max_slots: int = 32,
+                       max_len: int = 512,
+                       prefix_cache: Optional[PrefixCache] = None,
+                       num_blocks: Optional[int] = None, block_size: int = 16,
+                       share_prefix_blocks: bool = False, **kw):
+    """Build a real executor by backend name. ``num_blocks`` defaults to the
+    dense layout's physical capacity (max_slots × max_len worth of tokens) so
+    switching backends never shrinks device KV."""
+    if kv_backend == "dense":
+        return RealExecutor(model, params, max_slots=max_slots,
+                            max_len=max_len, prefix_cache=prefix_cache, **kw)
+    if kv_backend == "paged":
+        if num_blocks is None:
+            num_blocks = -(-max_slots * max_len // block_size)
+        return PagedRealExecutor(model, params, num_blocks=num_blocks,
+                                 block_size=block_size, max_len=max_len,
+                                 prefix_cache=prefix_cache,
+                                 share_prefix_blocks=share_prefix_blocks, **kw)
+    raise ValueError(f"unknown kv_backend {kv_backend!r}; expected one of "
+                     f"{KV_BACKENDS}")

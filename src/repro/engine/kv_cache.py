@@ -6,7 +6,7 @@ admission. The Pallas paged-attention kernel consumes exactly this layout
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Set
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 
 class OutOfBlocks(Exception):
@@ -90,19 +90,69 @@ class BlockManager:
                 self._prefix_blocks[key] = bid
                 self._block_keys[bid] = key
 
-    def append_token(self, seq_id: str) -> Optional[int]:
-        """Account one decoded token; returns a newly allocated block id if a
-        block boundary was crossed."""
+    def fork(self, parent_id: str, child_id: str) -> SeqAllocation:
+        """Copy-on-write fork: ``child_id`` shares *every* block of
+        ``parent_id`` (ref-counted, zero copies). The first append that lands
+        in a still-shared partial block triggers CoW (``append_token_cow``)."""
+        if child_id in self._seqs:
+            raise KeyError(f"sequence {child_id} already allocated")
+        parent = self._seqs[parent_id]
+        for bid in parent.block_ids:
+            self._ref[bid] += 1
+        alloc = SeqAllocation(block_ids=list(parent.block_ids),
+                              num_tokens=parent.num_tokens,
+                              shared_prefix_blocks=len(parent.block_ids))
+        self._seqs[child_id] = alloc
+        return alloc
+
+    def append_token_cow(self, seq_id: str
+                         ) -> Tuple[Optional[int], Optional[Tuple[int, int]]]:
+        """Account one decoded token with copy-on-write semantics. Returns
+        ``(new_block_id | None, copy | None)`` where ``copy = (src, dst)``
+        instructs the device pool to clone block ``src`` into ``dst`` before
+        the write: the token would have landed in a block another sequence
+        still references (a CoW-forked tail), so the writer gets a private
+        copy and the sibling keeps the original bytes."""
         alloc = self._seqs[seq_id]
-        alloc.num_tokens += 1
-        if (alloc.num_tokens - 1) // self.block_size >= len(alloc.block_ids):
+        write_idx = alloc.num_tokens        # token index this append writes
+        blk_pos = write_idx // self.block_size
+        if blk_pos >= len(alloc.block_ids):     # boundary: fresh private block
             if not self._free:
                 raise OutOfBlocks("decode append")
             bid = self._free.pop()
             self._ref[bid] = 1
             alloc.block_ids.append(bid)
-            return bid
-        return None
+            alloc.num_tokens += 1
+            return bid, None
+        bid = alloc.block_ids[blk_pos]
+        if self._ref[bid] > 1:                  # shared partial tail: CoW
+            if not self._free:
+                raise OutOfBlocks("cow append")
+            dst = self._free.pop()
+            self._ref[bid] -= 1
+            self._ref[dst] = 1
+            alloc.block_ids[blk_pos] = dst
+            alloc.num_tokens += 1
+            return dst, (bid, dst)
+        alloc.num_tokens += 1
+        return None, None
+
+    def append_token(self, seq_id: str) -> Optional[int]:
+        """Account one decoded token; returns a newly allocated block id if a
+        block boundary was crossed (or a CoW copy was taken)."""
+        bid, _ = self.append_token_cow(seq_id)
+        return bid
+
+    def padded_block_table(self, seq_id: str, width: int,
+                           pad_id: int) -> List[int]:
+        """``seq_id``'s block table padded (or validated) to ``width`` entries
+        — the fixed-shape row the paged-attention kernels consume. ``pad_id``
+        should be a scratch block no live sequence owns."""
+        table = self._seqs[seq_id].block_ids
+        if len(table) > width:
+            raise ValueError(f"sequence {seq_id} spans {len(table)} blocks"
+                             f" > table width {width}")
+        return list(table) + [pad_id] * (width - len(table))
 
     def free(self, seq_id: str) -> None:
         alloc = self._seqs.pop(seq_id)

@@ -30,7 +30,8 @@ def _kernel(bt_ref, cl_ref,           # scalar-prefetch refs
             q_ref, k_ref, v_ref,       # VMEM tiles
             o_ref,
             acc_ref, m_ref, l_ref,     # VMEM scratch
-            *, page_size: int, num_pages: int):
+            *, page_size: int, num_pages: int, num_q_tokens: int,
+            q_per_token: int):
     b = pl.program_id(0)
     i = pl.program_id(2)
 
@@ -47,12 +48,18 @@ def _kernel(bt_ref, cl_ref,           # scalar-prefetch refs
     def _step():
         hd = q_ref.shape[-1]
         scale = 1.0 / math.sqrt(hd)
-        q = q_ref[0, 0].astype(jnp.float32) * scale          # [Qp, hd]
-        k = k_ref[0, :, 0].astype(jnp.float32)               # [page, hd]
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # [Qt*Qp, hd]
+        k = k_ref[0, :, 0].astype(jnp.float32)            # [page, hd]
         v = v_ref[0, :, 0].astype(jnp.float32)
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))   # [Qp, page]
-        tok = page_start + jax.lax.broadcasted_iota(jnp.int32, (1, page_size), 1)
-        s = jnp.where(tok < ctx, s, NEG_INF)
+        rows = q.shape[0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))   # [rows, page]
+        tok = page_start + jax.lax.broadcasted_iota(jnp.int32, (rows, page_size), 1)
+        # causal chunk mask: q row r belongs to query token r // Qp, whose
+        # absolute position is ctx - Qt + r // Qp (the chunk's Qt tokens end
+        # the context). Qt == 1 degenerates to the classic tok < ctx mask.
+        row = jax.lax.broadcasted_iota(jnp.int32, (rows, page_size), 0)
+        qpos = ctx - num_q_tokens + row // q_per_token
+        s = jnp.where(tok <= qpos, s, NEG_INF)
         m_prev, l_prev = m_ref[...], l_ref[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
         p = jnp.exp(s - m_new)
@@ -67,11 +74,21 @@ def _kernel(bt_ref, cl_ref,           # scalar-prefetch refs
         o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "num_q_tokens"))
 def paged_attention(q, k_pages, v_pages, block_tables, context_lens,
-                    *, interpret: bool = True):
-    """See module docstring for layouts. interpret=True validates on CPU."""
-    B, KV, Qp, hd = q.shape
+                    *, interpret: bool = True, num_q_tokens: int = 1):
+    """See module docstring for layouts. interpret=True validates on CPU.
+
+    ``num_q_tokens`` > 1 runs a *chunk* of query tokens per sequence against
+    the paged cache (speculative verify / chunked-prefill continuation): the
+    q row axis is then [Qt * Qp] with query token t at absolute position
+    ``context_lens[b] - Qt + t``, causally masked inside the kernel.
+    """
+    B, KV, rows, hd = q.shape
+    if rows % num_q_tokens:
+        raise ValueError(f"q rows {rows} not divisible by num_q_tokens"
+                         f" {num_q_tokens}")
+    Qp = rows
     page_size = k_pages.shape[1]
     max_pages = block_tables.shape[1]
 
@@ -92,7 +109,9 @@ def paged_attention(q, k_pages, v_pages, block_tables, context_lens,
             pltpu.VMEM((Qp, 1), jnp.float32),
         ],
     )
-    kernel = functools.partial(_kernel, page_size=page_size, num_pages=max_pages)
+    kernel = functools.partial(_kernel, page_size=page_size, num_pages=max_pages,
+                               num_q_tokens=num_q_tokens,
+                               q_per_token=rows // num_q_tokens)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,

@@ -8,10 +8,15 @@ import jax
 import jax.numpy as jnp
 
 
-def paged_attention_ref(q, k_pages, v_pages, block_tables, context_lens):
-    """q: [B, KV, Qp, hd]; k/v_pages: [num_pages, page, KV, hd];
-    block_tables: [B, max_pages]; context_lens: [B] -> out [B, KV, Qp, hd]."""
-    B, KV, Qp, hd = q.shape
+def paged_attention_ref(q, k_pages, v_pages, block_tables, context_lens,
+                        *, num_q_tokens: int = 1):
+    """q: [B, KV, Qt*Qp, hd]; k/v_pages: [num_pages, page, KV, hd];
+    block_tables: [B, max_pages]; context_lens: [B] -> out [B, KV, Qt*Qp, hd].
+
+    ``num_q_tokens`` (Qt) > 1: a chunk of query tokens per sequence, token t
+    at absolute position ``context_lens[b] - Qt + t`` (causally masked) —
+    mirrors the Pallas kernel's chunk mode."""
+    B, KV, rows, hd = q.shape
     page = k_pages.shape[1]
     max_pages = block_tables.shape[1]
     scale = 1.0 / math.sqrt(hd)
@@ -23,8 +28,12 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, context_lens):
     s = jnp.einsum("bgqh,btgh->bgqt", q.astype(jnp.float32) * scale,
                    k.astype(jnp.float32))
     idx = jnp.arange(max_pages * page)
-    valid = idx[None, :] < context_lens[:, None]
-    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    # per-row causal bound: key position must not exceed the row's query
+    # token position (== ctx - 1 for every row when Qt == 1)
+    qtok = jnp.repeat(jnp.arange(num_q_tokens), rows // num_q_tokens)  # [rows]
+    qpos = context_lens[:, None] - num_q_tokens + qtok[None, :]        # [B, rows]
+    valid = idx[None, None, :] <= qpos[:, :, None]                     # [B, rows, T]
+    s = jnp.where(valid[:, None, :, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bgqt,btgh->bgqh", p, v.astype(jnp.float32))
     return o.astype(q.dtype)

@@ -28,8 +28,6 @@ from repro.core.policies import SCHEDULERS
 from repro.core.priority import BatchLimits, DPUConfig
 from repro.data.datasets import ALL_DATASETS, make_dataset
 from repro.data.trace import TraceConfig, build_trace
-from repro.engine.engine import ServingEngine
-from repro.engine.prefix_cache import PrefixCache
 from repro.serving import ROUTER_POLICIES, Frontend, build_simulated_cluster
 from repro.serving.frontend import RelQueryStatus
 
@@ -146,6 +144,14 @@ def main() -> None:
                     help="data-parallel engine replicas (simulate mode)")
     ap.add_argument("--router", default="affinity_spill",
                     choices=list(ROUTER_POLICIES))
+    ap.add_argument("--kv-backend", default="dense", choices=["dense", "paged"],
+                    help="real-mode KV layout: 'dense' per-slot caches "
+                         "(max_slots x max_len buffers) or 'paged' — a "
+                         "BlockManager-owned block pool with per-request "
+                         "block tables, batched bucketed prefill and "
+                         "paged-attention decode (Pallas kernel on "
+                         "accelerators, jnp reference on CPU); on CPU token "
+                         "streams are bit-identical across backends")
     ap.add_argument("--kv-admission", default="conservative",
                     choices=["conservative", "optimistic"],
                     help="KV-cap admission policy: 'conservative' reserves "
@@ -216,22 +222,13 @@ def main() -> None:
         import jax
 
         from repro.configs import get_smoke_config
-        from repro.engine.executor import RealExecutor
         from repro.engine.tokenizer import HashTokenizer
         from repro.models.registry import build_model
+        from repro.serving import build_real_engine
 
         if args.num_replicas != 1:
             raise SystemExit("real-JAX mode runs a single replica on this host; "
                              "use --simulate for --num-replicas > 1")
-        pc = PrefixCache(block_size=16)
-        kw = dict(limits=limits, latency_model=lm, prefix_cache=pc,
-                  kv_admission=args.kv_admission,
-                  prefix_sharing=prefix_sharing)
-        if args.scheduler.startswith("relserve"):
-            kw["dpu_config"] = DPUConfig(
-                starvation_threshold=args.starvation_threshold,
-                exact_probe=args.dpu_exact_probe)
-        sched = SCHEDULERS[args.scheduler](**kw)
         cfg = get_smoke_config(args.arch)
         model = build_model(cfg)
         params = model.init_params(jax.random.PRNGKey(args.seed))
@@ -243,10 +240,19 @@ def main() -> None:
             num_relqueries=min(args.num_relqueries, 8), rate=args.rate,
             seed=args.seed, max_requests=min(args.max_requests, 8),
             output_token_cap=8), tokenizer=tok)
-        executor = RealExecutor(model, params, max_slots=64, max_len=1024,
-                                prefix_cache=pc)
-        engine = ServingEngine(sched, executor)
-        print(f"scheduler={args.scheduler}")
+        try:
+            engine = build_real_engine(
+                args.arch, args.scheduler, args.kv_backend, limits=limits,
+                latency_model=lm, kv_admission=args.kv_admission,
+                prefix_sharing=prefix_sharing, max_slots=64, max_len=1024,
+                model=model, params=params,
+                dpu_config=DPUConfig(
+                    starvation_threshold=args.starvation_threshold,
+                    exact_probe=args.dpu_exact_probe)
+                if args.scheduler.startswith("relserve") else None)
+        except NotImplementedError as e:
+            raise SystemExit(f"--kv-backend {args.kv_backend}: {e}")
+        print(f"scheduler={args.scheduler} kv-backend={args.kv_backend}")
         if args.open_loop:
             report = run_open_loop(Frontend(engine), trace)
             _print_report("open-loop", report)

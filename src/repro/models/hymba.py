@@ -55,6 +55,9 @@ def selective_scan_chunked(ssm_inputs_fn, x_conv, h0):
 class HymbaModel(DenseTransformer):
     """DenseTransformer (swa attention) + parallel Mamba branch per layer."""
 
+    def supports_paged(self) -> bool:
+        return False   # hybrid cache (ring attention + ssm state), not paged
+
     def __init__(self, cfg, pc=None):
         super().__init__(cfg, pc)
         self.d_inner = cfg.ssm_expand * cfg.d_model

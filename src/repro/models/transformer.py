@@ -31,6 +31,11 @@ LOCAL_ROPE_THETA = 10_000.0  # gemma3 uses short-rope on sliding-window layers
 class DenseTransformer:
     """Functional model: params are an explicit pytree, methods are pure."""
 
+    # prefill attention implementation: 'block' (pure-XLA blockwise flash,
+    # the default) or 'flash' (the Pallas flash_prefill kernel — interpret
+    # mode on CPU). Instance-level; see with_prefill_attn().
+    prefill_attn_impl = "block"
+
     def __init__(self, cfg: ModelConfig, pc: Optional[ParallelConfig] = None):
         self.cfg = cfg
         self.pc = pc or ParallelConfig.single_device()
@@ -155,6 +160,100 @@ class DenseTransformer:
         spec = self.pc.spec(None, None, "batch", None, "kv_heads", None)
         return jax.tree.map(lambda _: spec, self.cache_struct(1, 1))
 
+    # ---------------------------------------------------------------- paged cache
+    def supports_paged(self) -> bool:
+        """Whether the block-paged KV path covers this arch: every layer must
+        be full (global) attention — ring-buffer window layers have no paged
+        layout (yet), and hybrid/ssm families override this to False."""
+        return self.n_win == 0
+
+    def init_paged_pools(self, num_blocks: int, block_size: int):
+        """Block-paged KV pools: one ``[num_blocks, block_size, KVs, hd]``
+        K and V pool per layer, stacked over (group, layer-in-group) so the
+        whole cache is two arrays. Block id ``num_blocks - 1`` is conventionally
+        the executor's scratch block (pad rows / pad table entries)."""
+        if not self.supports_paged():
+            raise NotImplementedError(
+                f"{self.cfg.name}: paged KV supports full-attention archs only "
+                f"(this arch has {self.n_win} window layer(s) per group)")
+        shp = (self.n_groups, self.n_full, num_blocks, block_size,
+               self.layout.kv_slots, self.cfg.head_dim)
+        return {"k": jnp.zeros(shp, self._dtype),
+                "v": jnp.zeros(shp, self._dtype)}
+
+    def scatter_prefill_pools(self, pools, caches, block_tables):
+        """Write a (padded, batched) prefill's dense per-sequence caches into
+        the paged pools. ``caches`` is the ``prefill(...)`` cache pytree with
+        k/v_full ``[G, n_full, B, L, KVs, hd]`` (L a multiple of block_size);
+        ``block_tables`` ``[B, L // block_size]`` routes each block — pad rows
+        and pad blocks should point at the scratch block."""
+        bs = pools["k"].shape[3]
+        for name in ("k", "v"):
+            c = caches[f"{name}_full"]
+            G, NF, B, L, KVs, hd = c.shape
+            c = c.reshape(G, NF, B, L // bs, bs, KVs, hd)
+            pools[name] = pools[name].at[:, :, block_tables].set(
+                c.astype(pools[name].dtype))
+        return pools
+
+    def decode_step_paged(self, params, pools, tokens, positions,
+                          block_tables, context_lens, *,
+                          attn_impl: str = "ref"):
+        """One decode step against the block-paged KV pools.
+
+        tokens/positions: [B] int32; block_tables: [B, max_blocks] int32;
+        context_lens: [B] int32 (== positions + 1 for live rows). Each layer
+        scatters the new token's K/V into its pool at (block_tables[b,
+        pos // bs], pos % bs) then attends through ``paged_attention``
+        (``attn_impl='pallas'``/'pallas-interpret') or the pure-jnp reference
+        (``'ref'`` — the CPU fallback CI exercises). Returns (logits, pools);
+        pools should be donated by the jit wrapper.
+        """
+        from repro.kernels.paged_attention import paged_attention
+
+        cfg = self.cfg
+        bs = pools["k"].shape[3]
+        B = tokens.shape[0]
+        x = self.embed_tokens(params, tokens)
+        pools = dict(pools)
+        rows = jnp.arange(B)
+        bids = block_tables[rows, positions // bs]
+        offs = positions % bs
+        for g in range(self.n_groups):
+            pp = jax.tree.map(lambda a: a[g], params["blocks"])
+            for p in range(self.group):
+                h = L.rmsnorm(x, pp["ln1"][p], cfg.norm_eps)
+                q, k, v = self._qkv(pp, p, h, positions, "global")
+                i = self.full_idx[p]
+                pools["k"] = pools["k"].at[g, i, bids, offs].set(
+                    k.astype(pools["k"].dtype))
+                pools["v"] = pools["v"].at[g, i, bids, offs].set(
+                    v.astype(pools["v"].dtype))
+                if attn_impl == "ref":
+                    # CPU fallback: gather the sequence's pages into a dense
+                    # [B, T, G, hd] view and run the *exact* dense decode
+                    # recipe (same dtype roundings, same masking) — paged and
+                    # dense backends then emit bit-identical tokens even in
+                    # bf16, while T stays the bucketed block span instead of
+                    # max_len.
+                    kg = pools["k"][g, i][block_tables]   # [B, NB, bs, KVs, hd]
+                    vg = pools["v"][g, i][block_tables]
+                    Bq, NB, bsz, KVs, hd = kg.shape
+                    o = L.decode_attention(
+                        q, kg.reshape(Bq, NB * bsz, KVs, hd),
+                        vg.reshape(Bq, NB * bsz, KVs, hd), positions)
+                else:
+                    o = paged_attention(q, pools["k"][g, i], pools["v"][g, i],
+                                        block_tables, context_lens,
+                                        interpret=attn_impl != "pallas")
+                x = x + jnp.einsum("bgqh,gqhd->bd", o, pp["wo"][p])
+                h = L.rmsnorm(x, pp["ln2"][p], cfg.norm_eps)
+                mlp, _ = self._mlp(pp, p, h)
+                x = x + mlp
+                x = self._constrain(x, "batch", None)
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        return self.logits(params, x), pools
+
     # ------------------------------------------------------------- building blocks
     def _constrain(self, x, *logical):
         if self.pc.dp_axes or self.pc.tp_axis:
@@ -193,9 +292,31 @@ class DenseTransformer:
         cfg = self.cfg
         q, k, v = self._qkv(pp, p, x, positions, kind)
         window = cfg.sliding_window if kind == "local" else 0
-        o = L.block_attention(q, k, v, causal=True, window=window, seq_lens=seq_lens)
+        if self.prefill_attn_impl == "flash":
+            # Pallas flash_prefill kernel: causal masking alone suffices for
+            # ragged batches — rows past a sequence's length attend only pad
+            # keys in their own causal past and are never read (the last-token
+            # gather uses seq_lens). Layout swap: [B,S,G,Qp,hd] <-> [B,G,S,R,hd].
+            from repro.kernels.flash_prefill import flash_prefill
+            o = flash_prefill(jnp.moveaxis(q, 1, 2), jnp.moveaxis(k, 1, 2),
+                              jnp.moveaxis(v, 1, 2), causal=True, window=window,
+                              interpret=jax.default_backend() == "cpu")
+            o = jnp.moveaxis(o, 2, 1)
+        else:
+            o = L.block_attention(q, k, v, causal=True, window=window,
+                                  seq_lens=seq_lens)
         out = jnp.einsum("bsgqh,gqhd->bsd", o, pp["wo"][p])
         return out, (k, v)
+
+    def with_prefill_attn(self, impl: str) -> "DenseTransformer":
+        """A sibling model instance (same config/params pytree) whose prefill
+        attention runs via ``impl`` ('block' | 'flash') — lets an executor opt
+        into the kernel path without mutating a shared model object."""
+        if impl not in ("block", "flash"):
+            raise ValueError(f"unknown prefill attention impl {impl!r}")
+        m = type(self)(self.cfg, self.pc)
+        m.prefill_attn_impl = impl
+        return m
 
     def _mixer_decode(self, pp, p: int, x, positions, kind: str, cache_kv):
         """cache_kv: (k_cache, v_cache) already containing the new token."""

@@ -2,7 +2,7 @@
 snapshot) over a relQuery-affine ``Router`` and a ``Cluster`` of steppable
 ``EngineCore`` replicas sharing one clock."""
 from repro.serving.cluster import Cluster, ClusterReport
-from repro.serving.factory import build_simulated_cluster
+from repro.serving.factory import build_real_engine, build_simulated_cluster
 from repro.serving.frontend import (Frontend, RelQueryCancelledError,
                                     RelQueryHandle, RelQueryStatus)
 from repro.serving.router import (ROUTER_POLICIES, Router, route_relquery,
@@ -10,5 +10,5 @@ from repro.serving.router import (ROUTER_POLICIES, Router, route_relquery,
 
 __all__ = ["Cluster", "ClusterReport", "Frontend", "RelQueryCancelledError",
            "RelQueryHandle", "RelQueryStatus", "Router", "ROUTER_POLICIES",
-           "build_simulated_cluster", "route_relquery",
+           "build_real_engine", "build_simulated_cluster", "route_relquery",
            "template_fingerprint"]

@@ -1,7 +1,9 @@
-"""One place to assemble a simulated multi-replica serving stack: per replica
-a private PrefixCache, a scheduler wired to it, and a SimulatedExecutor
-sharing the same cache — the pairing every driver (launch/serve, benchmarks,
-examples, tests) needs."""
+"""One place to assemble serving stacks: ``build_simulated_cluster`` for the
+simulated multi-replica clock (per replica a private PrefixCache, a scheduler
+wired to it, and a SimulatedExecutor sharing the same cache) and
+``build_real_engine`` for a single-host real-JAX engine on either KV backend
+(dense slots or the block-paged pool) — the pairings every driver
+(launch/serve, benchmarks, examples, tests) needs."""
 from __future__ import annotations
 
 from typing import Optional
@@ -41,3 +43,59 @@ def build_simulated_cluster(num_replicas: int, scheduler: str = "relserve",
 
     return Cluster(make_scheduler, make_executor, num_replicas,
                    router=router or Router(num_replicas, policy=router_policy))
+
+
+def build_real_engine(arch: str = "qwen3-1.7b", scheduler: str = "relserve",
+                      kv_backend: str = "dense", *,
+                      limits: Optional[BatchLimits] = None,
+                      latency_model: Optional[BatchLatencyModel] = None,
+                      dpu_config: Optional[DPUConfig] = None,
+                      kv_admission: str = "conservative",
+                      prefix_sharing: bool = False,
+                      max_slots: int = 32, max_len: int = 512,
+                      block_size: int = 16, num_blocks: Optional[int] = None,
+                      seed: int = 0, model=None, params=None, **executor_kw):
+    """A single-replica real-JAX serving engine on the chosen KV backend.
+
+    ``kv_backend='dense'`` is the per-slot baseline; ``'paged'`` runs the
+    block-paged executor (BlockManager pools + paged-attention decode), with
+    physically shared prefix blocks whenever the scheduler runs with
+    ``prefix_sharing=True``. Pass ``model``/``params`` to reuse compiled
+    functions across engines (e.g. the dense-vs-paged equivalence pin).
+    """
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.engine.engine import ServingEngine
+    from repro.engine.executor import make_real_executor
+
+    from repro.models.registry import build_model
+
+    if model is None:
+        model = build_model(get_smoke_config(arch))
+    if params is None:
+        params = model.init_params(jax.random.PRNGKey(seed))
+    pc = PrefixCache(block_size=block_size)
+    limits = limits or BatchLimits()
+    if num_blocks is None and kv_backend == "paged":
+        # The scheduler charges the cap in raw tokens while the pool hands
+        # out whole blocks — size the pool to cover the cap plus one block
+        # of per-sequence rounding waste for a full decode batch, and never
+        # below the dense layout's physical capacity. (A workload of many
+        # tiny resident sequences can still out-fragment any fixed pool; the
+        # executor's OutOfBlocks escalation stays as the loud backstop.)
+        dense_equiv = -(-max_slots * max_len // block_size)
+        cap_blocks = -(-limits.cap // block_size) + limits.max_num_seqs
+        num_blocks = max(dense_equiv, cap_blocks)
+    kw = dict(limits=limits, prefix_cache=pc,
+              kv_admission=kv_admission, prefix_sharing=prefix_sharing)
+    if latency_model is not None:
+        kw["latency_model"] = latency_model
+    if scheduler.startswith("relserve"):
+        kw["dpu_config"] = dpu_config or DPUConfig()
+    sched = SCHEDULERS[scheduler](**kw)
+    ex = make_real_executor(kv_backend, model, params, max_slots=max_slots,
+                            max_len=max_len, prefix_cache=pc,
+                            num_blocks=num_blocks, block_size=block_size,
+                            share_prefix_blocks=prefix_sharing, **executor_kw)
+    return ServingEngine(sched, ex)
