@@ -30,11 +30,11 @@ from typing import Dict, List, Tuple
 
 # benches whose latency metrics are host wall-clock (never compared);
 # their summary verdicts are still invariant-checked
-WALL_CLOCK_BENCHES = {"real_executor"}
+WALL_CLOCK_BENCHES = {"real_executor", "async_engine"}
 
 LATENCY_KEYS = ("avg_latency_s", "p99_latency_s")
 VERDICT_TRUE_KEYS = ("optimistic_wins", "paged_decode_wins",
-                     "streams_identical", "sharing_wins")
+                     "streams_identical", "sharing_wins", "pipelined_wins")
 
 
 def _walk(node, path=""):

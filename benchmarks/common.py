@@ -33,6 +33,8 @@ class BenchCell:
     num_relqueries: int = 100
     seed: int = 0
     starvation_threshold: Optional[float] = None
+    engine_loop: str = "serial"        # "pipelined" overlaps sched w/ compute
+    dpu_incremental: bool = True       # phase-memoized DPU refresh
 
 
 def run_cell(cell: BenchCell, trace=None) -> ServiceReport:
@@ -46,10 +48,12 @@ def run_cell(cell: BenchCell, trace=None) -> ServiceReport:
     pc = PrefixCache(block_size=16)
     kw = dict(limits=BatchLimits(), latency_model=lm, prefix_cache=pc)
     if cell.scheduler.startswith("relserve"):
-        kw["dpu_config"] = DPUConfig(starvation_threshold=cell.starvation_threshold)
+        kw["dpu_config"] = DPUConfig(
+            starvation_threshold=cell.starvation_threshold,
+            incremental=cell.dpu_incremental)
     sched = SCHEDULERS[cell.scheduler](**kw)
     ex = SimulatedExecutor(lm, prefix_cache=pc, seed=cell.seed)
-    engine = ServingEngine(sched, ex)
+    engine = ServingEngine(sched, ex, engine_loop=cell.engine_loop)
     report = engine.run_trace(trace)
     report.scheduler = sched           # benchmarks inspect stats
     report.executor = ex
@@ -82,7 +86,10 @@ def report_metrics(report: ServiceReport) -> dict:
         "prefix_hit_ratio": report.prefix_hit_ratio,
         "iterations": len(report.events),
         "overheads_s": {"dpu": report.dpu_time, "aba": report.aba_time,
-                        "schedule": report.schedule_time},
+                        "schedule": report.schedule_time,
+                        "schedule_retry": report.schedule_retry_time,
+                        "overlap_hidden": report.overlap_hidden_time},
+        "schedule_retries": report.schedule_retries,
         "cancelled": list(report.cancelled_rel_ids),
         "preemptions": report.preemptions,
         "shared_kv_tokens": report.shared_kv_tokens,

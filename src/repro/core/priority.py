@@ -86,6 +86,12 @@ class DPUConfig:
     # tokens) per resample — use when priorities must reflect realized
     # sharing, e.g. with prefix-sharing-aware scheduling enabled.
     exact_probe: bool = False
+    # Incremental refresh: memoize the per-relQuery phase probe
+    # (is_finished / all_waiting — each O(#requests)) against the scheduler's
+    # ``RelQuery._phase_version`` counter, so a decode-heavy tick re-scores
+    # only relQueries whose phase actually changed. Pure caching: priority
+    # decisions are bit-identical with it on or off.
+    incremental: bool = True
 
 
 class DynamicPriorityUpdater:
@@ -99,13 +105,18 @@ class DynamicPriorityUpdater:
         self._rng = random.Random(self.cfg.seed)
         self._iteration = 0
         self._last_sampled: Dict[str, int] = {}
+        # incremental-refresh memo: rel_id -> (phase_version, finished,
+        # all_waiting) — valid while the scheduler hasn't bumped the version
+        self._phase_memo: Dict[str, Tuple[int, bool, bool]] = {}
         # instrumentation
         self.stats = {"pem_calls": 0, "reuses": 0, "starvation_promotions": 0,
-                      "sampled_requests": 0, "exact_probes": 0}
+                      "sampled_requests": 0, "exact_probes": 0,
+                      "phase_probes": 0, "phase_memo_hits": 0}
 
     def forget(self, rel_id: str) -> None:
         """Drop per-relQuery DPU state (used when a relQuery is cancelled)."""
         self._last_sampled.pop(rel_id, None)
+        self._phase_memo.pop(rel_id, None)
 
     # ---------------------------------------------------------------- Eq. 11
     def _estimate_miss_ratio(self, rq: RelQuery, prefix_cache: Optional[PrefixCacheView]) -> float:
@@ -187,9 +198,24 @@ class DynamicPriorityUpdater:
                prefix_cache: Optional[PrefixCacheView] = None) -> None:
         self._iteration += 1
         for rq in relqueries:
-            if rq.is_finished():
-                continue
-            all_waiting_now = rq.all_waiting()
+            if self.cfg.incremental:
+                ver = rq._phase_version
+                memo = self._phase_memo.get(rq.rel_id)
+                if memo is not None and memo[0] == ver:
+                    self.stats["phase_memo_hits"] += 1
+                    finished, all_waiting_now = memo[1], memo[2]
+                else:
+                    self.stats["phase_probes"] += 1
+                    finished = rq.is_finished()
+                    all_waiting_now = False if finished else rq.all_waiting()
+                    self._phase_memo[rq.rel_id] = (ver, finished,
+                                                   all_waiting_now)
+                if finished:
+                    continue
+            else:
+                if rq.is_finished():
+                    continue
+                all_waiting_now = rq.all_waiting()
             if all_waiting_now and rq._was_all_waiting and rq.priority_fresh:
                 self.stats["reuses"] += 1            # Eq. 12: reuse Prio(R_{t-1})
             else:

@@ -100,6 +100,12 @@ class RelQuery:
     _was_all_waiting: bool = False     # Eq. 12 reuse predicate memo
     cache_miss_ratio: float = 1.0      # sampled utok*/tok estimate (Eq. 11)
     preemptions: int = 0               # times any request of R was preempted
+    # Monotone counter bumped by the scheduler whenever any request of R
+    # changes state (prefill finish, decode finish, preemption, cancel,
+    # speculative rollback). The DPU's incremental refresh memoizes its
+    # O(#requests) phase probe (``all_waiting``) against this version, so a
+    # decode-heavy tick re-scores only relQueries whose phase actually moved.
+    _phase_version: int = 0
 
     def __post_init__(self):
         for r in self.requests:
@@ -108,6 +114,13 @@ class RelQuery:
                 r.max_output_tokens = self.max_output_tokens
 
     # ------------------------------------------------------------------
+    def note_phase_change(self) -> None:
+        """Invalidate memoized phase probes. Any code that flips a request's
+        ``state`` (or finishes/cancels this relQuery) outside the scheduler's
+        own transition methods must call this, or the DPU's incremental
+        refresh will keep serving the stale phase."""
+        self._phase_version += 1
+
     @property
     def num_requests(self) -> int:
         return len(self.requests)

@@ -103,6 +103,10 @@ class SchedulerBase:
         self.preempted_tokens = 0          # KV tokens reclaimed by preemption
         self.missing_decode_outputs = 0    # decode reqs absent from BatchResult
         self._preempt_release: List[str] = []
+        # Speculative-window journal (pipelined engine loop): while a
+        # checkpoint is open, every shared-ledger acquire/release is logged so
+        # ``rollback`` can replay the exact inverse ops. None = no open window.
+        self._spec_log: Optional[List[Tuple[str, Tuple[int, ...]]]] = None
         # incremental queues
         self._waiting_of: Dict[str, List[Request]] = {}
         self._running: List[Request] = []
@@ -287,6 +291,8 @@ class SchedulerBase:
         self._kv_charged.add(r.req_id)
         self.shared_tokens_saved += self._shared_ledger.acquire(keys)
         self.prefix_cache.acquire_blocks(keys)
+        if self._spec_log is not None:
+            self._spec_log.append(("acquire", keys))
 
     def _kv_release(self, r: Request) -> None:
         """Drop ``r``'s charge from the shared-block ledger (finish, preempt
@@ -298,6 +304,8 @@ class SchedulerBase:
         keys = self.prompt_block_keys(r)
         self._shared_ledger.release(keys)
         self.prefix_cache.release_blocks(keys)
+        if self._spec_log is not None:
+            self._spec_log.append(("release", keys))
 
     # ------------------------------------------------------------- KV admission
     def kv_demand(self) -> int:
@@ -524,6 +532,7 @@ class SchedulerBase:
             self._prompt_keys.pop(r.req_id, None)
             r.state = RequestState.CANCELLED
             r.finish_time = now
+        rq.note_phase_change()
         rq.cancel_time = now
         self._unfinished -= 1
         self.on_relquery_cancelled(rq, now)
@@ -547,6 +556,7 @@ class SchedulerBase:
             r.preserved_output_tokens = len(r.output_tokens)
             r.prefilled = False
             r.state = RequestState.PREEMPTED
+            rq.note_phase_change()
             self._waiting_of.setdefault(r.rel_id, []).insert(0, r)
             self._queue_version += 1
         elif r.prefilled_tokens > 0:
@@ -599,18 +609,48 @@ class SchedulerBase:
 
     def preempt_for_progress(self, now: float) -> List[Request]:
         """Engine-deadlock escape hatch: when no batch is schedulable but work
-        remains, reclaim the lowest-priority victim's KV and let the engine
-        retry — a running request if any, else a mid-chunk request's landed
-        chunks (two half-loaded prompts can wedge against the cap with nothing
-        running). Returns the victims ([] when nothing can be preempted —
-        conservative mode, or no KV left to reclaim: a genuine deadlock)."""
+        remains, reclaim low-priority KV and let the engine retry — running
+        requests first, else mid-chunk requests' landed chunks (two half-loaded
+        prompts can wedge against the cap with nothing running). Victims are
+        picked in a *batch* per retry round: keep preempting until the
+        head-of-line request's admission need fits under the cap, so one
+        engine retry (one full re-sort of the waiting queue) suffices instead
+        of one re-sort per victim. Returns the victims ([] when nothing can be
+        preempted — conservative mode, or no KV left to reclaim: a genuine
+        deadlock)."""
         if self.kv_admission != "optimistic":
             return []
-        victim = self._pick_preemption_victim() or self._pick_chunk_victim()
-        if victim is None:
-            return []
-        self.preempt_request(victim, now)
-        return [victim]
+        victims: List[Request] = []
+        while self.kv_demand() + self._progress_need() > self.limits.cap:
+            victim = self._pick_preemption_victim() or self._pick_chunk_victim()
+            if victim is None:
+                break
+            self.preempt_request(victim, now)
+            victims.append(victim)
+        if not victims:
+            # Cap pressure wasn't the (measurable) blocker — fall back to the
+            # single-victim escape so the engine's retry loop still terminates
+            # by strictly shrinking resident KV each round.
+            victim = self._pick_preemption_victim() or self._pick_chunk_victim()
+            if victim is None:
+                return []
+            self.preempt_request(victim, now)
+            victims.append(victim)
+        return victims
+
+    def _progress_need(self) -> int:
+        """Cap headroom the head-of-line waiting request needs — the target
+        ``preempt_for_progress`` batches victims toward. Mirrors
+        ``build_prefill_candidate``'s order: highest-urgency relQuery, its
+        first request in sharing (or FCFS) order."""
+        order = self.sorted_waiting_rqs()
+        if not order:
+            return 0
+        rq = order[0]
+        waiting = self._waiting_of[rq.rel_id]
+        if self._shared_ledger is not None:
+            waiting = self._sharing_order(rq.rel_id, waiting)
+        return self._admission_need(waiting[0])
 
     def _pick_chunk_victim(self) -> Optional[Request]:
         """A mid-chunk waiting request holding partial KV, from the
@@ -683,6 +723,7 @@ class SchedulerBase:
                         end_ts: float) -> None:
         r.prefilled = True
         r.state = RequestState.RUNNING
+        rq.note_phase_change()
         wl = self._waiting_of.get(r.rel_id)
         if wl is not None and r in wl:
             wl.remove(r)
@@ -709,6 +750,7 @@ class SchedulerBase:
     def _finish_request(self, r: Request, end_ts: float) -> None:
         r.state = RequestState.FINISHED
         r.finish_time = end_ts
+        self.relqueries[r.rel_id].note_phase_change()
         if r in self._running:
             self._running.remove(r)
         self.tokens_in_use -= r.total_tokens
@@ -721,6 +763,108 @@ class SchedulerBase:
             rq.finish_time = end_ts
             self.finished_relqueries.append(rq)
             self._unfinished -= 1
+
+    # ------------------------------------------------- speculative checkpoint
+    # Pipelined engine loop support: while batch N runs on device, the engine
+    # projects N's completion onto the ledger and schedules batch N+1 against
+    # the projection. ``checkpoint`` snapshots everything that one projected
+    # ``complete_batch`` plus one speculative ``schedule`` (priority refresh,
+    # headroom/progress preemptions, queue pops) can touch; ``rollback``
+    # restores it bit-exactly when the device result contradicts the
+    # projection (or the window must flush for an admit/cancel/snapshot).
+    # Shared-ledger and prefix-pin refcounts are journaled in ``_spec_log``
+    # and inverted op-by-op — no prefix-cache inserts or evictions happen
+    # inside a window, so acquire/release are exact inverses.
+
+    def checkpoint(self, batch: Batch) -> dict:
+        reqs: Dict[str, Request] = {}
+        for r in batch.prefill_requests:
+            reqs[r.req_id] = r
+        for r in batch.decode_requests:
+            reqs[r.req_id] = r
+        for r in self._running:
+            reqs[r.req_id] = r
+        for lst in self._waiting_of.values():
+            for r in lst:
+                if r.prefilled_tokens:      # mid-chunk: a chunk-victim target
+                    reqs[r.req_id] = r
+        cp = {
+            "scalars": (self.tokens_in_use, self.committed_tokens,
+                        self.partial_prefill_tokens, self.iteration,
+                        self._unfinished, self.preemptions,
+                        self.preempted_tokens, self.missing_decode_outputs,
+                        self.shared_tokens_saved, self._queue_version),
+            "waiting_of": {k: list(v) for k, v in self._waiting_of.items()},
+            "running": list(self._running),
+            "order_cache": dict(self._order_cache),
+            "preempt_release": list(self._preempt_release),
+            "n_finished_rqs": len(self.finished_relqueries),
+            "kv_charged": set(self._kv_charged),
+            "prompt_keys": dict(self._prompt_keys),
+            "reqs": [(r, r.state, r.prefilled, r.prefilled_tokens,
+                      len(r.output_tokens), r.finish_time,
+                      r.preserved_output_tokens) for r in reqs.values()],
+            "rqs": [(rq, rq.priority, rq.priority_fresh, rq._was_all_waiting,
+                     rq.cache_miss_ratio, rq.preemptions,
+                     rq.first_prefill_start, rq.last_prefill_end,
+                     rq.finish_time)
+                    for rq in self.relqueries.values()
+                    if rq.finish_time is None and rq.cancel_time is None],
+            "extra": self._checkpoint_extra(),
+        }
+        self._spec_log = []
+        return cp
+
+    def rollback(self, cp: dict) -> None:
+        for op, keys in reversed(self._spec_log or []):
+            if op == "acquire":
+                self._shared_ledger.release(keys)
+                self.prefix_cache.release_blocks(keys)
+            else:
+                self._shared_ledger.acquire(keys)
+                self.prefix_cache.acquire_blocks(keys)
+        self._spec_log = None
+        (self.tokens_in_use, self.committed_tokens, self.partial_prefill_tokens,
+         self.iteration, self._unfinished, self.preemptions,
+         self.preempted_tokens, self.missing_decode_outputs,
+         self.shared_tokens_saved, self._queue_version) = cp["scalars"]
+        self._waiting_of = cp["waiting_of"]
+        self._running = cp["running"]
+        self._order_cache = cp["order_cache"]
+        self._preempt_release = cp["preempt_release"]
+        del self.finished_relqueries[cp["n_finished_rqs"]:]
+        self._kv_charged = cp["kv_charged"]
+        self._prompt_keys = cp["prompt_keys"]
+        for (r, state, prefilled, ptoks, n_out, ft, preserved) in cp["reqs"]:
+            r.state = state
+            r.prefilled = prefilled
+            r.prefilled_tokens = ptoks
+            del r.output_tokens[n_out:]
+            r.finish_time = ft
+            r.preserved_output_tokens = preserved
+        for (rq, prio, fresh, waswait, miss, pre, fps, lpe, ft) in cp["rqs"]:
+            rq.priority = prio
+            rq.priority_fresh = fresh
+            rq._was_all_waiting = waswait
+            rq.cache_miss_ratio = miss
+            rq.preemptions = pre
+            rq.first_prefill_start = fps
+            rq.last_prefill_end = lpe
+            rq.finish_time = ft
+            rq.note_phase_change()     # invalidate any DPU phase memo
+        self._restore_extra(cp["extra"])
+
+    def discard_checkpoint(self) -> None:
+        """Commit the speculative window: keep its mutations, close the
+        journal."""
+        self._spec_log = None
+
+    def _checkpoint_extra(self):
+        """Policy hook: snapshot subclass state a speculative window touches."""
+        return None
+
+    def _restore_extra(self, extra) -> None:
+        pass
 
 
 class RelServeScheduler(SchedulerBase):
@@ -747,6 +891,25 @@ class RelServeScheduler(SchedulerBase):
         # The DPU keeps a per-relQuery resample clock; drop it so the entry
         # can't alias a future relQuery reusing the id.
         self.dpu.forget(rq.rel_id)
+
+    def _checkpoint_extra(self):
+        # A speculative schedule consumes DPU RNG draws and mutates the
+        # resample clocks / instrumentation; restore all of it on rollback so
+        # the post-flush *real* schedule sees the exact serial RNG stream.
+        return (self.dpu._rng.getstate(), self.dpu._iteration,
+                dict(self.dpu._last_sampled), dict(self.dpu.stats),
+                dict(self.dpu._phase_memo), dict(self.aba.stats),
+                self.dpu_time, self.aba_time)
+
+    def _restore_extra(self, extra) -> None:
+        (rng_state, it, sampled, dstats, memo, astats,
+         self.dpu_time, self.aba_time) = extra
+        self.dpu._rng.setstate(rng_state)
+        self.dpu._iteration = it
+        self.dpu._last_sampled = sampled
+        self.dpu.stats = dstats
+        self.dpu._phase_memo = memo
+        self.aba.stats = astats
 
     def _dpu_targets(self) -> List[RelQuery]:
         """relQueries whose priority may need a refresh this iteration: every

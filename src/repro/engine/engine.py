@@ -9,6 +9,21 @@ that replays a whole arrival trace.
 
 Works with either the simulated-clock executor (paper-scale traces) or the
 real JAX executor (smoke-scale models). One tick = one scheduled batch.
+
+Two engine loops share the tick interface (``engine_loop=`` selects one):
+
+- ``serial`` — schedule, execute, complete: the device idles while Python
+  picks the next batch.
+- ``pipelined`` — the executor contract is split into ``dispatch``/``wait``;
+  after dispatching batch N the engine *speculates*: it checkpoints the
+  scheduler, applies N's predicted completion to the ledgers, schedules batch
+  N+1 against the projection and pre-stages its prefill shape buckets, all
+  while N runs on device. When ``wait`` lands, a matching prediction commits
+  (placeholder tokens/timestamps patched with real values) and N+1 dispatches
+  immediately next tick; a mismatch — or any admit/cancel/report between
+  ticks — rolls the scheduler back and replays the real completion, so every
+  externally observable state (token streams, simulated-clock reports, ledger
+  invariants) is bit-identical to the serial loop.
 """
 from __future__ import annotations
 
@@ -21,6 +36,15 @@ import numpy as np
 from repro.core.batch import Batch
 from repro.core.relquery import RelQuery, Request
 from repro.core.scheduler import BatchResult, SchedulerBase
+
+ENGINE_LOOPS = ("serial", "pipelined")
+
+# Speculation placeholders: the projected completion of an in-flight batch
+# appends _SPEC_TOKEN for every predicted output and stamps _SPEC_END as the
+# batch end time; both are patched with real values at commit and can never
+# leak (any read between ticks flushes the window first).
+_SPEC_TOKEN = -1
+_SPEC_END = float("-inf")
 
 
 @dataclass
@@ -63,6 +87,12 @@ class ServiceReport:
     prefix_hit_ratio: float = 0.0
     prefix_lookup_tokens: int = 0   # hits + misses behind prefix_hit_ratio
     schedule_time: float = 0.0
+    # scheduling-overhead split: first-try scheduling vs deadlock-retry
+    # rounds, plus the wall-clock the pipelined loop hid behind device compute
+    # (checkpoint + projection + speculative schedule + prestage)
+    schedule_retry_time: float = 0.0
+    overlap_hidden_time: float = 0.0
+    schedule_retries: int = 0
     cancelled_rel_ids: List[str] = field(default_factory=list)
     # KV-pressure subsystem: preempt/restart cycles under optimistic admission
     preemptions: int = 0
@@ -105,6 +135,9 @@ def merge_reports(reports: Sequence[ServiceReport]) -> ServiceReport:
         merged.dpu_time += rep.dpu_time
         merged.aba_time += rep.aba_time
         merged.schedule_time += rep.schedule_time
+        merged.schedule_retry_time += rep.schedule_retry_time
+        merged.overlap_hidden_time += rep.overlap_hidden_time
+        merged.schedule_retries += rep.schedule_retries
         # hit ratio is a per-token quantity: weight by lookup volume
         merged.prefix_lookup_tokens += rep.prefix_lookup_tokens
         hit_tokens += rep.prefix_hit_ratio * rep.prefix_lookup_tokens
@@ -124,14 +157,37 @@ class EngineCore:
     """One serving replica: scheduler + executor behind a step interface."""
 
     def __init__(self, scheduler: SchedulerBase, executor, replica_id: int = 0,
-                 record_events: bool = True):
+                 record_events: bool = True, engine_loop: str = "serial"):
+        if engine_loop not in ENGINE_LOOPS:
+            raise ValueError(f"engine_loop must be one of {ENGINE_LOOPS} "
+                             f"(got {engine_loop!r})")
+        if engine_loop == "pipelined" and not hasattr(executor, "dispatch"):
+            raise ValueError("engine_loop='pipelined' requires an executor "
+                             "with the split dispatch/wait contract")
         self.scheduler = scheduler
         self.executor = executor
         self.replica_id = replica_id
         self.record_events = record_events
+        self.engine_loop = engine_loop
+        # finish-prediction rule for the speculative window: the simulated
+        # executor terminates at the trace's sim_output_len; real executors
+        # run to max_output_tokens unless a sampled EOS lands (unpredictable
+        # — that path simply costs a rollback)
+        self._predict_sim_len = bool(getattr(executor,
+                                             "uses_sim_output_len", False))
         self.events: List[BatchEvent] = []
         self.schedule_time = 0.0
+        self.schedule_retry_time = 0.0
+        self.overlap_hidden_time = 0.0
+        self.schedule_retries = 0
         self.iterations = 0
+        # pipelined-loop speculative window (one batch deep): the pre-planned
+        # next batch, the pre-projection checkpoint, the in-flight batch it
+        # projected, and that batch's real (result, start, end) for flush
+        self._plan: Optional[Batch] = None
+        self._plan_cp: Optional[dict] = None
+        self._plan_batch: Optional[Batch] = None
+        self._plan_real: Optional[Tuple[BatchResult, float, float]] = None
         # Batch-completion listener (event, batch, result) — the open-loop
         # Frontend subscribes here to stream tokens and observe completions.
         self.on_batch: Optional[
@@ -144,6 +200,7 @@ class EngineCore:
         per-sequence KV capacity *before* the scheduler sees them — a
         too-long request used to overflow the dense slot buffer silently
         mid-decode instead of failing here with a clear error."""
+        self._flush_plan()   # the pre-planned batch ignored this arrival
         validate = getattr(self.executor, "validate_relquery", None)
         if validate is not None:
             validate(rq)
@@ -159,25 +216,82 @@ class EngineCore:
     def tick(self, now: float) -> Optional[BatchEvent]:
         """Schedule + execute one batch at clock ``now``. Returns ``None`` when
         the replica is idle (nothing admitted and unfinished). Under optimistic
-        KV admission a stalled scheduler is first asked to preempt the
-        lowest-priority running relQuery and retry; ``EngineDeadlockError`` is
-        reserved for work that can never be scheduled no matter what is
+        KV admission a stalled scheduler is first asked to preempt
+        lowest-priority running relQueries and retry; ``EngineDeadlockError``
+        is reserved for work that can never be scheduled no matter what is
         evicted (a single request that does not fit under the cap)."""
-        batch = self._schedule(now)
-        while batch is None and self.scheduler.has_work():
-            if not self.scheduler.preempt_for_progress(now):
-                # Nothing left to evict — admitting more work, advancing the
-                # clock or reclaiming KV cannot help.
-                raise EngineDeadlockError(self.scheduler.tokens_in_use,
-                                          self.scheduler.limits.cap,
-                                          self.scheduler.stuck_rel_ids(),
-                                          self.replica_id)
-            batch = self._schedule(now)
+        if self.engine_loop == "pipelined":
+            return self._tick_pipelined(now)
+        return self._tick_serial(now)
+
+    def _tick_serial(self, now: float) -> Optional[BatchEvent]:
+        batch = self._acquire_batch(now)
         if batch is None:
             return None
         duration, result = self.executor.execute(batch, now)
         start, end = now, now + duration
         self.scheduler.complete_batch(batch, result, start, end)
+        return self._finish_tick(batch, result, start, end)
+
+    def _tick_pipelined(self, now: float) -> Optional[BatchEvent]:
+        """Dispatch → speculate → wait → reconcile. The speculative window is
+        exactly one batch deep: while the dispatched batch runs on device, its
+        completion is projected onto the scheduler and the *next* batch is
+        planned against the projection (the plan is consumed — or flushed — at
+        the next tick). Every ledger mutation of the window sits behind a
+        checkpoint, so reconcile on a misprediction is an exact rewind plus a
+        replay with the device's real result."""
+        if self._plan_cp is not None:
+            # The previous window predicted correctly: its plan is the batch
+            # to run, the window commits permanently, and executor slots of
+            # any requests the speculative schedule preempted are freed now —
+            # the same release-before-next-dispatch order as the serial loop.
+            batch = self._take_plan()
+            self._release_preempted()
+            if batch is None:
+                return None   # speculated idle (queue drained by that batch)
+        else:
+            batch = self._acquire_batch(now)
+            if batch is None:
+                return None
+        inflight = self.executor.dispatch(batch, now)
+        spec = self._speculate(batch, now)
+        duration, result = self.executor.wait(inflight)
+        start, end = now, now + duration
+        if spec is not None and self._prediction_matches(spec["predicted"],
+                                                         result):
+            self._commit_speculation(spec, batch, result, start, end)
+        else:
+            if spec is not None:
+                self.scheduler.rollback(spec["cp"])
+            self.scheduler.complete_batch(batch, result, start, end)
+        return self._finish_tick(batch, result, start, end)
+
+    def _acquire_batch(self, now: float) -> Optional[Batch]:
+        """Schedule with the deadlock-escape retry loop (non-speculative)."""
+        batch, deadlocked = self._retry_schedule(now)
+        if deadlocked:
+            # Nothing left to evict — admitting more work, advancing the
+            # clock or reclaiming KV cannot help.
+            raise EngineDeadlockError(self.scheduler.tokens_in_use,
+                                      self.scheduler.limits.cap,
+                                      self.scheduler.stuck_rel_ids(),
+                                      self.replica_id)
+        return batch
+
+    def _retry_schedule(self, now: float) -> Tuple[Optional[Batch], bool]:
+        """Schedule; while nothing is schedulable but work remains, preempt a
+        *round* of victims and retry. Returns (batch, deadlocked)."""
+        batch = self._schedule(now)
+        while batch is None and self.scheduler.has_work():
+            if not self.scheduler.preempt_for_progress(now):
+                return None, True
+            self.schedule_retries += 1
+            batch = self._schedule(now, retry=True)
+        return batch, False
+
+    def _finish_tick(self, batch: Batch, result: BatchResult, start: float,
+                     end: float) -> BatchEvent:
         self.iterations += 1
         event = BatchEvent(batch.kind, start, end, batch.num_requests,
                            batch.uncached_tokens, batch.rel_ids(),
@@ -188,15 +302,155 @@ class EngineCore:
             self.on_batch(event, batch, result)
         return event
 
-    def _schedule(self, now: float) -> Optional[Batch]:
+    def _schedule(self, now: float, retry: bool = False) -> Optional[Batch]:
         """One timed scheduler call, then free executor slots of any requests
         the scheduler preempted while choosing (headroom or retry preemption
         both funnel through ``drain_preempt_releases``)."""
         t0 = _time.perf_counter()
         batch = self.scheduler.schedule(now)
-        self.schedule_time += _time.perf_counter() - t0
+        dt = _time.perf_counter() - t0
+        if retry:
+            self.schedule_retry_time += dt
+        else:
+            self.schedule_time += dt
         self._release_preempted()
         return batch
+
+    # ------------------------------------------------------- speculative window
+    def _can_speculate(self) -> bool:
+        """Speculative scheduling runs at the in-flight batch's *start* time.
+        No policy's batch choice reads the clock — except the DPU starvation
+        promotion (Eq. 13), which compares waiting time against ``now`` — so
+        speculation is decision-identical exactly when starvation prevention
+        is off."""
+        dpu = getattr(self.scheduler, "dpu", None)
+        return dpu is None or dpu.cfg.starvation_threshold is None
+
+    def _predict_result(self, batch: Batch) -> BatchResult:
+        """Predicted completion of ``batch``: which requests emit a token and
+        whether they finish. Token *values* are placeholders — nothing reads
+        them before commit patches in the real ones. Finish prediction mirrors
+        the simulated executor's length rule exactly (bit-identical simulated
+        runs); real executors additionally finish on sampled EOS, which simply
+        lands in the mismatch → rollback path."""
+        outputs: Dict[str, Tuple[int, bool]] = {}
+        for r in batch.prefill_requests:
+            if batch.completes_prompt(r):
+                outputs[r.req_id] = (_SPEC_TOKEN, self._predict_finished(r))
+        for r in batch.decode_requests:
+            outputs[r.req_id] = (_SPEC_TOKEN, self._predict_finished(r))
+        return BatchResult(outputs)
+
+    def _predict_finished(self, r: Request) -> bool:
+        produced = len(r.output_tokens) + 1
+        target = r.max_output_tokens
+        if self._predict_sim_len:
+            sim = getattr(r, "sim_output_len", None) or target
+            target = min(sim, target)
+        return produced >= target
+
+    @staticmethod
+    def _prediction_matches(predicted: BatchResult, real: BatchResult) -> bool:
+        if predicted.outputs.keys() != real.outputs.keys():
+            return False
+        return all(predicted.outputs[k][1] == real.outputs[k][1]
+                   for k in real.outputs)
+
+    def _speculate(self, batch: Batch, now: float) -> Optional[dict]:
+        """While ``batch`` runs on device: checkpoint, project its predicted
+        completion onto the ledgers, schedule the next batch against the
+        projection (with the same deadlock-retry loop, except a genuine
+        deadlock rolls back and defers to the next real tick instead of
+        raising), and pre-stage the plan's prefill shape buckets. Executor
+        slot releases for speculatively preempted victims are deferred until
+        the plan is actually dispatched — device state is not rewindable.
+        Returns the window dict, or None when speculation is off/unsafe."""
+        if not self._can_speculate():
+            return None
+        sched = self.scheduler
+        t_start = _time.perf_counter()
+        cp = sched.checkpoint(batch)
+        predicted = self._predict_result(batch)
+        sched.complete_batch(batch, predicted, now, _SPEC_END)
+        patches = [(r, len(r.output_tokens) - 1)
+                   for r in (*batch.prefill_requests, *batch.decode_requests)
+                   if r.req_id in predicted.outputs]
+        t0 = _time.perf_counter()
+        plan = sched.schedule(now)
+        sched_s = _time.perf_counter() - t0
+        retry_s, retries = 0.0, 0
+        while plan is None and sched.has_work():
+            t0 = _time.perf_counter()
+            if not sched.preempt_for_progress(now):
+                sched.rollback(cp)
+                return None   # genuine deadlock: surface it un-speculated
+            retries += 1
+            plan = sched.schedule(now)
+            retry_s += _time.perf_counter() - t0
+        prestage = getattr(self.executor, "prestage", None)
+        if plan is not None and prestage is not None:
+            prestage(plan)
+        return {"cp": cp, "predicted": predicted, "patches": patches,
+                "plan": plan, "sched_s": sched_s, "retry_s": retry_s,
+                "retries": retries,
+                "spec_s": _time.perf_counter() - t_start}
+
+    def _commit_speculation(self, spec: dict, batch: Batch,
+                            result: BatchResult, start: float,
+                            end: float) -> None:
+        """The device agreed with the projection: patch placeholder tokens and
+        timestamps with the real values and adopt the planned next batch. The
+        checkpoint (and its op journal) stays open until the plan is consumed
+        or flushed — an admit/cancel/snapshot between ticks still needs the
+        exact rewind."""
+        for r, idx in spec["patches"]:
+            r.output_tokens[idx] = result.outputs[r.req_id][0]
+        rqs = {}
+        for r in (*batch.prefill_requests, *batch.decode_requests):
+            if r.finish_time == _SPEC_END:
+                r.finish_time = end
+            rqs[r.rel_id] = self.scheduler.relqueries[r.rel_id]
+        for rq in rqs.values():
+            if rq.last_prefill_end == _SPEC_END:
+                rq.last_prefill_end = end
+            if rq.finish_time == _SPEC_END:
+                rq.finish_time = end
+        self.schedule_time += spec["sched_s"]
+        self.schedule_retry_time += spec["retry_s"]
+        self.schedule_retries += spec["retries"]
+        self.overlap_hidden_time += spec["spec_s"]
+        self._plan = spec["plan"]
+        self._plan_cp = spec["cp"]
+        self._plan_batch = batch
+        self._plan_real = (result, start, end)
+
+    def _take_plan(self) -> Optional[Batch]:
+        """Consume the pre-planned batch, committing the previous window for
+        good (the journal closes; no rewind past this point)."""
+        plan = self._plan
+        self.scheduler.discard_checkpoint()
+        self._drop_plan_state()
+        return plan
+
+    def _flush_plan(self) -> None:
+        """Un-speculate: rewind to the pre-projection checkpoint and replay
+        the in-flight batch's *real* completion, leaving exactly the state
+        the serial loop would have between ticks. Called before any
+        between-tick interaction the plan could not have seen — admit,
+        cancel, report/snapshot."""
+        if self._plan_cp is None:
+            return
+        result, start, end = self._plan_real
+        batch = self._plan_batch
+        self.scheduler.rollback(self._plan_cp)
+        self._drop_plan_state()
+        self.scheduler.complete_batch(batch, result, start, end)
+
+    def _drop_plan_state(self) -> None:
+        self._plan = None
+        self._plan_cp = None
+        self._plan_batch = None
+        self._plan_real = None
 
     def _release_preempted(self) -> None:
         release = getattr(self.executor, "release_request", None)
@@ -209,6 +463,7 @@ class EngineCore:
         from the scheduler (reclaiming ``tokens_in_use``/``committed_tokens``)
         and release any executor-side state (decode slots) they hold. Returns
         the evicted requests; [] if the relQuery is unknown or terminal."""
+        self._flush_plan()   # the pre-planned batch may contain the victim
         cancelled = self.scheduler.cancel_relquery(rel_id, now)
         release = getattr(self.executor, "release_request", None)
         if release is not None:
@@ -222,6 +477,7 @@ class EngineCore:
         Frontend's ``snapshot()``): unfinished relQueries simply have no
         latency entry yet. Cancelled relQueries are excluded from every
         latency statistic and listed in ``cancelled_rel_ids``."""
+        self._flush_plan()   # mid-flight views must not see speculative state
         all_rqs = list(self.scheduler.relqueries.values())
         cancelled = [rq.rel_id for rq in all_rqs if rq.cancelled]
         rqs = [rq for rq in all_rqs if not rq.cancelled]
@@ -239,6 +495,9 @@ class EngineCore:
             prefix_lookup_tokens=(getattr(pc, "hits", 0) + getattr(pc, "misses", 0)
                                   if pc is not None else 0),
             schedule_time=self.schedule_time,
+            schedule_retry_time=self.schedule_retry_time,
+            overlap_hidden_time=self.overlap_hidden_time,
+            schedule_retries=self.schedule_retries,
             cancelled_rel_ids=cancelled,
             preemptions=getattr(self.scheduler, "preemptions", 0),
             preempted_tokens=getattr(self.scheduler, "preempted_tokens", 0),
@@ -251,8 +510,9 @@ class EngineCore:
 class ServingEngine:
     """Single-replica trace driver built on ``EngineCore``."""
 
-    def __init__(self, scheduler: SchedulerBase, executor):
-        self.core = EngineCore(scheduler, executor)
+    def __init__(self, scheduler: SchedulerBase, executor,
+                 engine_loop: str = "serial"):
+        self.core = EngineCore(scheduler, executor, engine_loop=engine_loop)
 
     @property
     def scheduler(self) -> SchedulerBase:

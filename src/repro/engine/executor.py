@@ -1,8 +1,9 @@
 """Real JAX executors: token-by-token execution of scheduler-issued batches on
 an actual model (smoke-scale on CPU; the same code path drives a TPU slice).
 
-Two KV backends behind one engine-facing contract (``execute`` /
-``release_request`` / ``validate_relquery`` / ``fitted_model``):
+Two KV backends behind one engine-facing contract (``dispatch`` / ``wait`` —
+with ``execute`` as the serial composition — plus ``release_request`` /
+``validate_relquery`` / ``prestage`` / ``fitted_model``):
 
 ``RealExecutor`` — the dense baseline. ``max_slots`` decode cache slots of
 ``max_len`` tokens each (the model's dense/ring KV layout); prefill assigns
@@ -27,7 +28,7 @@ Fig. 7): ``fitted_model()`` fits α/β from measured (tokens, duration) /
 from __future__ import annotations
 
 import time as _time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -46,6 +47,33 @@ class RequestCapacityError(ValueError):
     """A request can never fit this executor's per-sequence KV capacity —
     raised at admission (``EngineCore.admit``) instead of overflowing the
     slot buffer / block table mid-flight."""
+
+
+@dataclass
+class InFlight:
+    """A dispatched-but-not-consumed batch: the device logits (JAX async
+    futures until someone materializes them) plus the host bookkeeping
+    ``wait`` needs to turn them into a ``BatchResult``.
+
+    Splitting ``execute`` into ``dispatch`` (issue compiled calls, host-side
+    KV bookkeeping) and ``wait`` (block on logits, sample, finish detection)
+    lets the engine run the *next* scheduling decision while this batch is
+    still on the device — ``jax.block_until_ready``/host transfer happens in
+    ``wait``'s ``argmax`` materialization, not at dispatch."""
+    batch: Batch
+    # dense: [(req, logits)] per completing prefill; paged: [(group, logits)]
+    prefill_pending: List
+    decode_pending: Optional[object]     # decode-phase logits, or None
+    decode_reqs: List[Request]
+    decode_rows: List[int]               # dense: logits row per decode req
+    utok: int                            # measured uncached prefill tokens
+    prefill_issue_s: float               # host issue time, compile excluded
+    decode_issue_s: float
+    # produced-token count per req_id *as of dispatch* (this batch's token
+    # included). The pipelined engine projects placeholder tokens onto
+    # ``output_tokens`` while the batch is in flight, so ``wait`` must not
+    # re-derive progress from live request state.
+    produced: Dict[str, int] = field(default_factory=dict)
 
 
 def _bucket(n: int, buckets=(16, 32, 64, 128, 256, 512, 1024, 2048, 4096)) -> int:
@@ -76,6 +104,9 @@ class _ExecutorBase:
         self.greedy = greedy
         self.prefill_samples: List[Tuple[int, float]] = []
         self.decode_samples: List[Tuple[int, float]] = []
+        # compile seconds spent pre-staging shape buckets during another
+        # batch's device compute (never charged to any batch duration)
+        self.prestage_compile_s = 0.0
 
     # ------------------------------------------------------------- admission
     def validate_relquery(self, rq: RelQuery) -> None:
@@ -172,10 +203,12 @@ class RealExecutor(_ExecutorBase):
         self._free_slot(req_id)
 
     # ------------------------------------------------------------------ prefill
-    def _prefill_one(self, req: Request) -> Tuple[int, int]:
-        """Prefill a request, write its KV into a slot; returns (token, utok).
-        For a preempted request's restart the pass recomputes prompt +
-        preserved generation (recompute-style preemption recovery)."""
+    def _prefill_issue(self, req: Request) -> Tuple[object, int]:
+        """Issue a request's prefill and write its KV into a slot; returns
+        (device logits, utok) without sampling — the logits stay a device
+        future until ``wait`` materializes them. For a preempted request's
+        restart the pass recomputes prompt + preserved generation
+        (recompute-style preemption recovery)."""
         seq = req.prefill_token_ids()
         n = len(seq)
         utok = self._account_prefill(req, seq)
@@ -194,8 +227,28 @@ class RealExecutor(_ExecutorBase):
         slot = self._alloc_slot(req)
         self._write_slot_cache(slot, kv)
         self.slots[slot].position = n
-        token = self._sample(logits)[0]
-        return int(token), utok
+        return logits, utok
+
+    def prestage(self, batch: Batch) -> None:
+        """Pre-compile the prefill shape buckets ``batch`` will need, with
+        dummy-shaped arguments — called by the pipelined engine while the
+        *previous* batch runs on the device, so a first-shape XLA compile
+        never lands on the critical path. Decode/scatter functions are not
+        pre-staged (they close over live cache shapes already compiled)."""
+        for r in batch.prefill_requests:
+            if not batch.completes_prompt(r):
+                continue
+            n = len(r.prefill_token_ids())
+            bucket = min(_bucket(n), self.max_len)
+            if bucket in self._prefill_fn:
+                continue
+            toks = np.zeros((1, bucket), np.int32)
+            args = (self.params, jnp.asarray(toks),
+                    jnp.asarray([n], jnp.int32))
+            fn = jax.jit(lambda p, t, sl: self.model.prefill(
+                p, t, seq_lens=sl, max_len=self.max_len))
+            self._prefill_fn[bucket], dt = self._aot(fn, *args)
+            self.prestage_compile_s += dt
 
     def _write_slot_cache(self, slot: int, kv) -> None:
         """Copy a single-sequence prefill cache into slot ``slot``."""
@@ -217,7 +270,7 @@ class RealExecutor(_ExecutorBase):
         self.cache = jax.tree.map(write, self.cache, kv)
 
     # ------------------------------------------------------------------ decode
-    def _decode_all(self, reqs: List[Request]) -> Dict[str, int]:
+    def _decode_issue(self, reqs: List[Request]) -> object:
         tokens = np.zeros((self.max_slots,), np.int32)
         positions = np.zeros((self.max_slots,), np.int32)
         # decode_step scatters every row's K/V at positions[i] — rows must
@@ -246,59 +299,90 @@ class RealExecutor(_ExecutorBase):
             self._decode_fn, dt = self._aot(self._decode_jit, *args)
             self._compile_s += dt
         logits, self.cache = self._decode_fn(*args)
-        out = self._sample(logits)
-        result = {}
         for r in reqs:
-            i = self._slot_of[r.req_id]
-            self.slots[i].position += 1
-            result[r.req_id] = int(out[i])
-        return result
+            self.slots[self._slot_of[r.req_id]].position += 1
+        return logits
 
     # ------------------------------------------------------------------ engine API
-    def execute(self, batch: Batch, now: float) -> Tuple[float, BatchResult]:
-        """Run one unified batch. Prefill and decode phases are timed
-        *separately* — a mixed batch contributes a prefill-only sample and a
-        decode-only sample, so ``fitted_model()`` calibration never sees
-        combined wall times."""
-        outputs: Dict[str, Tuple[int, bool]] = {}
-        prefill_dur = decode_dur = 0.0
-        prefilled_any = False
+    def dispatch(self, batch: Batch, now: float) -> InFlight:
+        """Issue one unified batch on the device without blocking: prefill
+        passes write their KV and the decode step advances the slot
+        positions, but no logits are materialized on the host. Prefill and
+        decode issue times are kept separate so ``wait`` can complete the
+        phase-separated samples ``fitted_model()`` calibration expects."""
         self._compile_s = 0.0
         t0 = _time.perf_counter()
+        pending = []
         total_utok = 0
         for r in batch.prefill_requests:
             if not batch.completes_prompt(r):
                 continue  # chunk not finishing the prompt: accounted only
-            tok, utok = self._prefill_one(r)
+            logits, utok = self._prefill_issue(r)
             total_utok += utok
-            prefilled_any = True
-            # a restarted (preempted) request already produced its preserved
-            # tokens; this prefill emits the (len + 1)-th
-            finished = self._is_finish_token(r, tok, len(r.output_tokens) + 1)
-            outputs[r.req_id] = (tok, finished)
-            if finished:
-                self._free_slot(r.req_id)
-        prefill_dur = max(0.0, _time.perf_counter() - t0 - self._compile_s)
-        if prefilled_any:
-            self.prefill_samples.append((total_utok, prefill_dur))
+            pending.append((r, logits))
+        prefill_issue = max(0.0, _time.perf_counter() - t0 - self._compile_s)
         reqs = [r for r in batch.decode_requests if r.req_id in self._slot_of]
+        decode_logits, rows, decode_issue = None, [], 0.0
         if reqs:
             self._compile_s = 0.0
             t1 = _time.perf_counter()
-            toks = self._decode_all(reqs)
-            decode_dur = max(0.0, _time.perf_counter() - t1 - self._compile_s)
-            self.decode_samples.append((len(reqs), decode_dur))
-            for r in reqs:
-                tok = toks[r.req_id]
-                # r.output_tokens holds the tokens of *previous* iterations
-                # (complete_batch appends after execute), so this token is the
-                # (len + 1)-th produced — matching the simulated executor's
-                # count; the old "+ 2" finished every request one token early.
-                finished = self._is_finish_token(r, tok, len(r.output_tokens) + 1)
+            decode_logits = self._decode_issue(reqs)
+            # capture logits rows now: a prefill request finishing in wait()
+            # frees its own slot only, so these stay valid either way
+            rows = [self._slot_of[r.req_id] for r in reqs]
+            decode_issue = max(0.0,
+                               _time.perf_counter() - t1 - self._compile_s)
+        produced = {r.req_id: len(r.output_tokens) + 1
+                    for r in (*(p[0] for p in pending), *reqs)}
+        return InFlight(batch=batch, prefill_pending=pending,
+                        decode_pending=decode_logits, decode_reqs=reqs,
+                        decode_rows=rows, utok=total_utok,
+                        prefill_issue_s=prefill_issue,
+                        decode_issue_s=decode_issue, produced=produced)
+
+    def wait(self, inflight: InFlight) -> Tuple[float, BatchResult]:
+        """Materialize a dispatched batch: sample every pending logits row
+        (the blocking host transfer), detect finishes and free their slots.
+        Returns the same (duration, BatchResult) contract as ``execute`` —
+        durations cover issue + wait, compile time excluded."""
+        outputs: Dict[str, Tuple[int, bool]] = {}
+        prefill_dur = inflight.prefill_issue_s
+        if inflight.prefill_pending:
+            t0 = _time.perf_counter()
+            for r, logits in inflight.prefill_pending:
+                tok = int(self._sample(logits)[0])
+                # a restarted (preempted) request already produced its
+                # preserved tokens; this prefill emits the (len + 1)-th
+                finished = self._is_finish_token(r, tok,
+                                                 inflight.produced[r.req_id])
                 outputs[r.req_id] = (tok, finished)
                 if finished:
                     self._free_slot(r.req_id)
+            prefill_dur += _time.perf_counter() - t0
+            self.prefill_samples.append((inflight.utok, prefill_dur))
+        decode_dur = inflight.decode_issue_s
+        if inflight.decode_pending is not None:
+            t1 = _time.perf_counter()
+            out = self._sample(inflight.decode_pending)
+            for r, row in zip(inflight.decode_reqs, inflight.decode_rows):
+                tok = int(out[row])
+                # ``produced`` was counted at dispatch, when output_tokens
+                # held only *landed* iterations — matching the simulated
+                # executor's count even if a speculative placeholder has
+                # been projected onto the request since.
+                finished = self._is_finish_token(r, tok,
+                                                 inflight.produced[r.req_id])
+                outputs[r.req_id] = (tok, finished)
+                if finished:
+                    self._free_slot(r.req_id)
+            decode_dur += _time.perf_counter() - t1
+            self.decode_samples.append((len(inflight.decode_reqs), decode_dur))
         return prefill_dur + decode_dur, BatchResult(outputs)
+
+    def execute(self, batch: Batch, now: float) -> Tuple[float, BatchResult]:
+        """Serial composition of the split contract — the serial engine loop
+        and older callers see the exact pre-split behavior."""
+        return self.wait(self.dispatch(batch, now))
 
 
 class PagedRealExecutor(_ExecutorBase):
@@ -387,13 +471,43 @@ class PagedRealExecutor(_ExecutorBase):
     def _prompt_keys(self, r: Request) -> Tuple[int, ...]:
         return tuple(block_hashes(r.tokens, self.block_size))
 
+    def _prefill_group_key(self, r: Request) -> int:
+        """Block-aligned length bucket a request prefills under (the same
+        per-request bucket the dense baseline pads to — keeping per-row
+        numerics identical across backends, bf16 included)."""
+        L = min(_bucket(len(r.prefill_token_ids())), self.max_len)
+        return -(-L // self.block_size) * self.block_size
+
+    def prestage(self, batch: Batch) -> None:
+        """Pre-compile the (batch, length) prefill buckets ``batch`` will
+        group into, with dummy-shaped arguments — run by the pipelined engine
+        under the previous batch's device compute. Scatter/decode functions
+        are not pre-staged: their argument shapes depend on live pool/cache
+        values only available at dispatch."""
+        groups: Dict[int, int] = {}
+        for r in batch.prefill_requests:
+            if batch.completes_prompt(r):
+                L = self._prefill_group_key(r)
+                groups[L] = groups.get(L, 0) + 1
+        for L, n in sorted(groups.items()):
+            key = (_pow2_bucket(n), L)
+            if key in self._prefill_fn:
+                continue
+            B = key[0]
+            toks = np.zeros((B, L), np.int32)
+            args = (self.params, jnp.asarray(toks),
+                    jnp.asarray(np.ones((B,), np.int32)))
+            fn = jax.jit(lambda p, t, sl, L=L: self.model.prefill(
+                p, t, seq_lens=sl, max_len=L))
+            self._prefill_fn[key], dt = self._aot(fn, *args)
+            self.prestage_compile_s += dt
+
     # ------------------------------------------------------------- prefill
-    def _prefill_batch(self, reqs: List[Request]) -> Tuple[Dict[str, int], int]:
+    def _prefill_issue_batch(self, reqs: List[Request]) -> Tuple[List, int]:
         """Batched multi-request prefill, shape-bucketed on (batch, length):
-        requests are grouped by their *per-request* length bucket (the same
-        bucket the dense baseline pads each one to — keeping per-row numerics
-        identical across backends, bf16 included) and each group runs as one
-        model call followed by one scatter into the pools."""
+        each group runs as one model call followed by one scatter into the
+        pools. Returns ([(group requests, device logits)], utok) — sampling
+        deferred to ``wait``."""
         seqs = {r.req_id: r.prefill_token_ids() for r in reqs}
         utok = 0
         for r in reqs:                      # accounting in dense batch order
@@ -401,10 +515,8 @@ class PagedRealExecutor(_ExecutorBase):
         bs = self.block_size
         groups: Dict[int, List[Request]] = {}
         for r in reqs:
-            L = min(_bucket(len(seqs[r.req_id])), self.max_len)
-            L = -(-L // bs) * bs            # block-aligned bucket
-            groups.setdefault(L, []).append(r)
-        out: Dict[str, int] = {}
+            groups.setdefault(self._prefill_group_key(r), []).append(r)
+        pending: List = []
         for L in sorted(groups):
             grp = groups[L]
             B = _pow2_bucket(len(grp))
@@ -455,10 +567,8 @@ class PagedRealExecutor(_ExecutorBase):
                 self._scatter_fn[key], dt = self._aot(fn, *sargs)
                 self._compile_s += dt
             self.pools = self._scatter_fn[key](*sargs)
-            out_tokens = self._sample(logits)
-            for i, r in enumerate(grp):
-                out[r.req_id] = int(out_tokens[i])
-        return out, utok
+            pending.append((grp, logits))
+        return pending, utok
 
     # ------------------------------------------------------------- decode
     def _copy_block(self, src: int, dst: int) -> None:
@@ -482,7 +592,7 @@ class PagedRealExecutor(_ExecutorBase):
         self.pools = self._copy_fn(*args)
         self.cow_copies += 1
 
-    def _decode_batch(self, reqs: List[Request]) -> Dict[str, int]:
+    def _decode_issue(self, reqs: List[Request]) -> object:
         bs = self.block_size
         positions = []
         for r in reqs:
@@ -521,45 +631,81 @@ class PagedRealExecutor(_ExecutorBase):
             self._decode_fn[key], dt = self._aot(fn, *args)
             self._compile_s += dt
         logits, self.pools = self._decode_fn[key](*args)
-        out = self._sample(logits)
-        return {r.req_id: int(out[i]) for i, r in enumerate(reqs)}
+        return logits
 
     # ------------------------------------------------------------- engine API
-    def execute(self, batch: Batch, now: float) -> Tuple[float, BatchResult]:
-        """Same phase-separated timing contract as the dense executor."""
-        outputs: Dict[str, Tuple[int, bool]] = {}
-        prefill_dur = decode_dur = 0.0
+    def dispatch(self, batch: Batch, now: float) -> InFlight:
+        """Issue one unified batch: block allocation, prefill + pool scatter
+        and the paged decode step all run host-side/async; logits stay on the
+        device until ``wait``. Block frees of requests finishing in this
+        batch happen in ``wait`` — at a near-exhausted pool this defers a
+        handful of frees by one phase, which can surface ``OutOfBlocks``
+        slightly earlier than the fused loop did (the scheduler's cap keeps
+        real configurations away from that boundary)."""
         prefill_reqs = [r for r in batch.prefill_requests
                         if batch.completes_prompt(r)]
+        pending: List = []
+        utok = 0
+        prefill_issue = 0.0
         if prefill_reqs:
             self._compile_s = 0.0
             t0 = _time.perf_counter()
-            toks, utok = self._prefill_batch(prefill_reqs)
-            prefill_dur = max(0.0,
-                              _time.perf_counter() - t0 - self._compile_s)
-            self.prefill_samples.append((utok, prefill_dur))
-            for r in prefill_reqs:
-                tok = toks[r.req_id]
-                finished = self._is_finish_token(r, tok,
-                                                 len(r.output_tokens) + 1)
-                outputs[r.req_id] = (tok, finished)
-                if finished:
-                    self.release_request(r.req_id)
+            pending, utok = self._prefill_issue_batch(prefill_reqs)
+            prefill_issue = max(0.0,
+                                _time.perf_counter() - t0 - self._compile_s)
         reqs = [r for r in batch.decode_requests if r.req_id in self._active]
+        decode_logits, decode_issue = None, 0.0
         if reqs:
             self._compile_s = 0.0
             t1 = _time.perf_counter()
-            toks = self._decode_batch(reqs)
-            decode_dur = max(0.0, _time.perf_counter() - t1 - self._compile_s)
-            self.decode_samples.append((len(reqs), decode_dur))
-            for r in reqs:
-                tok = toks[r.req_id]
+            decode_logits = self._decode_issue(reqs)
+            decode_issue = max(0.0,
+                               _time.perf_counter() - t1 - self._compile_s)
+        produced = {r.req_id: len(r.output_tokens) + 1
+                    for r in (*(r for grp, _ in pending for r in grp), *reqs)}
+        return InFlight(batch=batch, prefill_pending=pending,
+                        decode_pending=decode_logits, decode_reqs=reqs,
+                        decode_rows=[], utok=utok,
+                        prefill_issue_s=prefill_issue,
+                        decode_issue_s=decode_issue, produced=produced)
+
+    def wait(self, inflight: InFlight) -> Tuple[float, BatchResult]:
+        """Same phase-separated timing contract as the dense executor:
+        sample each prefill group then the decode step, free the blocks of
+        anything that finished."""
+        outputs: Dict[str, Tuple[int, bool]] = {}
+        prefill_dur = inflight.prefill_issue_s
+        if inflight.prefill_pending:
+            t0 = _time.perf_counter()
+            for grp, logits in inflight.prefill_pending:
+                out_tokens = self._sample(logits)
+                for i, r in enumerate(grp):
+                    tok = int(out_tokens[i])
+                    finished = self._is_finish_token(r, tok,
+                                                     inflight.produced[r.req_id])
+                    outputs[r.req_id] = (tok, finished)
+                    if finished:
+                        self.release_request(r.req_id)
+            prefill_dur += _time.perf_counter() - t0
+            self.prefill_samples.append((inflight.utok, prefill_dur))
+        decode_dur = inflight.decode_issue_s
+        if inflight.decode_pending is not None:
+            t1 = _time.perf_counter()
+            out = self._sample(inflight.decode_pending)
+            for i, r in enumerate(inflight.decode_reqs):
+                tok = int(out[i])
                 finished = self._is_finish_token(r, tok,
-                                                 len(r.output_tokens) + 1)
+                                                 inflight.produced[r.req_id])
                 outputs[r.req_id] = (tok, finished)
                 if finished:
                     self.release_request(r.req_id)
+            decode_dur += _time.perf_counter() - t1
+            self.decode_samples.append((len(inflight.decode_reqs), decode_dur))
         return prefill_dur + decode_dur, BatchResult(outputs)
+
+    def execute(self, batch: Batch, now: float) -> Tuple[float, BatchResult]:
+        """Serial composition of the split contract."""
+        return self.wait(self.dispatch(batch, now))
 
 
 KV_BACKENDS = ("dense", "paged")

@@ -27,6 +27,10 @@ def sim_output_len(r: Request) -> int:
 
 
 class SimulatedExecutor:
+    # finish rule is the deterministic sim_output_len clamp — the pipelined
+    # engine's finish prediction mirrors it exactly (speculation always hits)
+    uses_sim_output_len = True
+
     def __init__(self, latency_model: BatchLatencyModel,
                  prefix_cache: Optional[PrefixCache] = None, seed: int = 0,
                  straggler_prob: float = 0.0, straggler_slowdown: float = 10.0,
@@ -106,3 +110,16 @@ class SimulatedExecutor:
         dur = self._apply_straggler(batch.cost(self.lm, true_uncached=utok))
         return dur, BatchResult(outputs, uncached_tokens=utok if
                                 batch.prefill_requests else None)
+
+    # ------------------------------------------------------------------
+    # Split dispatch/wait contract (pipelined engine loop): the simulated
+    # clock has no device to overlap with, so ``dispatch`` computes the whole
+    # batch synchronously and ``wait`` just hands the result back. Durations
+    # are model-computed either way, so pipelined simulated runs stay
+    # bit-identical to serial ones while still exercising the engine's
+    # speculate/reconcile machinery.
+    def dispatch(self, batch: Batch, now: float) -> Tuple[float, BatchResult]:
+        return self.execute(batch, now)
+
+    def wait(self, inflight: Tuple[float, BatchResult]) -> Tuple[float, BatchResult]:
+        return inflight

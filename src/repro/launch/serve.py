@@ -171,6 +171,14 @@ def main() -> None:
                     help="DPU prices priorities with a full prefix-cache "
                          "probe (realized sharing) instead of Eq. 11's "
                          "sampled miss ratio")
+    ap.add_argument("--engine-loop", default="serial",
+                    choices=["serial", "pipelined"],
+                    help="engine tick loop: 'serial' schedules then executes; "
+                         "'pipelined' splits the executor into dispatch/wait "
+                         "and schedules the next batch against a projected "
+                         "ledger while the current one runs on device — token "
+                         "streams and simulated-clock reports are "
+                         "bit-identical either way")
     ap.add_argument("--starvation-threshold", type=float, default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -201,10 +209,11 @@ def main() -> None:
             args.num_replicas, scheduler=args.scheduler, latency_model=lm,
             router_policy=args.router, dpu_config=dpu, seed=args.seed,
             limits=limits, kv_admission=args.kv_admission,
-            prefix_sharing=prefix_sharing)
+            prefix_sharing=prefix_sharing, engine_loop=args.engine_loop)
         print(f"scheduler={args.scheduler} replicas={args.num_replicas} "
               f"router={args.router} kv-admission={args.kv_admission} "
-              f"prefix-sharing={args.prefix_sharing}")
+              f"prefix-sharing={args.prefix_sharing} "
+              f"engine-loop={args.engine_loop}")
         if args.open_loop:
             report = run_open_loop(Frontend(cluster), trace)
             _print_report("open-loop", report)
@@ -245,14 +254,15 @@ def main() -> None:
                 args.arch, args.scheduler, args.kv_backend, limits=limits,
                 latency_model=lm, kv_admission=args.kv_admission,
                 prefix_sharing=prefix_sharing, max_slots=64, max_len=1024,
-                model=model, params=params,
+                model=model, params=params, engine_loop=args.engine_loop,
                 dpu_config=DPUConfig(
                     starvation_threshold=args.starvation_threshold,
                     exact_probe=args.dpu_exact_probe)
                 if args.scheduler.startswith("relserve") else None)
         except NotImplementedError as e:
             raise SystemExit(f"--kv-backend {args.kv_backend}: {e}")
-        print(f"scheduler={args.scheduler} kv-backend={args.kv_backend}")
+        print(f"scheduler={args.scheduler} kv-backend={args.kv_backend} "
+              f"engine-loop={args.engine_loop}")
         if args.open_loop:
             report = run_open_loop(Frontend(engine), trace)
             _print_report("open-loop", report)
@@ -261,7 +271,12 @@ def main() -> None:
             _print_report("merged", report)
 
     print(f"overheads: DPU {report.dpu_time:.3f}s  ABA {report.aba_time:.3f}s  "
-          f"schedule {report.schedule_time:.3f}s")
+          f"schedule {report.schedule_time:.3f}s  "
+          f"retry {report.schedule_retry_time:.3f}s "
+          f"({report.schedule_retries} retries)")
+    if report.overlap_hidden_time:
+        print(f"overlap: {report.overlap_hidden_time:.3f}s of scheduler work "
+              f"hidden behind device compute (pipelined loop)")
 
 
 if __name__ == "__main__":

@@ -46,14 +46,16 @@ class Cluster:
 
     def __init__(self, make_scheduler: Callable[[int], object],
                  make_executor: Callable[[int], object],
-                 num_replicas: int, router: Optional[Router] = None):
+                 num_replicas: int, router: Optional[Router] = None,
+                 engine_loop: str = "serial"):
         if num_replicas < 1:
             raise ValueError("num_replicas must be >= 1")
         self.cores = []
         for i in range(num_replicas):
             sched = make_scheduler(i)
             executor = make_executor(i)
-            self.cores.append(EngineCore(sched, executor, replica_id=i))
+            self.cores.append(EngineCore(sched, executor, replica_id=i,
+                                         engine_loop=engine_loop))
         self.router = router or Router(num_replicas)
         if self.router.num_replicas != num_replicas:
             raise ValueError("router sized for a different replica count")
@@ -126,6 +128,8 @@ class Cluster:
         return self.cores[replica].cancel_relquery(rel_id, now)
 
     def reports(self) -> List[ServiceReport]:
+        # core.report flushes any pipelined speculative window first, so a
+        # mid-flight snapshot never observes projected (placeholder) state
         return [core.report(self.clocks[i]) for i, core in enumerate(self.cores)]
 
     def report(self) -> ClusterReport:

@@ -25,7 +25,8 @@ def build_simulated_cluster(num_replicas: int, scheduler: str = "relserve",
                             seed: int = 0, block_size: int = 16,
                             router: Optional[Router] = None,
                             kv_admission: str = "conservative",
-                            prefix_sharing: bool = False) -> Cluster:
+                            prefix_sharing: bool = False,
+                            engine_loop: str = "serial") -> Cluster:
     lm = latency_model or a100_opt13b()
     caches = {}
 
@@ -42,7 +43,8 @@ def build_simulated_cluster(num_replicas: int, scheduler: str = "relserve",
         return SimulatedExecutor(lm, prefix_cache=caches[i], seed=seed + i)
 
     return Cluster(make_scheduler, make_executor, num_replicas,
-                   router=router or Router(num_replicas, policy=router_policy))
+                   router=router or Router(num_replicas, policy=router_policy),
+                   engine_loop=engine_loop)
 
 
 def build_real_engine(arch: str = "qwen3-1.7b", scheduler: str = "relserve",
@@ -54,7 +56,8 @@ def build_real_engine(arch: str = "qwen3-1.7b", scheduler: str = "relserve",
                       prefix_sharing: bool = False,
                       max_slots: int = 32, max_len: int = 512,
                       block_size: int = 16, num_blocks: Optional[int] = None,
-                      seed: int = 0, model=None, params=None, **executor_kw):
+                      seed: int = 0, model=None, params=None,
+                      engine_loop: str = "serial", **executor_kw):
     """A single-replica real-JAX serving engine on the chosen KV backend.
 
     ``kv_backend='dense'`` is the per-slot baseline; ``'paged'`` runs the
@@ -98,4 +101,4 @@ def build_real_engine(arch: str = "qwen3-1.7b", scheduler: str = "relserve",
                             max_len=max_len, prefix_cache=pc,
                             num_blocks=num_blocks, block_size=block_size,
                             share_prefix_blocks=prefix_sharing, **executor_kw)
-    return ServingEngine(sched, ex)
+    return ServingEngine(sched, ex, engine_loop=engine_loop)

@@ -325,7 +325,10 @@ class Frontend:
     def snapshot(self) -> ServiceReport:
         """Consistent service report at the current clock — safe mid-flight:
         finished relQueries carry final latencies, unfinished ones simply have
-        no latency entry yet, cancelled ones are listed separately."""
+        no latency entry yet, cancelled ones are listed separately. On the
+        pipelined engine loop this (like ``cancel`` and ``submit``) flushes
+        any speculative window first, so the view is always the exact serial
+        state."""
         return merge_reports(self.backend.reports())
 
     # ------------------------------------------------------------- drivers

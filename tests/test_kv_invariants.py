@@ -201,6 +201,76 @@ def test_shared_ledger_discount_invariant(ops):
     assert ledger.discount == 0 and len(ledger) == 0
 
 
+_PIPELINED_TRACE = None
+
+
+def _pipelined_stack():
+    """A small preemption-prone serving stack on the pipelined engine loop
+    (tight cap, optimistic admission, sharing on), plus a deepcopy of the
+    canonical trace. The trace is built once and copied per example."""
+    import copy
+
+    from repro.core.latency_model import a100_opt13b
+    from repro.core.policies import SCHEDULERS
+    from repro.core.priority import BatchLimits, DPUConfig
+    from repro.data.datasets import make_dataset
+    from repro.data.trace import TraceConfig, build_trace
+    from repro.engine.engine import ServingEngine
+    from repro.engine.simulator import SimulatedExecutor
+
+    global _PIPELINED_TRACE
+    if _PIPELINED_TRACE is None:
+        ds = make_dataset("rotten", num_rows=800, seed=21)
+        _PIPELINED_TRACE = build_trace(ds, TraceConfig(
+            num_relqueries=5, rate=5.0, seed=21, max_requests=6,
+            num_templates=2))
+    trace = copy.deepcopy(_PIPELINED_TRACE)
+    max_fp = max(r.num_prompt_tokens + r.max_output_tokens
+                 for rq in trace for r in rq.requests)
+    lm = a100_opt13b()
+    pc = PrefixCache(block_size=16)
+    sched = SCHEDULERS["relserve"](
+        limits=BatchLimits(cap=int(max_fp * 1.4)), latency_model=lm,
+        prefix_cache=pc, kv_admission="optimistic", prefix_sharing=True,
+        dpu_config=DPUConfig(exact_probe=True))
+    engine = ServingEngine(sched, SimulatedExecutor(lm, prefix_cache=pc),
+                           engine_loop="pipelined")
+    return engine, sched, trace
+
+
+@given(st.lists(st.tuples(st.integers(0, 4), st.integers(0, 4)),
+                min_size=1, max_size=4))
+@settings(max_examples=12, deadline=None)
+def test_pipelined_cancel_interleavings_conserve_ledgers(script):
+    """Random (step, cancel) interleavings against the pipelined engine loop
+    with a speculative window open between ticks: every cancel flushes the
+    in-flight plan, and after the drain all KV ledgers — tokens_in_use,
+    committed, partial-chunk, shared discount — are exactly zero, with no
+    speculative placeholder left in any surviving stream."""
+    from repro.serving.frontend import Frontend
+
+    engine, sched, trace = _pipelined_stack()
+    fe = Frontend(engine)
+    try:
+        handles = [fe.submit(rq, now=rq.arrival_time) for rq in trace]
+        for steps, pick in script:
+            for _ in range(steps):
+                fe.step()
+            fe.cancel(handles[pick % len(handles)])
+        fe.drain()
+    finally:
+        fe.close()
+    assert sched.tokens_in_use == 0
+    assert sched.committed_tokens == 0
+    assert sched.partial_prefill_tokens == 0
+    assert sched._shared_ledger.discount == 0
+    assert len(sched._shared_ledger) == 0
+    for rq in trace:
+        for r in rq.requests:
+            assert all(t >= 0 for t in r.output_tokens), \
+                "speculative placeholder token survived cancel/drain"
+
+
 def test_shared_ledger_victim_never_frees_sibling_blocks():
     """PR-3 interaction pin: when a victim releases its chain, blocks its
     siblings still reference stay counted (discount shrinks by exactly the

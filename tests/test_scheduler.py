@@ -67,9 +67,13 @@ def test_priority_drops_with_progress():
     last.state = RequestState.RUNNING
     last.prefilled = True
     last.output_tokens = [1] * 8    # 2 decode iterations remain
+    # state flipped outside the scheduler's transition methods — tell the
+    # incremental DPU refresh the memoized phase probe is stale
+    rq.note_phase_change()
     dpu.update([rq], now=1.0)
     assert rq.priority < p0 * 0.5, "priority must track remaining workload"
-    # monotone: priority falls as generation progresses further
+    # monotone: priority falls as generation progresses further (no state
+    # change here — decode progress must be re-scored even on a memo hit)
     p1 = rq.priority
     last.output_tokens = [1] * 9
     dpu.update([rq], now=2.0)

@@ -49,7 +49,8 @@ def _cap_for(trace, slack=2.0):
     return int(max_fp * slack)
 
 
-def _run(policy, mode, trace, prefix_sharing=False, exec_seed=0):
+def _run(policy, mode, trace, prefix_sharing=False, exec_seed=0,
+         engine_loop="serial"):
     trace = copy.deepcopy(trace)
     lm = a100_opt13b()
     pc = PrefixCache(block_size=16)
@@ -59,7 +60,8 @@ def _run(policy, mode, trace, prefix_sharing=False, exec_seed=0):
         kw["dpu_config"] = DPUConfig(exact_probe=prefix_sharing)
     sched = SCHEDULERS[policy](**kw)
     engine = ServingEngine(sched, SimulatedExecutor(lm, prefix_cache=pc,
-                                                    seed=exec_seed))
+                                                    seed=exec_seed),
+                           engine_loop=engine_loop)
     report = engine.run_trace(trace)
     return report, sched, trace
 
@@ -95,11 +97,12 @@ def _assert_conserved_and_faithful(report, sched, trace):
                 f"fabricated/garbled output for {r.req_id}"
 
 
+@pytest.mark.parametrize("engine_loop", ("serial", "pipelined"))
 @pytest.mark.parametrize("mode", MODES)
 @pytest.mark.parametrize("policy", POLICIES)
-def test_ledger_conservation_and_faithful_outputs(policy, mode):
+def test_ledger_conservation_and_faithful_outputs(policy, mode, engine_loop):
     trace = _trace(seed=3)
-    report, sched, ran = _run(policy, mode, trace)
+    report, sched, ran = _run(policy, mode, trace, engine_loop=engine_loop)
     _assert_conserved_and_faithful(report, sched, ran)
 
 
