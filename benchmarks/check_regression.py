@@ -34,7 +34,8 @@ WALL_CLOCK_BENCHES = {"real_executor", "async_engine"}
 
 LATENCY_KEYS = ("avg_latency_s", "p99_latency_s")
 VERDICT_TRUE_KEYS = ("optimistic_wins", "paged_decode_wins",
-                     "streams_identical", "sharing_wins", "pipelined_wins")
+                     "streams_identical", "sharing_wins", "pipelined_wins",
+                     "planned_wins", "dag_ok")
 
 
 def _walk(node, path=""):

@@ -93,6 +93,8 @@ def report_metrics(report: ServiceReport) -> dict:
         "cancelled": list(report.cancelled_rel_ids),
         "preemptions": report.preemptions,
         "shared_kv_tokens": report.shared_kv_tokens,
+        "deduped_requests": report.deduped_requests,
+        "plan_time_s": report.plan_time,
     }
 
 

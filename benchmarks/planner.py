@@ -1,0 +1,209 @@
+"""Workload-planner benchmark: planned vs unplanned replay on a
+duplicate-heavy shared-template trace.
+
+The planner sits in front of the scheduler and rewrites the workload before
+any request reaches the engine: exact-duplicate rows are answered once and
+fanned out (``dedup``), rows are sorted into prefix-maximizing order
+(``reorder``), or both (``full``). Planning must be *answer-preserving*: the
+run asserts every logical row's token stream is bit-identical to the
+unplanned replay, for every plan mode and scheduler.
+
+A dependent two-stage cell additionally runs an AugServe-style DAG (stage-2
+prompts rendered from stage-1 answers) end-to-end through the open-loop
+Frontend and pins the lifecycle invariant: stage 2 never enters the engine
+before stage 1 is terminal.
+
+Writes ``BENCH_planner.json``.
+
+    PYTHONPATH=src python -m benchmarks.planner
+    PYTHONPATH=src python -m benchmarks.planner --smoke   # CI: tiny + asserts
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+
+from benchmarks.common import report_metrics, write_bench_json
+from repro.core.latency_model import a100_opt13b
+from repro.core.policies import SCHEDULERS
+from repro.core.priority import BatchLimits, DPUConfig
+from repro.data.datasets import make_dataset
+from repro.data.templates import RelQueryTemplate
+from repro.data.trace import TraceConfig, build_trace
+from repro.engine.engine import EngineDeadlockError, ServingEngine
+from repro.engine.prefix_cache import PrefixCache
+from repro.engine.simulator import SimulatedExecutor
+from repro.planner import PLAN_MODES, PlanExecutor, Planner, QueryPlan, \
+    derive, scan
+from repro.serving import Frontend
+
+SCHED_NAMES = ("relserve", "vllm")
+
+
+def build_engine(scheduler: str, cap: int = 16384):
+    lm = a100_opt13b()
+    pc = PrefixCache(block_size=16)
+    kw = dict(limits=BatchLimits(cap=cap), latency_model=lm, prefix_cache=pc,
+              prefix_sharing=True)
+    if scheduler.startswith("relserve"):
+        kw["dpu_config"] = DPUConfig(exact_probe=True)
+    sched = SCHEDULERS[scheduler](**kw)
+    return ServingEngine(sched, SimulatedExecutor(lm, prefix_cache=pc)), sched
+
+
+def run_planned_cell(scheduler: str, trace, mode: str,
+                     cap: int = 16384) -> dict:
+    """One (scheduler x plan-mode) cell: planned closed-loop replay. Streams
+    are keyed per *logical* row so every mode is comparable to ``off``."""
+    trace = copy.deepcopy(trace)
+    engine, sched = build_engine(scheduler, cap=cap)
+    planner = Planner(mode)
+    executor = PlanExecutor(Frontend(engine), planner)
+    planned = planner.plan_trace(trace)
+    try:
+        report = executor.replay(planned)
+    except EngineDeadlockError as e:
+        return {"deadlock": True, "error": str(e)}
+    cell = report_metrics(report)
+    streams = {r.req_id: tuple(r.output_tokens)
+               for p in planned for r in p.logical_requests}
+    n_logical = sum(p.num_logical for p in planned)
+    n_physical = sum(p.num_physical for p in planned)
+    cell.update(deadlock=False, streams=streams, logical_requests=n_logical,
+                physical_requests=n_physical)
+    assert sched.tokens_in_use == 0 and sched.committed_tokens == 0 \
+        and sched.partial_prefill_tokens == 0, "KV ledger leaked tokens"
+    for p in planned:
+        for r in p.logical_requests:
+            assert r.is_finished(), f"logical row {r.req_id} never resolved"
+    return cell
+
+
+def run_dag_cell(scheduler: str, num_rows: int, seed: int) -> dict:
+    """Dependent two-stage plan through the open-loop Frontend: stage-1
+    classifies each row, stage-2 renders from stage-1's decoded answers.
+    Returns the lifecycle verdict the smoke lane pins."""
+    engine, _ = build_engine(scheduler)
+    executor = PlanExecutor(Frontend(engine), Planner("full"))
+    ds = make_dataset("rotten", num_rows=max(64, num_rows * 4), seed=seed)
+    rows = ds.table.rows[:num_rows]
+    t1 = RelQueryTemplate(
+        "bench/classify", "classify",
+        "Categorize the sentiment of the review {review} as Negative , "
+        "Positive , or Neutral .")
+    t2 = RelQueryTemplate(
+        "bench/summarize", "summarize",
+        "Given the sentiment {answer} summarize the review {review} "
+        "within 20 words .")
+    s1 = scan("stage1", rows, t1)
+    plan = QueryPlan([s1, derive("stage2", s1, t2)], plan_id="bench-dag")
+    handle = executor.run_plan(plan)
+    rq1 = handle.stage("stage1").logical
+    rq2 = handle.stage("stage2").logical
+    resolved = all(r.is_finished()
+                   for nid in ("stage1", "stage2")
+                   for r in handle.stage(nid).logical_requests)
+    report = executor.snapshot()
+    return {
+        "deadlock": False,
+        "rows": num_rows,
+        "stage1_finish_s": rq1.finish_time,
+        "stage2_arrival_s": rq2.arrival_time,
+        "deduped_requests": report.deduped_requests,
+        "dag_ok": bool(resolved and rq1.finish_time is not None
+                       and rq2.arrival_time >= rq1.finish_time),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny trace + hard asserts (CI smoke lane)")
+    ap.add_argument("--num-relqueries", type=int, default=None)
+    ap.add_argument("--rate", type=float, default=10.0)
+    ap.add_argument("--num-templates", type=int, default=2)
+    ap.add_argument("--dup-row-fraction", type=float, default=0.5)
+    ap.add_argument("--seed", type=int, default=11)
+    args = ap.parse_args()
+
+    n_rq = args.num_relqueries or (24 if args.smoke else 48)
+    max_req = 16 if args.smoke else 30
+    ds = make_dataset("rotten", num_rows=10_000, seed=args.seed)
+    trace = build_trace(ds, TraceConfig(
+        num_relqueries=n_rq, rate=args.rate, seed=args.seed,
+        max_requests=max_req, num_templates=args.num_templates,
+        dup_row_fraction=args.dup_row_fraction))
+
+    cells = {}
+    for name in SCHED_NAMES:
+        for mode in PLAN_MODES:
+            cells[f"{name}/{mode}"] = run_planned_cell(name, trace, mode)
+        cells[f"{name}/dag"] = run_dag_cell(
+            name, num_rows=8 if args.smoke else 24, seed=args.seed)
+
+    for key, cell in cells.items():
+        if key.endswith("/dag"):
+            tag = (f"stage1 done {cell['stage1_finish_s']:.2f}s -> stage2 "
+                   f"arrives {cell['stage2_arrival_s']:.2f}s  "
+                   f"({'OK' if cell['dag_ok'] else 'ORDERING VIOLATION'})")
+        elif cell["deadlock"]:
+            tag = "DEADLOCK"
+        else:
+            tag = (f"avg {cell['avg_latency_s']:8.2f}s  "
+                   f"{cell['logical_requests']:4d} logical -> "
+                   f"{cell['physical_requests']:4d} physical  "
+                   f"plan {cell['plan_time_s'] * 1e3:6.2f}ms")
+        print(f"[planner] {key:20s} {tag}", flush=True)
+
+    summary = {"verdict": {}}
+    for name in SCHED_NAMES:
+        off, full = cells[f"{name}/off"], cells[f"{name}/full"]
+        dag = cells[f"{name}/dag"]
+        deadlocks = sum(int(cells[f"{name}/{m}"]["deadlock"])
+                        for m in PLAN_MODES)
+        verdict = {
+            "unplanned_avg_s": off.get("avg_latency_s"),
+            "planned_avg_s": full.get("avg_latency_s"),
+            "deduped_requests": full.get("deduped_requests", 0),
+            "plan_time_s": full.get("plan_time_s", 0.0),
+            "deadlocks": deadlocks,
+            "streams_identical": (not deadlocks and all(
+                cells[f"{name}/{m}"]["streams"] == off["streams"]
+                for m in PLAN_MODES)),
+            "planned_wins": (not deadlocks and
+                             full["avg_latency_s"] < off["avg_latency_s"]),
+            "dag_ok": dag["dag_ok"],
+        }
+        summary["verdict"][name] = verdict
+        print(f"[planner] {name}: unplanned {verdict['unplanned_avg_s']:.2f}s "
+              f"vs planned {verdict['planned_avg_s']:.2f}s "
+              f"({'WIN' if verdict['planned_wins'] else 'NO WIN'}), "
+              f"{verdict['deduped_requests']} rows deduped, DAG "
+              f"{'OK' if verdict['dag_ok'] else 'BROKEN'}", flush=True)
+
+    for cell in cells.values():     # streams are for the identity check, not disk
+        cell.pop("streams", None)
+    write_bench_json("planner", {"config": {
+        "num_relqueries": n_rq, "rate": args.rate, "seed": args.seed,
+        "max_requests": max_req, "num_templates": args.num_templates,
+        "dup_row_fraction": args.dup_row_fraction, "smoke": args.smoke,
+    }, "cells": cells, "summary": summary})
+
+    for name in SCHED_NAMES:
+        v = summary["verdict"][name]
+        assert v["deadlocks"] == 0, f"{name}: deadlock"
+        assert v["streams_identical"], \
+            f"{name}: planning changed a per-row token stream"
+        assert v["deduped_requests"] > 0, \
+            f"{name}: dedup never fired on a duplicate-heavy trace"
+        assert v["planned_wins"], \
+            f"{name}: planned replay did not beat unplanned on avg latency"
+        assert v["dag_ok"], \
+            f"{name}: dependent stage entered the engine before its upstream"
+    print(f"PLANNER OK: --plan full beats --plan off for "
+          f"{', '.join(SCHED_NAMES)}, per-row streams bit-identical, "
+          "dependent DAG stages strictly ordered")
+
+
+if __name__ == "__main__":
+    main()

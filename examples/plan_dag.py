@@ -1,0 +1,76 @@
+"""Dependent-query DAG through the workload planner: a two-stage relational
+pipeline where stage-2 prompts are rendered from stage-1 answers
+(AugServe-style multi-stage requests), executed end-to-end over the open-loop
+Frontend.
+
+Stage 1 classifies the sentiment of every review; stage 2 summarizes each
+review *given its stage-1 sentiment*. The PlanExecutor submits stage 1
+immediately, and materializes + submits stage 2 the moment stage 1 is
+terminal — stage 2 never enters the engine early. Exact-duplicate rows are
+answered once per stage and fanned out to every logical row.
+
+  PYTHONPATH=src python examples/plan_dag.py [--num-rows 12]
+"""
+import argparse
+
+from repro.data.datasets import make_dataset
+from repro.data.templates import RelQueryTemplate
+from repro.planner import PlanExecutor, Planner, QueryPlan, derive, scan
+from repro.serving import Frontend, build_simulated_cluster
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--num-rows", type=int, default=12)
+    ap.add_argument("--seed", type=int, default=5)
+    args = ap.parse_args()
+
+    ds = make_dataset("rotten", num_rows=max(100, args.num_rows * 4),
+                      seed=args.seed)
+    rows = list(ds.table.rows[:args.num_rows])
+    rows[-1] = rows[0]          # an exact duplicate, so dedup has work to do
+
+    classify = RelQueryTemplate(
+        "example/classify", "classify",
+        "Categorize the sentiment of the review {review} as Negative , "
+        "Positive , or Neutral .")
+    summarize = RelQueryTemplate(
+        "example/summarize", "summarize",
+        "Given the sentiment {answer} summarize the review {review} "
+        "within 20 words .")
+
+    stage1 = scan("stage1", rows, classify)
+    stage2 = derive("stage2", stage1, summarize)   # binds {answer}
+    plan = QueryPlan([stage1, stage2], plan_id="example-dag")
+
+    executor = PlanExecutor(Frontend(build_simulated_cluster(1)),
+                            Planner("full"))
+    handle = executor.run_plan(plan)
+
+    rq1 = handle.stage("stage1").logical
+    rq2 = handle.stage("stage2").logical
+    assert rq2.arrival_time >= rq1.finish_time, \
+        "stage 2 entered the engine before stage 1 finished"
+    print(f"stage1 finished at t={rq1.finish_time:.2f}s; stage2 arrived at "
+          f"t={rq2.arrival_time:.2f}s (strictly after)")
+
+    for nid in ("stage1", "stage2"):
+        planned = handle.stage(nid)
+        print(f"{nid}: {planned.num_logical} logical rows -> "
+              f"{planned.num_physical} physical requests "
+              f"({planned.deduped_requests} answered by dedup fan-out)")
+        for r in planned.logical_requests:
+            assert r.is_finished(), f"row {r.req_id} never resolved"
+
+    # the duplicate row's stream is bit-identical to its leader's
+    s2 = handle.stage("stage2").logical_requests
+    assert s2[-1].output_tokens == s2[0].output_tokens
+    report = executor.snapshot()
+    print(f"done: {len(report.latencies)} stages finished, "
+          f"{report.deduped_requests} rows deduped across the plan, "
+          f"plan overhead {report.plan_time * 1e3:.2f}ms")
+    print("PLAN-DAG EXAMPLE OK")
+
+
+if __name__ == "__main__":
+    main()

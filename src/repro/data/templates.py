@@ -38,7 +38,15 @@ class RelQueryTemplate:
     def render(self, row: Dict[str, str]) -> str:
         out = self.text
         for attr in self.attributes:
-            out = out.replace("{" + attr + "}", row.get(attr, ""))
+            if attr not in row:
+                # A silent empty substitution here poisons everything above:
+                # dedup keys collide across genuinely different rows and the
+                # planner's column projection can drop a column it believed
+                # unused. Fail loudly instead.
+                raise KeyError(
+                    f"template {self.template_id!r}: row has no attribute "
+                    f"{attr!r} (row columns: {sorted(row)})")
+            out = out.replace("{" + attr + "}", row[attr])
         return out
 
 

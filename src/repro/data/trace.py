@@ -4,8 +4,9 @@ Poisson arrivals at a given rate, request counts uniform in [1, 100].
 from __future__ import annotations
 
 import random
+import zlib
 from dataclasses import dataclass
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 from repro.core.relquery import RelQuery, Request, make_relquery
 from repro.data.datasets import Dataset, make_dataset
@@ -30,6 +31,14 @@ class TraceConfig:
     # that prefix-sharing-aware scheduling and routing target. None keeps the
     # full template set and the historical trace byte-identical.
     num_templates: Optional[int] = None
+    # Fraction of each relQuery's rows replaced by *exact* copies of earlier
+    # rows in the same window — the duplicate-heavy regime the planner's
+    # dedup pass targets. A duplicate is request-identical: same rendered
+    # prompt AND the same sampled sim_output_len (copied from its source), so
+    # answering the leader once reproduces every duplicate's stream exactly.
+    # Drawn from a derived RNG stream: at 0.0 nothing is drawn and the trace
+    # is byte-identical to historical traces.
+    dup_row_fraction: float = 0.0
 
 
 def poisson_arrivals(n: int, rate: float, rng: random.Random) -> List[float]:
@@ -53,6 +62,20 @@ def build_trace(dataset: Dataset, cfg: TraceConfig,
         n_req = rng.randint(cfg.min_requests, cfg.max_requests)
         offset = rng.randrange(0, max(1, len(dataset.table) - n_req))
         rows = dataset.table.rows[offset:offset + n_req]
+        # duplicate-heavy synthesis: replace a fraction of the window with
+        # copies of earlier rows (derived RNG — the main stream is untouched,
+        # keeping 0.0 byte-identical to historical traces)
+        dup_src: Dict[int, int] = {}
+        if cfg.dup_row_fraction > 0 and len(rows) > 1:
+            rows = list(rows)
+            dup_rng = random.Random(
+                zlib.crc32(f"dup:{cfg.seed}:{qi}".encode()))
+            n_dup = int(round(cfg.dup_row_fraction * len(rows)))
+            for _ in range(n_dup):
+                dst = dup_rng.randrange(1, len(rows))
+                src = dup_rng.randrange(0, dst)
+                rows[dst] = rows[src]
+                dup_src[dst] = src
         prompts = [tokenizer.encode(tpl.render(row)) for row in rows]
         ol = tpl.max_output_tokens
         if cfg.output_token_cap is not None:
@@ -63,6 +86,10 @@ def build_trace(dataset: Dataset, cfg: TraceConfig,
         for r in rq.requests:
             lo = max(1, int(ol * (1 - cfg.output_len_jitter)))
             r.sim_output_len = rng.randint(lo, ol)
+        # duplicates are request-identical: copy the source row's sampled
+        # length too (ascending dst order propagates through dup chains)
+        for dst, src in sorted(dup_src.items()):
+            rq.requests[dst].sim_output_len = rq.requests[src].sim_output_len
         trace.append(rq)
     return trace
 

@@ -101,6 +101,10 @@ class ServiceReport:
     # prefix-sharing subsystem: cumulative cap tokens the shared-block
     # admission ledger discounted (0 with prefix sharing off)
     shared_kv_tokens: int = 0
+    # planner subsystem: logical rows answered by dedup fan-out instead of
+    # execution, and planner wall-clock (stamped by PlanExecutor.snapshot)
+    deduped_requests: int = 0
+    plan_time: float = 0.0
 
     @property
     def avg_latency(self) -> float:
@@ -146,6 +150,8 @@ def merge_reports(reports: Sequence[ServiceReport]) -> ServiceReport:
         merged.preempted_tokens += rep.preempted_tokens
         merged.missing_decode_outputs += rep.missing_decode_outputs
         merged.shared_kv_tokens += rep.shared_kv_tokens
+        merged.deduped_requests += rep.deduped_requests
+        merged.plan_time += rep.plan_time
     merged.events.sort(key=lambda e: (e.start, e.replica))
     merged.cancelled_rel_ids.sort()
     merged.prefix_hit_ratio = (hit_tokens / merged.prefix_lookup_tokens

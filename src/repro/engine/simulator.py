@@ -26,6 +26,36 @@ def sim_output_len(r: Request) -> int:
     return getattr(r, "sim_output_len", None) or r.max_output_tokens
 
 
+def _content_key(r: Request) -> int:
+    """Stable per-request stream seed derived from the *prompt content*, not
+    the request identity: two requests with equal prompts emit identical
+    streams, which is what makes the planner's exact-duplicate dedup
+    answer-preserving (the leader's stream is bit-identical to what each
+    duplicate would have produced alone). Memoized on the request."""
+    key = getattr(r, "_sim_content_key", None)
+    if key is None:
+        key = zlib.crc32(",".join(map(str, r.tokens)).encode())
+        r._sim_content_key = key
+    return key
+
+
+def sim_token(r: Request, produced: int) -> int:
+    """The deterministic simulated token value for ``r``'s ``produced``-th
+    output token (1-based). Single source of truth — tests pin streams
+    against this exact formula."""
+    return (zlib.crc32(f"{_content_key(r)}:{produced}".encode()) & 0x7FFF) + 2
+
+
+def expected_stream(r: Request) -> list:
+    """The full output stream the simulated executor will produce for ``r``
+    (EOS replaces the final token when the request carries one)."""
+    target = min(sim_output_len(r), r.max_output_tokens)
+    toks = [sim_token(r, i) for i in range(1, target + 1)]
+    if toks and r.eos_token is not None:
+        toks[-1] = r.eos_token
+    return toks
+
+
 class SimulatedExecutor:
     # finish rule is the deterministic sim_output_len clamp — the pipelined
     # engine's finish prediction mirrors it exactly (speculation always hits)
@@ -83,7 +113,7 @@ class SimulatedExecutor:
         produced = len(r.output_tokens) + 1
         target = min(sim_output_len(r), r.max_output_tokens)
         finished = produced >= target
-        token = (zlib.crc32(f"{r.req_id}:{produced}".encode()) & 0x7FFF) + 2
+        token = sim_token(r, produced)
         if finished and r.eos_token is not None:
             token = r.eos_token
         return token, finished

@@ -14,9 +14,17 @@ and two drive modes:
                   submission, token streaming, cancellation and a live
                   snapshot — the smoke test for the serving API
 
+Closed-loop replay optionally routes through the workload planner
+(``--plan off|dedup|reorder|full``): exact-duplicate rows are answered once
+and fanned out, rows are reordered into prefix-maximizing order, and the
+report gains logical-vs-physical accounting — with per-row outputs
+bit-identical to the unplanned replay.
+
   PYTHONPATH=src python -m repro.launch.serve --simulate --scheduler relserve
   PYTHONPATH=src python -m repro.launch.serve --simulate --num-replicas 4
   PYTHONPATH=src python -m repro.launch.serve --simulate --open-loop
+  PYTHONPATH=src python -m repro.launch.serve --simulate --plan full \
+      --dup-row-fraction 0.5 --prefix-sharing on
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --num-relqueries 4
 """
 from __future__ import annotations
@@ -28,6 +36,7 @@ from repro.core.policies import SCHEDULERS
 from repro.core.priority import BatchLimits, DPUConfig
 from repro.data.datasets import ALL_DATASETS, make_dataset
 from repro.data.trace import TraceConfig, build_trace
+from repro.planner import PLAN_MODES, PlanExecutor, Planner
 from repro.serving import ROUTER_POLICIES, Frontend, build_simulated_cluster
 from repro.serving.frontend import RelQueryStatus
 
@@ -46,6 +55,24 @@ def _print_report(tag: str, report) -> None:
     if report.shared_kv_tokens:
         print(f"[{tag}] prefix-sharing: {report.shared_kv_tokens} KV cap "
               f"tokens counted once (shared blocks)")
+    if report.deduped_requests or report.plan_time:
+        print(f"[{tag}] planner: {report.deduped_requests} rows answered by "
+              f"dedup fan-out  plan {report.plan_time * 1e3:.2f}ms")
+
+
+def run_planned(frontend: Frontend, trace, mode: str, tokenizer=None):
+    """Closed-loop replay through the workload planner: rewrite the trace
+    (dedup / prefix-maximizing reorder per --plan), submit the physical
+    relQueries through the Frontend, fan answers back out to every logical
+    row. Per-row outputs are bit-identical to the unplanned replay."""
+    planner = Planner(mode, tokenizer=tokenizer)
+    executor = PlanExecutor(frontend, planner)
+    planned = planner.plan_trace(trace)
+    n_logical = sum(p.num_logical for p in planned)
+    n_physical = sum(p.num_physical for p in planned)
+    print(f"planner: mode={mode}  {n_logical} logical requests -> "
+          f"{n_physical} physical ({n_logical - n_physical} deduped)")
+    return executor.replay(planned)
 
 
 def run_open_loop(frontend: Frontend, trace) -> "object":
@@ -136,6 +163,17 @@ def main() -> None:
     ap.add_argument("--open-loop", action="store_true",
                     help="scripted open-loop Frontend session (submit/stream/"
                          "cancel/snapshot) instead of closed-loop replay")
+    ap.add_argument("--plan", default="off", choices=list(PLAN_MODES),
+                    help="workload planner in front of the scheduler: 'dedup' "
+                         "answers each exact-duplicate row once and fans the "
+                         "stream out; 'reorder' sorts rows into prefix-"
+                         "maximizing order; 'full' runs both. Per-row outputs "
+                         "stay bit-identical to 'off'")
+    ap.add_argument("--dup-row-fraction", type=float, default=0.0,
+                    help="fraction of each relQuery's rows replaced by exact "
+                         "copies of earlier rows (duplicate-heavy regime the "
+                         "planner's dedup pass targets); 0.0 is byte-"
+                         "identical to historical traces")
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--num-relqueries", type=int, default=100)
     ap.add_argument("--rate", type=float, default=1.0)
@@ -194,15 +232,22 @@ def main() -> None:
         raise SystemExit(f"--max-requests must be >= 1 (got {args.max_requests})")
     if args.kv_cap is not None and args.kv_cap < 1:
         raise SystemExit(f"--kv-cap must be >= 1 (got {args.kv_cap})")
+    if not 0.0 <= args.dup_row_fraction <= 1.0:
+        raise SystemExit(f"--dup-row-fraction must be in [0, 1] "
+                         f"(got {args.dup_row_fraction})")
+    if args.plan != "off" and args.open_loop:
+        raise SystemExit("--plan rewrites a closed-loop trace replay; it does "
+                         "not apply to the scripted --open-loop session")
     lm = a100_opt13b()
     limits = BatchLimits() if args.kv_cap is None else BatchLimits(cap=args.kv_cap)
     prefix_sharing = args.prefix_sharing == "on"
 
     if args.simulate:
         ds = make_dataset(args.dataset, num_rows=10_000, seed=args.seed)
-        trace = build_trace(ds, TraceConfig(num_relqueries=args.num_relqueries,
-                                            rate=args.rate, seed=args.seed,
-                                            max_requests=args.max_requests))
+        trace = build_trace(ds, TraceConfig(
+            num_relqueries=args.num_relqueries, rate=args.rate, seed=args.seed,
+            max_requests=args.max_requests,
+            dup_row_fraction=args.dup_row_fraction))
         dpu = DPUConfig(starvation_threshold=args.starvation_threshold,
                         exact_probe=args.dpu_exact_probe)
         cluster = build_simulated_cluster(
@@ -217,6 +262,9 @@ def main() -> None:
         if args.open_loop:
             report = run_open_loop(Frontend(cluster), trace)
             _print_report("open-loop", report)
+        elif args.plan != "off":
+            report = run_planned(Frontend(cluster), trace, args.plan)
+            _print_report("planned", report)
         else:
             result = cluster.run_trace(trace)
             for i, rep in enumerate(result.per_replica):
@@ -248,7 +296,8 @@ def main() -> None:
         trace = build_trace(ds, TraceConfig(
             num_relqueries=min(args.num_relqueries, 8), rate=args.rate,
             seed=args.seed, max_requests=min(args.max_requests, 8),
-            output_token_cap=8), tokenizer=tok)
+            output_token_cap=8,
+            dup_row_fraction=args.dup_row_fraction), tokenizer=tok)
         try:
             engine = build_real_engine(
                 args.arch, args.scheduler, args.kv_backend, limits=limits,
@@ -266,6 +315,10 @@ def main() -> None:
         if args.open_loop:
             report = run_open_loop(Frontend(engine), trace)
             _print_report("open-loop", report)
+        elif args.plan != "off":
+            report = run_planned(Frontend(engine), trace, args.plan,
+                                 tokenizer=tok)
+            _print_report("planned", report)
         else:
             report = engine.run_trace(trace)
             _print_report("merged", report)

@@ -23,7 +23,6 @@ The suite also pins that the pipelining actually engages (nonzero
 refresh changes no priority decision.
 """
 import copy
-import zlib
 
 import pytest
 
@@ -34,7 +33,7 @@ from repro.data.datasets import make_dataset
 from repro.data.trace import TraceConfig, build_trace
 from repro.engine.engine import ServiceReport, ServingEngine, merge_reports
 from repro.engine.prefix_cache import PrefixCache
-from repro.engine.simulator import SimulatedExecutor, sim_output_len
+from repro.engine.simulator import SimulatedExecutor, expected_stream
 from repro.serving.frontend import Frontend
 
 POLICIES = tuple(SCHEDULERS)
@@ -87,12 +86,7 @@ def _streams(trace):
 
 
 def _expected_stream(r):
-    target = min(sim_output_len(r), r.max_output_tokens)
-    toks = [(zlib.crc32(f"{r.req_id}:{i}".encode()) & 0x7FFF) + 2
-            for i in range(1, target + 1)]
-    if r.eos_token is not None:
-        toks[-1] = r.eos_token
-    return toks
+    return expected_stream(r)
 
 
 def _events(report):

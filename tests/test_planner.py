@@ -1,0 +1,345 @@
+"""Workload-planner equivalence and lifecycle suite.
+
+The planner may only change *what the engine executes*, never *what any
+logical row receives*:
+
+- **pass equivalence** — every plan mode x scheduler: planned per-row token
+  streams are exactly the unplanned executor streams (and the simulator's
+  canonical ``expected_stream``);
+- **fan-out under cancellation / preemption** — dedup followers mirror their
+  leader's partial stream when the stage is cancelled mid-flight, and
+  preempt/re-prefill cycles under a tight optimistic cap never corrupt a
+  fanned-out stream;
+- **DAG lifecycle** — a dependent stage never enters the engine before every
+  upstream is terminal; cancellation and deadlines propagate along DAG edges
+  to submitted *and* not-yet-submitted stages;
+- **reorder is a permutation** — property-tested over random request lists;
+- **duplicate-heavy traces** — ``dup_row_fraction=0.0`` is byte-identical to
+  the historical trace; ``> 0`` introduces exact duplicates (same prompt,
+  same sampled output length);
+- **render fails loudly** — a row missing a template attribute raises a
+  ``KeyError`` naming template and attribute (a silent empty substitution
+  would poison dedup keys and projection).
+"""
+import copy
+
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.latency_model import a100_opt13b
+from repro.core.policies import SCHEDULERS
+from repro.core.priority import BatchLimits, DPUConfig
+from repro.core.relquery import RequestState, make_relquery
+from repro.data.datasets import make_dataset
+from repro.data.templates import RelQueryTemplate
+from repro.data.trace import TraceConfig, build_trace
+from repro.engine.engine import ServingEngine
+from repro.engine.prefix_cache import PrefixCache
+from repro.engine.simulator import SimulatedExecutor, expected_stream
+from repro.planner import (PLAN_MODES, PlanExecutor, Planner, QueryPlan,
+                           dedup_requests, derive, reorder_requests,
+                           request_identity, scan)
+from repro.serving import Frontend, RelQueryStatus
+
+SCHED_NAMES = ("relserve", "vllm")
+
+
+def _trace(seed=11, num_relqueries=6, rate=3.0, max_requests=12,
+           dup_row_fraction=0.5):
+    ds = make_dataset("rotten", num_rows=2000, seed=seed)
+    return build_trace(ds, TraceConfig(
+        num_relqueries=num_relqueries, rate=rate, seed=seed,
+        max_requests=max_requests, num_templates=2,
+        dup_row_fraction=dup_row_fraction))
+
+
+def _engine(scheduler="relserve", cap=100_000, kv_admission="optimistic"):
+    lm = a100_opt13b()
+    pc = PrefixCache(block_size=16)
+    kw = dict(limits=BatchLimits(cap=cap), latency_model=lm, prefix_cache=pc,
+              kv_admission=kv_admission, prefix_sharing=True)
+    if scheduler.startswith("relserve"):
+        kw["dpu_config"] = DPUConfig(exact_probe=True)
+    sched = SCHEDULERS[scheduler](**kw)
+    return ServingEngine(sched, SimulatedExecutor(lm, prefix_cache=pc)), sched
+
+
+def _streams(trace):
+    return {r.req_id: tuple(r.output_tokens)
+            for rq in trace for r in rq.requests}
+
+
+TPL_CLASSIFY = RelQueryTemplate(
+    "t/classify", "classify",
+    "Categorize the sentiment of the review {review} as Negative , "
+    "Positive , or Neutral .")
+TPL_FOLLOWUP = RelQueryTemplate(
+    "t/summarize", "summarize",
+    "Given the sentiment {answer} summarize the review {review} "
+    "within 20 words .")
+
+
+def _rows(n, distinct=3):
+    return [{"review": f"review body number {i % distinct}",
+             "extra": f"unused column {i}"} for i in range(n)]
+
+
+# ------------------------------------------------------------- equivalence
+@pytest.mark.parametrize("scheduler", SCHED_NAMES)
+@pytest.mark.parametrize("mode", PLAN_MODES)
+def test_planned_replay_matches_unplanned(scheduler, mode):
+    """Every pass combination: planned per-row results exactly equal the
+    unplanned executor streams, and the canonical expected streams."""
+    trace = _trace()
+    base = copy.deepcopy(trace)
+    engine, _ = _engine(scheduler)
+    engine.run_trace(base)
+    unplanned = _streams(base)
+
+    planned_trace = copy.deepcopy(trace)
+    planner = Planner(mode)
+    planned = planner.plan_trace(planned_trace)
+    executor = PlanExecutor(Frontend(_engine(scheduler)[0]), planner)
+    report = executor.replay(planned)
+
+    got = {r.req_id: tuple(r.output_tokens)
+           for p in planned for r in p.logical_requests}
+    assert got == unplanned
+    for p in planned:
+        for r in p.logical_requests:
+            assert r.is_finished()
+            assert r.output_tokens == expected_stream(r)
+    assert set(report.latencies) == {rq.rel_id for rq in trace}
+    if planner.dedup:
+        assert report.deduped_requests > 0, \
+            "dup-heavy trace must produce dedup fan-out"
+    else:
+        assert report.deduped_requests == 0
+
+
+def test_dedup_reduces_physical_requests():
+    trace = _trace()
+    planner = Planner("full")
+    planned = planner.plan_trace(copy.deepcopy(trace))
+    n_logical = sum(p.num_logical for p in planned)
+    n_physical = sum(p.num_physical for p in planned)
+    assert n_physical < n_logical
+    assert sum(p.deduped_requests for p in planned) == n_logical - n_physical
+    # leaders are the original request objects, in first-occurrence order
+    for p in planned:
+        ids = {r.req_id for r in p.logical_requests}
+        for r in p.physical.requests:
+            assert r.req_id in ids
+        for leader_id, followers in p.fanout.items():
+            leader = next(r for r in p.physical.requests
+                          if r.req_id == leader_id)
+            for f in followers:
+                assert request_identity(f) == request_identity(leader)
+
+
+def test_off_mode_is_zero_copy():
+    trace = _trace(dup_row_fraction=0.0)
+    planner = Planner("off")
+    for rq, p in zip(trace, planner.plan_trace(trace)):
+        assert p.physical is rq
+        assert not p.fanout
+
+
+# --------------------------------------------------- fan-out under eviction
+def test_fanout_survives_cancellation():
+    """Cancelling a stage mid-flight: every duplicate row lands CANCELLED
+    with its partial stream mirroring the leader's."""
+    engine, _ = _engine()
+    executor = PlanExecutor(Frontend(engine), Planner("full"))
+    node = scan("stage", _rows(12, distinct=3), TPL_CLASSIFY)
+    handle = executor.submit_plan(QueryPlan([node], plan_id="cancel-test"))
+    planned = handle.stage("stage")
+    assert planned.deduped_requests > 0
+    for _ in range(2):                    # some partial progress, not done
+        executor.step()
+    assert not handle.done()
+    handle.cancel("stage")
+    assert handle.status("stage") is RelQueryStatus.CANCELLED
+    leaders = {r.req_id: r for r in planned.physical.requests}
+    for leader_id, followers in planned.fanout.items():
+        leader = leaders[leader_id]
+        for f in followers:
+            assert f.output_tokens == leader.output_tokens
+            assert f.state == leader.state
+    report = executor.snapshot()
+    assert planned.rel_id in report.cancelled_rel_ids
+    assert planned.rel_id not in report.latencies
+
+
+def test_fanout_survives_preemption():
+    """A cap tight enough to force preempt/re-prefill cycles under optimistic
+    admission: fanned-out streams still bit-identical to unplanned."""
+    trace = _trace(seed=13, num_relqueries=8, rate=6.0, max_requests=12)
+    max_fp = max(r.num_prompt_tokens + r.max_output_tokens
+                 for rq in trace for r in rq.requests)
+    cap = int(max_fp * 1.3)
+
+    base = copy.deepcopy(trace)
+    engine, _ = _engine(cap=cap)
+    rep_off = engine.run_trace(base)
+    assert rep_off.preemptions > 0, "cap not tight enough to preempt"
+
+    planner = Planner("full")
+    planned = planner.plan_trace(copy.deepcopy(trace))
+    executor = PlanExecutor(Frontend(_engine(cap=cap)[0]), planner)
+    report = executor.replay(planned)
+    got = {r.req_id: tuple(r.output_tokens)
+           for p in planned for r in p.logical_requests}
+    assert got == _streams(base)
+    assert report.deduped_requests > 0
+
+
+# ------------------------------------------------------------- DAG lifecycle
+def test_dag_stage2_waits_for_stage1():
+    engine, _ = _engine()
+    executor = PlanExecutor(Frontend(engine), Planner("full"))
+    s1 = scan("s1", _rows(8), TPL_CLASSIFY)
+    plan = QueryPlan([s1, derive("s2", s1, TPL_FOLLOWUP)], plan_id="dag")
+    handle = executor.submit_plan(plan)
+    # while stage 1 runs, stage 2 must not have been submitted
+    while not handle._live["s1"].settled:
+        assert handle.stage_handle("s2") is None
+        assert handle.status("s2") is RelQueryStatus.QUEUED
+        assert executor.step()
+    rq1 = handle.result("s1")
+    rq2 = handle.result("s2")
+    assert rq2.arrival_time >= rq1.finish_time
+    # stage-2 prompts really bind stage-1 decoded answers
+    planner = executor.planner
+    for i, r in enumerate(handle.stage("s2").logical_requests):
+        up = handle.stage("s1").logical_requests[i]
+        rendered = TPL_FOLLOWUP.render(
+            {**_rows(8)[i], "answer": planner.decode_output(up)})
+        assert r.tokens == tuple(planner.tokenizer.encode(rendered)) or \
+            list(r.tokens) == planner.tokenizer.encode(rendered)
+
+
+def test_dag_cancel_propagates_downstream():
+    engine, _ = _engine()
+    executor = PlanExecutor(Frontend(engine), Planner("full"))
+    s1 = scan("s1", _rows(6), TPL_CLASSIFY)
+    s2 = derive("s2", s1, TPL_FOLLOWUP)
+    plan = QueryPlan([s1, s2, derive("s3", s2, TPL_FOLLOWUP)], plan_id="dag")
+    handle = executor.submit_plan(plan)
+    cancelled = handle.cancel("s1")
+    assert set(cancelled) == {"s1", "s2", "s3"}
+    for nid in ("s1", "s2", "s3"):
+        assert handle.status(nid) is RelQueryStatus.CANCELLED
+    assert handle.done()
+    # unsubmitted downstream stages never reached the engine
+    assert handle.stage_handle("s2") is None
+    assert handle.stage_handle("s3") is None
+    for r in handle.stage("s2").logical_requests + \
+            handle.stage("s3").logical_requests:
+        assert r.state is RequestState.CANCELLED
+
+
+def test_dag_deadline_propagates_downstream():
+    """A deadline that kills stage 1 mid-flight must also kill stage 2
+    before it is ever submitted."""
+    engine, _ = _engine()
+    frontend = Frontend(engine)
+    executor = PlanExecutor(frontend, Planner("full"))
+    s1 = scan("s1", _rows(10), TPL_CLASSIFY)
+    plan = QueryPlan([s1, derive("s2", s1, TPL_FOLLOWUP)], plan_id="dl")
+    handle = executor.submit_plan(plan, deadline=1e-6)
+    while executor.step():
+        pass
+    assert handle.status("s1") is RelQueryStatus.CANCELLED
+    assert handle.status("s2") is RelQueryStatus.CANCELLED
+    assert handle.stage_handle("s2") is None
+    assert handle.done()
+
+
+def test_plan_validation():
+    s1 = scan("a", _rows(3), TPL_CLASSIFY)
+    with pytest.raises(ValueError, match="duplicate plan node id"):
+        QueryPlan([s1, scan("a", _rows(3), TPL_CLASSIFY)])
+    with pytest.raises(ValueError, match="unknown node"):
+        QueryPlan([derive("b", "missing", TPL_FOLLOWUP)])
+    with pytest.raises(ValueError, match="empty row set"):
+        scan("empty", [], TPL_CLASSIFY)
+    cyc_a = derive("x", "y", TPL_FOLLOWUP)
+    cyc_b = derive("y", "x", TPL_FOLLOWUP)
+    with pytest.raises(ValueError, match="cycle"):
+        QueryPlan([cyc_a, cyc_b])
+
+
+# ------------------------------------------------------------- reorder pass
+@given(st.lists(st.tuples(st.lists(st.integers(0, 9), min_size=1, max_size=6),
+                          st.integers(1, 8)),
+                min_size=0, max_size=24))
+@settings(max_examples=60, deadline=None)
+def test_reorder_is_a_permutation(specs):
+    rq = make_relquery(
+        "q", [toks for toks, _ in specs] or [[1]], 0.0, 5, eos_token=0)
+    for r, (_, ol) in zip(rq.requests, specs or [([1], 5)]):
+        r.sim_output_len = ol
+    reordered = reorder_requests(rq.requests)
+    # exact multiset of the same objects, sorted by prompt
+    assert sorted(map(id, reordered)) == sorted(map(id, rq.requests))
+    assert [r.tokens for r in reordered] == \
+        sorted(r.tokens for r in rq.requests)
+
+
+def test_dedup_groups_by_exact_identity():
+    rq = make_relquery("q", [[1, 2], [1, 2], [3], [1, 2]], 0.0, 5,
+                       eos_token=0)
+    for r, ol in zip(rq.requests, (4, 4, 4, 3)):
+        r.sim_output_len = ol
+    leaders, fanout = dedup_requests(rq.requests)
+    # [1,2]/ol=4 repeats; [1,2]/ol=3 differs in identity and stays physical
+    assert [r.tokens for r in leaders] == [(1, 2), (3,), (1, 2)]
+    assert len(fanout) == 1
+    (leader_id, followers), = fanout.items()
+    assert leader_id == leaders[0].req_id
+    assert [f.req_id for f in followers] == [rq.requests[1].req_id]
+
+
+# --------------------------------------------------------- dup-heavy traces
+def test_dup_row_fraction_zero_is_byte_identical():
+    ds = make_dataset("rotten", num_rows=2000, seed=3)
+    cfg = dict(num_relqueries=5, rate=3.0, seed=3, max_requests=10,
+               num_templates=2)
+    a = build_trace(ds, TraceConfig(**cfg))
+    b = build_trace(ds, TraceConfig(**cfg, dup_row_fraction=0.0))
+    assert len(a) == len(b)
+    for rqa, rqb in zip(a, b):
+        assert rqa.arrival_time == rqb.arrival_time
+        assert [(r.tokens, r.sim_output_len) for r in rqa.requests] == \
+            [(r.tokens, r.sim_output_len) for r in rqb.requests]
+
+
+def test_dup_row_fraction_introduces_exact_duplicates():
+    trace = _trace(dup_row_fraction=0.5, max_requests=20)
+    dups = 0
+    for rq in trace:
+        seen = {}
+        for r in rq.requests:
+            key = request_identity(r)
+            if key in seen:
+                dups += 1
+                assert r.tokens == seen[key].tokens
+                assert r.sim_output_len == seen[key].sim_output_len
+            else:
+                seen[key] = r
+    assert dups > 0
+    # and the untouched arrival/ordering stream still matches 0.0
+    base = _trace(dup_row_fraction=0.0, max_requests=20)
+    assert [rq.arrival_time for rq in trace] == \
+        [rq.arrival_time for rq in base]
+    assert [len(rq.requests) for rq in trace] == \
+        [len(rq.requests) for rq in base]
+
+
+# ------------------------------------------------------------- render errors
+def test_render_missing_attribute_raises_keyerror():
+    with pytest.raises(KeyError, match=r"t/classify.*review"):
+        TPL_CLASSIFY.render({"other": "value"})
+    # complete rows still render
+    assert "review body" in TPL_CLASSIFY.render({"review": "review body"})

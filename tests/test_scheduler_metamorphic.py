@@ -17,7 +17,6 @@ matter what order batches were arranged in:
   scheduling changes when work runs, never what any request generates.
 """
 import copy
-import zlib
 
 import pytest
 
@@ -28,7 +27,7 @@ from repro.data.datasets import make_dataset
 from repro.data.trace import TraceConfig, build_trace
 from repro.engine.engine import ServingEngine
 from repro.engine.prefix_cache import PrefixCache
-from repro.engine.simulator import SimulatedExecutor, sim_output_len
+from repro.engine.simulator import SimulatedExecutor, expected_stream
 
 POLICIES = tuple(SCHEDULERS)
 MODES = ("conservative", "optimistic")
@@ -67,13 +66,9 @@ def _run(policy, mode, trace, prefix_sharing=False, exec_seed=0,
 
 
 def _expected_stream(r):
-    """The simulated executor's deterministic output for request ``r``."""
-    target = min(sim_output_len(r), r.max_output_tokens)
-    toks = [(zlib.crc32(f"{r.req_id}:{i}".encode()) & 0x7FFF) + 2
-            for i in range(1, target + 1)]
-    if r.eos_token is not None:
-        toks[-1] = r.eos_token
-    return toks
+    """The simulated executor's deterministic output for request ``r``
+    (the canonical formula lives in repro.engine.simulator)."""
+    return expected_stream(r)
 
 
 def _streams(trace):
