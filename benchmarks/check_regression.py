@@ -35,7 +35,8 @@ WALL_CLOCK_BENCHES = {"real_executor", "async_engine"}
 LATENCY_KEYS = ("avg_latency_s", "p99_latency_s")
 VERDICT_TRUE_KEYS = ("optimistic_wins", "paged_decode_wins",
                      "streams_identical", "sharing_wins", "pipelined_wins",
-                     "planned_wins", "dag_ok")
+                     "planned_wins", "dag_ok", "tiering_wins",
+                     "tiering_streams_identical")
 
 
 def _walk(node, path=""):
@@ -145,8 +146,10 @@ def self_test() -> int:
     baseline = {"config": cfg,
                 "cells": {"a": {"avg_latency_s": 1.0, "p99_latency_s": 2.0,
                                 "deadlock": False}},
-                "summary": {"verdict": {"x": {"optimistic_wins": True,
-                                              "deadlocks": 0}}}}
+                "summary": {"verdict": {"x": {
+                    "optimistic_wins": True, "deadlocks": 0,
+                    "tiering_wins": True,
+                    "tiering_streams_identical": True}}}}
 
     def gate_with(fresh) -> int:
         with tempfile.TemporaryDirectory() as td:
@@ -176,6 +179,19 @@ def self_test() -> int:
     assert gate_with(lost) == 1, \
         "self-test: flipped verdict boolean must fail the gate"
 
+    # injected swap regression: the tiered lane stops beating recompute-only
+    # (e.g. the cost model broke and every reclaim recomputes) ...
+    noswap = copy.deepcopy(baseline)
+    noswap["summary"]["verdict"]["x"]["tiering_wins"] = False
+    assert gate_with(noswap) == 1, \
+        "self-test: injected swap regression (tiering_wins=false) must fail"
+
+    # ... or the host round trip corrupts KV and the streams diverge
+    corrupt = copy.deepcopy(baseline)
+    corrupt["summary"]["verdict"]["x"]["tiering_streams_identical"] = False
+    assert gate_with(corrupt) == 1, \
+        "self-test: diverged tiering streams must fail the gate"
+
     drift = copy.deepcopy(baseline)
     drift["config"] = {"seed": 1, "smoke": True}
     drift["cells"]["a"]["avg_latency_s"] = 99.0      # ignored: config drift
@@ -204,8 +220,9 @@ def self_test() -> int:
             "invariant-checked"
 
     print("CHECK-REGRESSION SELF-TEST OK: gate fails on injected latency "
-          "regression, deadlock, flipped verdict and missing artifact; "
-          "passes clean runs and skips config drift")
+          "regression, deadlock, flipped verdict (incl. tiering_wins / "
+          "tiering_streams_identical) and missing artifact; passes clean "
+          "runs and skips config drift")
     return 0
 
 

@@ -8,9 +8,15 @@ decode batches shrink and the tail-phase HoL blocking the paper fights gets
 priority-aware preemption (re-prefill restarts, generation preserved) resolve
 pressure, trading some recompute for much larger effective batches.
 
+A third lane runs the optimistic tight-cap cell again with KV *tiering* on
+(device -> host swapping instead of recompute-only preemption, PR 8): the
+cost-based reclaim should beat recompute-only on avg latency at the tightest
+cap while leaving every token stream bit-identical.
+
 Writes ``BENCH_kv_pressure.json``: per-cell metrics plus a summary verdict
 that optimistic+preemption beats conservative on avg latency at the tightest
-cap, with zero deadlocks, for both schedulers.
+cap, with zero deadlocks, for both schedulers — and that the tiered run wins
+against recompute-only with identical streams.
 
     PYTHONPATH=src python -m benchmarks.kv_pressure
     PYTHONPATH=src python -m benchmarks.kv_pressure --smoke   # CI: tiny + asserts
@@ -32,23 +38,39 @@ SCHED_NAMES = ("relserve", "vllm")
 MODES = ("conservative", "optimistic")
 
 
-def run_cell(scheduler: str, mode: str, cap: int, trace) -> dict:
+def run_cell(scheduler: str, mode: str, cap: int, trace, *,
+             tiering: bool = False, host_kv_cap: int = 0,
+             debug_invariants: bool = False) -> tuple:
+    """Returns (cell_metrics, streams) — streams keyed by req_id for the
+    tiering bit-identity verdict (never written to the JSON artifact)."""
     lm = a100_opt13b()
     pc = PrefixCache(block_size=16)
-    sched = SCHEDULERS[scheduler](limits=BatchLimits(cap=cap), latency_model=lm,
-                                  prefix_cache=pc, kv_admission=mode)
-    engine = ServingEngine(sched, SimulatedExecutor(lm, prefix_cache=pc))
+    kw = dict(limits=BatchLimits(cap=cap), latency_model=lm,
+              prefix_cache=pc, kv_admission=mode)
+    if tiering:
+        kw.update(kv_tiering=True, host_kv_cap=host_kv_cap)
+    sched = SCHEDULERS[scheduler](**kw)
+    engine = ServingEngine(sched, SimulatedExecutor(lm, prefix_cache=pc),
+                           debug_invariants=debug_invariants)
+    ran = copy.deepcopy(trace)
     try:
-        report = engine.run_trace(copy.deepcopy(trace))
+        report = engine.run_trace(ran)
     except EngineDeadlockError as e:
         return {"deadlock": True, "error": str(e),
-                "preemptions": sched.preemptions}
+                "preemptions": sched.preemptions}, {}
     cell = report_metrics(report)   # includes 'preemptions'
-    cell.update(deadlock=False, preempted_tokens=report.preempted_tokens)
+    cell.update(deadlock=False, preempted_tokens=report.preempted_tokens,
+                swap_outs=report.swap_outs, swap_ins=report.swap_ins,
+                swap_bytes_moved=report.swap_bytes_moved,
+                reclaim_swap_decisions=report.reclaim_swap_decisions,
+                reclaim_recompute_decisions=report.reclaim_recompute_decisions)
     assert sched.tokens_in_use == 0 and sched.committed_tokens == 0 \
         and sched.partial_prefill_tokens == 0, \
         "KV ledger leaked tokens after drain"
-    return cell
+    assert sched.host_tokens_in_use == 0, "host KV ledger leaked tokens"
+    streams = {r.req_id: tuple(r.output_tokens)
+               for rq in ran for r in rq.requests}
+    return cell, streams
 
 
 def main() -> None:
@@ -73,30 +95,54 @@ def main() -> None:
     caps = [int(max_fp * m) for m in ((1.2, 2.0) if args.smoke
                                       else (1.2, 2.0, 4.0, 8.0))]
 
-    cells = {}
+    dbg = args.smoke   # smoke lane runs every ledger invariant per tick
+    cells, streams = {}, {}
     for cap in caps:
         for name in SCHED_NAMES:
             for mode in MODES:
                 key = f"{name}/{mode}/cap{cap}"
-                cells[key] = run_cell(name, mode, cap, trace)
+                cells[key], streams[key] = run_cell(name, mode, cap, trace,
+                                                    debug_invariants=dbg)
                 tag = ("DEADLOCK" if cells[key]["deadlock"] else
                        f"avg {cells[key]['avg_latency_s']:8.2f}s  "
                        f"preempt {cells[key]['preemptions']:4d}")
                 print(f"[kv_pressure] {key:36s} {tag}", flush=True)
 
+    # tiering lane: the tight-cap optimistic cell again, host tier enabled —
+    # cost-based reclaim swaps instead of recompute-preempting
     tight = caps[0]
+    for name in SCHED_NAMES:
+        key = f"{name}/tiered/cap{tight}"
+        cells[key], streams[key] = run_cell(
+            name, "optimistic", tight, trace, tiering=True,
+            host_kv_cap=8 * tight, debug_invariants=dbg)
+        tag = ("DEADLOCK" if cells[key]["deadlock"] else
+               f"avg {cells[key]['avg_latency_s']:8.2f}s  "
+               f"swaps {cells[key]['swap_outs']:4d}/"
+               f"{cells[key]['swap_ins']:<4d}")
+        print(f"[kv_pressure] {key:36s} {tag}", flush=True)
+
     summary = {"max_request_footprint": max_fp, "caps": caps,
                "tight_cap": tight, "verdict": {}}
     for name in SCHED_NAMES:
         cons = cells[f"{name}/conservative/cap{tight}"]
         opti = cells[f"{name}/optimistic/cap{tight}"]
+        tier = cells[f"{name}/tiered/cap{tight}"]
         summary["verdict"][name] = {
             "conservative_avg_s": cons.get("avg_latency_s"),
             "optimistic_avg_s": opti.get("avg_latency_s"),
+            "tiered_avg_s": tier.get("avg_latency_s"),
             "optimistic_preemptions": opti["preemptions"],
-            "deadlocks": int(cons["deadlock"]) + int(opti["deadlock"]),
+            "tiered_swap_outs": tier.get("swap_outs", 0),
+            "deadlocks": (int(cons["deadlock"]) + int(opti["deadlock"])
+                          + int(tier["deadlock"])),
             "optimistic_wins": (not cons["deadlock"] and not opti["deadlock"]
                                 and opti["avg_latency_s"] < cons["avg_latency_s"]),
+            "tiering_wins": (not opti["deadlock"] and not tier["deadlock"]
+                             and tier["avg_latency_s"] < opti["avg_latency_s"]),
+            "tiering_streams_identical": (
+                streams[f"{name}/tiered/cap{tight}"]
+                == streams[f"{name}/optimistic/cap{tight}"]),
         }
         v = summary["verdict"][name]
         fmt = lambda x: "DEADLOCK" if x is None else f"{x:.2f}s"
@@ -104,6 +150,11 @@ def main() -> None:
               f"{fmt(v['conservative_avg_s'])} vs optimistic "
               f"{fmt(v['optimistic_avg_s'])} "
               f"({'WIN' if v['optimistic_wins'] else 'NO WIN'})", flush=True)
+        print(f"[kv_pressure] {name}: tiered {fmt(v['tiered_avg_s'])} vs "
+              f"recompute-only {fmt(v['optimistic_avg_s'])} "
+              f"({'WIN' if v['tiering_wins'] else 'NO WIN'}, streams "
+              f"{'identical' if v['tiering_streams_identical'] else 'DIVERGED'})",
+              flush=True)
 
     write_bench_json("kv_pressure", {"config": {
         "num_relqueries": n_rq, "rate": args.rate, "seed": args.seed,
@@ -117,8 +168,15 @@ def main() -> None:
             f"{name}: optimistic mode never preempted — cap not tight enough"
         assert v["optimistic_wins"], \
             f"{name}: optimistic did not beat conservative at cap {tight}"
-    print("KV-PRESSURE OK: optimistic+preemption beats conservative at "
-          f"cap {tight} for {', '.join(SCHED_NAMES)}")
+        assert v["tiered_swap_outs"] > 0, \
+            f"{name}: tiering never swapped — cap not tight enough"
+        assert v["tiering_streams_identical"], \
+            f"{name}: tiering altered a token stream"
+        assert v["tiering_wins"], \
+            f"{name}: tiered run did not beat recompute-only at cap {tight}"
+    print("KV-PRESSURE OK: optimistic+preemption beats conservative and "
+          f"tiered swapping beats recompute-only at cap {tight} for "
+          f"{', '.join(SCHED_NAMES)}")
 
 
 if __name__ == "__main__":

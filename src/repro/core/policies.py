@@ -49,9 +49,9 @@ class StaticPriorityScheduler(SchedulerBase):
 
     def __init__(self, limits=None, latency_model=None, prefix_cache=None,
                  kv_admission: str = "conservative",
-                 prefix_sharing: bool = False):
+                 prefix_sharing: bool = False, **kw):
         super().__init__(limits, latency_model, prefix_cache, kv_admission,
-                         prefix_sharing)
+                         prefix_sharing, **kw)
         self.estimator = StaticPriorityEstimator(self.lm, self.limits)
 
     def on_relquery_added(self, rq: RelQuery, now: float) -> None:

@@ -102,6 +102,11 @@ class DynamicPriorityUpdater:
         self.lm = latency_model
         self.limits = limits
         self.cfg = config or DPUConfig()
+        # Optional ALISE-style output-length predictor (attached by the
+        # scheduler): with history for a relQuery's template, PEM prices the
+        # remaining decode phase at the predicted output length instead of
+        # the OL(R) worst case. None = bit-identical to the unpredicted path.
+        self.predictor = None
         self._rng = random.Random(self.cfg.seed)
         self._iteration = 0
         self._last_sampled: Dict[str, int] = {}
@@ -178,13 +183,23 @@ class DynamicPriorityUpdater:
         utoks += [max(1, round(r.num_prompt_tokens * ratio))
                   + r.preserved_output_tokens for r in preempted]
         running = rq.running_requests()
+        # Swapped requests resume decoding without re-prefill once their KV
+        # returns from the host tier: they price like running requests (no
+        # prefill batches, full membership in the decode phase).
+        swapped = rq.swapped_requests()
+        inflight = running + preempted + swapped
         # remaining decode iterations: not-yet-prefilled requests need the full
         # OL; otherwise only the longest-remaining in-flight request matters
-        if waiting or not (running or preempted):
+        if waiting or not inflight:
             rem_out = rq.max_output_tokens
+            if self.predictor is not None:
+                pred = self.predictor.predict(self.predictor.key_of(rq))
+                if pred is not None:   # predicted decode work, not worst case
+                    rem_out = max(1, min(rem_out, pred))
         else:
-            rem_out = max(r.remaining_output for r in running + preempted)
-        batches = batch_decompose(utoks, rem_out, len(running), self.limits)
+            rem_out = max(r.remaining_output for r in inflight)
+        batches = batch_decompose(utoks, rem_out,
+                                  len(running) + len(swapped), self.limits)
         total = 0.0
         for b in batches:
             if b.kind == "prefill":

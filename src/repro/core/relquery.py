@@ -18,6 +18,7 @@ class RequestState(enum.Enum):
     WAITING = "waiting"
     RUNNING = "running"    # prefilled; decoding
     PREEMPTED = "preempted"  # KV reclaimed under pressure; awaiting re-prefill
+    SWAPPED = "swapped"    # KV parked on the host tier; resumes w/o re-prefill
     FINISHED = "finished"
     CANCELLED = "cancelled"  # terminal: evicted by relQuery cancellation
 
@@ -141,6 +142,9 @@ class RelQuery:
 
     def preempted_requests(self) -> List[Request]:
         return [r for r in self.requests if r.state == RequestState.PREEMPTED]
+
+    def swapped_requests(self) -> List[Request]:
+        return [r for r in self.requests if r.state == RequestState.SWAPPED]
 
     def is_finished(self) -> bool:
         return all(r.is_finished() for r in self.requests)

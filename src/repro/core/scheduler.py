@@ -27,6 +27,7 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 from repro.core.arranger import AdaptiveBatchArranger, ArrangerDecision
 from repro.core.batch import Batch
 from repro.core.latency_model import BatchLatencyModel
+from repro.core.predictor import OutputLenPredictor
 from repro.core.priority import (
     BatchLimits, DPUConfig, DynamicPriorityUpdater, PrefixCacheView,
 )
@@ -42,7 +43,12 @@ class BatchResult:
     uncached_tokens: Optional[int] = None   # engine-measured true utok
 
 
-KV_ADMISSION_MODES = ("conservative", "optimistic")
+KV_ADMISSION_MODES = ("conservative", "optimistic", "predicted")
+
+# KV bytes one token occupies (all layers, K+V). Default models OPT-13B
+# fp16: 2 (K,V) * 40 layers * 5120 hidden * 2 bytes — matches the a100_opt13b
+# latency model the cost-based reclaim weighs swap transfers against.
+KV_BYTES_PER_TOKEN = 819_200
 
 
 class SchedulerBase:
@@ -50,15 +56,59 @@ class SchedulerBase:
                  latency_model: Optional[BatchLatencyModel] = None,
                  prefix_cache: Optional[PrefixCacheView] = None,
                  kv_admission: str = "conservative",
-                 prefix_sharing: bool = False):
+                 prefix_sharing: bool = False,
+                 kv_tiering: bool = False,
+                 host_kv_cap: int = 0,
+                 swap_bandwidth_gbps: float = 32.0,
+                 kv_bytes_per_token: int = KV_BYTES_PER_TOKEN,
+                 predictor: Optional[OutputLenPredictor] = None):
         from repro.core.latency_model import a100_opt13b
         if kv_admission not in KV_ADMISSION_MODES:
             raise ValueError(f"kv_admission must be one of {KV_ADMISSION_MODES}"
                              f" (got {kv_admission!r})")
+        if kv_tiering and kv_admission == "conservative":
+            raise ValueError("kv_tiering requires a preempting admission mode "
+                             "(optimistic or predicted) — conservative "
+                             "admission never evicts, so the host tier would "
+                             "be dead weight")
+        if kv_tiering and host_kv_cap <= 0:
+            raise ValueError(f"kv_tiering requires host_kv_cap > 0 "
+                             f"(got {host_kv_cap})")
+        if kv_tiering and swap_bandwidth_gbps <= 0:
+            raise ValueError(f"swap_bandwidth_gbps must be > 0 "
+                             f"(got {swap_bandwidth_gbps})")
         self.limits = limits or BatchLimits()
         self.lm = latency_model or a100_opt13b()
         self.prefix_cache = prefix_cache
         self.kv_admission = kv_admission
+        # --- tiered KV memory (device -> host -> recompute) ---
+        self.kv_tiering = bool(kv_tiering)
+        self.host_kv_cap = int(host_kv_cap)          # host-tier cap, tokens
+        self.swap_bandwidth_bytes = float(swap_bandwidth_gbps) * 1e9
+        self.kv_bytes_per_token = int(kv_bytes_per_token)
+        self._swapped: List[Request] = []            # FCFS swap-in order
+        self.host_tokens_in_use = 0
+        self.swap_outs = 0
+        self.swap_ins = 0
+        self.swapped_out_tokens = 0
+        self.swapped_in_tokens = 0
+        self.swap_bytes_moved = 0
+        self.reclaim_swap_decisions = 0
+        self.reclaim_recompute_decisions = 0
+        # swap ops the engine must mirror onto the executor before the next
+        # dispatch: ("out" | "in", req_id, tokens), in decision order
+        self._swap_ops: List[Tuple[str, str, int]] = []
+        # per-request charged footprint: under predicted admission the charge
+        # is prediction-dependent, so releases must use the exact value that
+        # was charged, not a recomputed one
+        self._footprint_of: Dict[str, int] = {}
+        # output-length prediction (predicted admission + DPU feed). Attached
+        # only when asked for — a None predictor keeps every pre-existing
+        # scheduling path untouched.
+        if predictor is None and kv_admission == "predicted":
+            predictor = OutputLenPredictor()
+        self.predictor = predictor
+        self._tmpl_key: Dict[str, int] = {}          # rel_id -> template key
         # Prefix-sharing-aware scheduling: warm-then-follow candidate pricing
         # plus shared-block KV admission (each shared prefix block charged
         # once against limits.cap). Off by default — every sharing-off code
@@ -152,15 +202,28 @@ class SchedulerBase:
     def has_work(self) -> bool:
         return self._unfinished > 0
 
+    def swapped_requests(self) -> List[Request]:
+        return list(self._swapped)
+
+    def swapped_rqs(self) -> List[RelQuery]:
+        seen, out = set(), []
+        for r in self._swapped:
+            if r.rel_id not in seen:
+                seen.add(r.rel_id)
+                out.append(self.relqueries[r.rel_id])
+        return out
+
     def queue_depth(self) -> int:
-        """Outstanding requests (waiting + running) without copying the
-        queues — the router polls this on every arrival."""
-        return sum(len(lst) for lst in self._waiting_of.values()) + len(self._running)
+        """Outstanding requests (waiting + running + swapped) without copying
+        the queues — the router polls this on every arrival."""
+        return (sum(len(lst) for lst in self._waiting_of.values())
+                + len(self._running) + len(self._swapped))
 
     def stuck_rel_ids(self) -> List[str]:
         """relQueries with queued work (used in deadlock diagnostics)."""
         ids = {rel_id for rel_id, lst in self._waiting_of.items() if lst}
         ids.update(r.rel_id for r in self._running)
+        ids.update(r.rel_id for r in self._swapped)
         return sorted(ids)
 
     # ------------------------------------------------------------- candidates
@@ -198,9 +261,29 @@ class SchedulerBase:
                    - max(done, est_cached))
 
     def _kv_footprint(self, r: Request) -> int:
-        """Worst-case KV a request may ever hold. The prompt+OL bound also
-        covers preempted restarts: preserved tokens count toward OL."""
-        return r.num_prompt_tokens + r.max_output_tokens
+        """KV a request is charged against the cap for. Conservative and
+        optimistic admission charge the worst case (prompt+OL — the bound
+        also covers preempted restarts: preserved tokens count toward OL).
+        Predicted admission charges ``prompt + predicted_OL`` instead,
+        clamped to at least what the request already holds plus one token
+        (a request can't be charged below its resident KV) and never above
+        the worst case. With no history the predictor abstains and the
+        worst case applies."""
+        worst = r.num_prompt_tokens + r.max_output_tokens
+        if self.kv_admission != "predicted" or self.predictor is None:
+            return worst
+        pred = self.predictor.predict(self._template_key(r))
+        if pred is None:
+            return worst
+        expected = r.num_prompt_tokens + max(pred, len(r.output_tokens) + 1)
+        return min(worst, max(expected, r.total_tokens + 1))
+
+    def _template_key(self, r: Request) -> int:
+        key = self._tmpl_key.get(r.rel_id)
+        if key is None:
+            key = self.predictor.key_of(self.relqueries[r.rel_id])
+            self._tmpl_key[r.rel_id] = key
+        return key
 
     # ------------------------------------------------------------- prefix sharing
     def prompt_block_keys(self, r: Request) -> Tuple[int, ...]:
@@ -312,14 +395,33 @@ class SchedulerBase:
         """Tokens the admission check must assume resident. Conservative:
         worst-case commitment of every started request. Optimistic: the KV
         actually held right now (completed prefills + generation so far +
-        landed chunks). With prefix sharing the raw per-request charges are
-        kept unchanged and the ledger's discount — tokens counted more than
-        once because they live in shared blocks — is subtracted, so shared
-        blocks count once against ``limits.cap`` in both modes."""
+        landed chunks). Predicted: the larger of the predicted commitment and
+        the resident KV — a request that outgrows its predicted footprint
+        keeps counting in full, so under-predictions throttle admission
+        instead of silently overcommitting (preemption is the safety valve
+        past that). With prefix sharing the raw per-request charges are kept
+        unchanged and the ledger's discount — tokens counted more than once
+        because they live in shared blocks — is subtracted, so shared blocks
+        count once against ``limits.cap`` in every mode. Swapped requests
+        hold nothing on device and contribute to no term here — their KV is
+        accounted in ``host_tokens_in_use``."""
         if self.kv_admission == "conservative":
             raw = self.committed_tokens
-        else:
+        elif self.kv_admission == "optimistic":
             raw = self.tokens_in_use + self.partial_prefill_tokens
+        else:
+            raw = max(self.committed_tokens,
+                      self.tokens_in_use + self.partial_prefill_tokens)
+        if self._shared_ledger is not None:
+            return raw - self._shared_ledger.discount
+        return raw
+
+    def _resident_demand(self) -> int:
+        """KV physically on the device right now (the optimistic measure,
+        mode-independent) — what headroom preemption and swap-in gating must
+        check against: committed-but-unwritten footprint can't overflow the
+        device, resident KV can."""
+        raw = self.tokens_in_use + self.partial_prefill_tokens
         if self._shared_ledger is not None:
             return raw - self._shared_ledger.discount
         return raw
@@ -327,16 +429,17 @@ class SchedulerBase:
     def _admission_need(self, r: Request,
                         pending_keys: Optional[Set[int]] = None) -> int:
         """Cap headroom required to schedule the rest of ``r``'s prefill.
-        Conservative: the full footprint, charged once (already-started
-        requests are pre-committed). Optimistic: only the KV this prefill
-        pass will write, plus the decode token emitted on completion. Under
-        prefix sharing both shrink by the prefix already charged by siblings
-        — those blocks are resident once no matter how many requests share
-        them. A request already charged (mid-chunk) gets no discount: its own
-        chain is what the ledger holds, and its remaining chunks are raw."""
+        Conservative/predicted: the full (worst-case/predicted) footprint,
+        charged once (already-started requests are pre-committed).
+        Optimistic: only the KV this prefill pass will write, plus the decode
+        token emitted on completion. Under prefix sharing both shrink by the
+        prefix already charged by siblings — those blocks are resident once
+        no matter how many requests share them. A request already charged
+        (mid-chunk) gets no discount: its own chain is what the ledger holds,
+        and its remaining chunks are raw."""
         shared = 0 if r.req_id in self._kv_charged else \
             self._shared_resident_tokens(r, pending_keys)
-        if self.kv_admission == "conservative":
+        if self.kv_admission != "optimistic":
             if r.prefilled_tokens:
                 return 0
             return max(0, self._kv_footprint(r) - shared)
@@ -453,7 +556,7 @@ class SchedulerBase:
                         len(decode_reqs) + len(prefill_reqs) >= self.limits.max_num_seqs:
                     break
                 remaining = r.prefill_target_tokens - r.prefilled_tokens
-                if self.kv_admission == "conservative":
+                if self.kv_admission != "optimistic":
                     needed = self._admission_need(r, pending_keys)
                     if self.kv_demand() + full_tok_sum + needed > self.limits.cap:
                         budget = 0
@@ -485,8 +588,9 @@ class SchedulerBase:
                     if completes:
                         warm_keys.update(keys)
                     # ledger membership mirrors _kv_acquire timing: first
-                    # chunk (conservative) vs prompt completion (optimistic)
-                    if completes or self.kv_admission == "conservative":
+                    # chunk (conservative/predicted) vs prompt completion
+                    # (optimistic)
+                    if completes or self.kv_admission != "optimistic":
                         pending_keys.update(keys)
                 else:
                     u = self.estimated_chunk_utok(r, chunk)
@@ -516,22 +620,38 @@ class SchedulerBase:
         if mine:
             self._running = [r for r in self._running if r.rel_id != rel_id]
             cancelled.extend(mine)
+        mine_swapped = [r for r in self._swapped if r.rel_id == rel_id]
+        if mine_swapped:
+            self._swapped = [r for r in self._swapped if r.rel_id != rel_id]
+            cancelled.extend(mine_swapped)
         for r in cancelled:
             # RUNNING requests hold prompt + generated tokens in the KV cache;
-            # requests mid-chunk hold their landed chunks; any request past its
-            # first prefill chunk holds a full-footprint commitment (mirrors
-            # complete_batch / _finish_request accounting). PREEMPTED requests
-            # hold nothing — their KV was reclaimed at preemption.
+            # requests mid-chunk hold their landed chunks; SWAPPED requests
+            # hold host-tier KV only (their committed charge was dropped at
+            # swap-out, and the executor frees their host stash on release).
+            # Any charged request releases the exact footprint it was charged
+            # (mirrors complete_batch / _finish_request accounting). PREEMPTED
+            # requests hold nothing — their KV was reclaimed at preemption.
             if r.state == RequestState.RUNNING:
                 self.tokens_in_use -= r.total_tokens
+            elif r.state == RequestState.SWAPPED:
+                self.host_tokens_in_use -= r.total_tokens
             elif r.prefilled_tokens > 0:
                 self.partial_prefill_tokens -= r.prefilled_tokens
-            if r.prefilled_tokens > 0:
-                self.committed_tokens -= self._kv_footprint(r)
+            fp = self._footprint_of.pop(r.req_id, None)
+            if fp is not None:
+                self.committed_tokens -= fp
             self._kv_release(r)
             self._prompt_keys.pop(r.req_id, None)
             r.state = RequestState.CANCELLED
             r.finish_time = now
+        if self._swap_ops:
+            # drop not-yet-drained swap ops for the cancelled requests: the
+            # engine releases their executor state directly, so mirroring a
+            # stale op would copy KV for a request that no longer exists
+            gone = {r.req_id for r in cancelled}
+            self._swap_ops = [op for op in self._swap_ops
+                              if op[1] not in gone]
         rq.note_phase_change()
         rq.cancel_time = now
         self._unfinished -= 1
@@ -564,7 +684,8 @@ class SchedulerBase:
             self.preempted_tokens += r.prefilled_tokens
         else:
             return                      # nothing on the device: no-op
-        self.committed_tokens -= self._kv_footprint(r)
+        self.committed_tokens -= self._footprint_of.pop(
+            r.req_id, self._kv_footprint(r))
         # the victim's ledger charge is dropped, but blocks its siblings still
         # reference stay discounted — preemption never frees shared KV twice
         self._kv_release(r)
@@ -577,6 +698,107 @@ class SchedulerBase:
         """req_ids preempted since the last drain — the engine frees their
         executor-side decode slots."""
         out, self._preempt_release = self._preempt_release, []
+        return out
+
+    # ------------------------------------------------------------- KV tiering
+    def _swap_cost_s(self, tokens: int) -> float:
+        """Modeled wall time to move ``tokens`` of KV device->host AND back
+        (a swap is only worth taking if the round trip beats re-prefill)."""
+        return 2.0 * tokens * self.kv_bytes_per_token / self.swap_bandwidth_bytes
+
+    def _should_swap(self, r: Request) -> bool:
+        """Per-victim reclaim decision: swap beats recompute when moving the
+        victim's KV over the host link (both ways) costs less than
+        re-prefilling ``prompt + generation so far`` at the measured prefill
+        rate — and the host tier has room. Mid-chunk victims always
+        recompute: their partial chunks are not a resumable sequence."""
+        if not self.kv_tiering or r.state != RequestState.RUNNING:
+            return False
+        tokens = r.total_tokens
+        if self.host_tokens_in_use + tokens > self.host_kv_cap:
+            return False
+        recompute_s = self.lm.prefill_time(
+            r.num_prompt_tokens + len(r.output_tokens))
+        return self._swap_cost_s(tokens) < recompute_s
+
+    def _reclaim(self, r: Request, now: float) -> None:
+        """Reclaim a victim's device KV: swap to the host tier when the cost
+        model favors it, recompute-preempt otherwise."""
+        if self._should_swap(r):
+            self.reclaim_swap_decisions += 1
+            self.swap_out_request(r, now)
+        else:
+            if self.kv_tiering and r.state == RequestState.RUNNING:
+                self.reclaim_recompute_decisions += 1
+            self.preempt_request(r, now)
+
+    def swap_out_request(self, r: Request, now: float) -> None:
+        """Park a RUNNING victim's KV on the host tier. Unlike recompute
+        preemption the request keeps its prefill progress and outputs: it
+        resumes decoding (state SWAPPED -> RUNNING) once its blocks are
+        swapped back — no re-prefill pass. The engine mirrors the move onto
+        the executor via ``drain_swap_ops``."""
+        rq = self.relqueries[r.rel_id]
+        assert r.state == RequestState.RUNNING, r.state
+        tokens = r.total_tokens
+        self.tokens_in_use -= tokens
+        self.committed_tokens -= self._footprint_of.pop(
+            r.req_id, self._kv_footprint(r))
+        self._running.remove(r)
+        self._kv_release(r)
+        r.state = RequestState.SWAPPED
+        rq.note_phase_change()
+        self._swapped.append(r)
+        self.host_tokens_in_use += tokens
+        self.swap_outs += 1
+        self.swapped_out_tokens += tokens
+        self.swap_bytes_moved += tokens * self.kv_bytes_per_token
+        self._swap_ops.append(("out", r.req_id, tokens))
+
+    def _swap_in_request(self, r: Request, now: float) -> None:
+        rq = self.relqueries[r.rel_id]
+        assert r.state == RequestState.SWAPPED, r.state
+        tokens = r.total_tokens
+        self._swapped.remove(r)
+        self.host_tokens_in_use -= tokens
+        r.state = RequestState.RUNNING
+        rq.note_phase_change()
+        self._running.append(r)
+        self.tokens_in_use += tokens
+        fp = self._kv_footprint(r)
+        self._footprint_of[r.req_id] = fp
+        self.committed_tokens += fp
+        self._kv_acquire(r)
+        self.swap_ins += 1
+        self.swapped_in_tokens += tokens
+        self.swap_bytes_moved += tokens * self.kv_bytes_per_token
+        self._swap_ops.append(("in", r.req_id, tokens))
+
+    def _maybe_swap_in(self, now: float) -> None:
+        """Bring swapped requests back to device, FCFS, while the *resident*
+        measure plus one decode step fits under the cap. Progress guarantee:
+        with nothing running and nothing waiting, the head swaps in as long
+        as it alone fits the cap — a replica whose whole population is on
+        the host tier must not idle forever."""
+        while self._swapped:
+            r = self._swapped[0]
+            tokens = r.total_tokens
+            growth = min(len(self._running) + 1, self.limits.max_num_seqs)
+            fits = (len(self._running) < self.limits.max_num_seqs
+                    and self._resident_demand() + tokens + growth
+                    <= self.limits.cap)
+            force = (not self._running
+                     and not any(self._waiting_of.values())
+                     and self._resident_demand() + tokens <= self.limits.cap)
+            if not (fits or force):
+                break
+            self._swap_in_request(r, now)
+
+    def drain_swap_ops(self) -> List[Tuple[str, str, int]]:
+        """Swap decisions since the last drain, in order — the engine mirrors
+        each onto the executor (device<->host copies) before dispatching the
+        next batch."""
+        out, self._swap_ops = self._swap_ops, []
         return out
 
     def _pick_preemption_victim(self) -> Optional[Request]:
@@ -595,17 +817,22 @@ class SchedulerBase:
         return None
 
     def preempt_for_headroom(self, now: float) -> None:
-        """Optimistic-mode pressure valve, run before every batch choice:
-        while the next decode step over the running queue would exceed the
-        cap, preempt victims until it fits (or nothing is left running)."""
+        """Pressure valve for the preempting admission modes, run before
+        every batch choice: while the next decode step over the running queue
+        would exceed the cap, reclaim victims (swap or recompute, per the
+        cost model) until it fits (or nothing is left running). The trigger
+        is the *resident* measure — identical to ``kv_demand()`` under
+        optimistic admission; under predicted admission the committed term is
+        prediction headroom, not device bytes, so it must not trip the
+        valve."""
         while self._running:
             growth = min(len(self._running), self.limits.max_num_seqs)
-            if self.kv_demand() + growth <= self.limits.cap:
+            if self._resident_demand() + growth <= self.limits.cap:
                 break
             victim = self._pick_preemption_victim()
             if victim is None:
                 break
-            self.preempt_request(victim, now)
+            self._reclaim(victim, now)
 
     def preempt_for_progress(self, now: float) -> List[Request]:
         """Engine-deadlock escape hatch: when no batch is schedulable but work
@@ -618,14 +845,14 @@ class SchedulerBase:
         of one re-sort per victim. Returns the victims ([] when nothing can be
         preempted — conservative mode, or no KV left to reclaim: a genuine
         deadlock)."""
-        if self.kv_admission != "optimistic":
+        if self.kv_admission == "conservative":
             return []
         victims: List[Request] = []
         while self.kv_demand() + self._progress_need() > self.limits.cap:
             victim = self._pick_preemption_victim() or self._pick_chunk_victim()
             if victim is None:
                 break
-            self.preempt_request(victim, now)
+            self._reclaim(victim, now)
             victims.append(victim)
         if not victims:
             # Cap pressure wasn't the (measurable) blocker — fall back to the
@@ -634,7 +861,7 @@ class SchedulerBase:
             victim = self._pick_preemption_victim() or self._pick_chunk_victim()
             if victim is None:
                 return []
-            self.preempt_request(victim, now)
+            self._reclaim(victim, now)
             victims.append(victim)
         return victims
 
@@ -669,10 +896,13 @@ class SchedulerBase:
 
     # ------------------------------------------------------------- lifecycle
     def schedule(self, now: float) -> Optional[Batch]:
-        """Template: refresh priorities, relieve KV pressure (optimistic
-        admission), then let the policy pick this iteration's batch."""
+        """Template: refresh priorities, resume swapped requests that fit
+        again (tiering), relieve KV pressure (preempting admission modes),
+        then let the policy pick this iteration's batch."""
         self.refresh_priorities(now)
-        if self.kv_admission == "optimistic":
+        if self.kv_tiering:
+            self._maybe_swap_in(now)
+        if self.kv_admission != "conservative":
             self.preempt_for_headroom(now)
         return self.choose_batch(now)
 
@@ -692,8 +922,10 @@ class SchedulerBase:
                 rq.first_prefill_start = start_ts
             before = r.prefilled_tokens
             if before == 0:   # first chunk (or whole prompt) lands
-                self.committed_tokens += self._kv_footprint(r)
-                if self.kv_admission == "conservative":
+                fp = self._kv_footprint(r)
+                self._footprint_of[r.req_id] = fp
+                self.committed_tokens += fp
+                if self.kv_admission != "optimistic":
                     self._kv_acquire(r)   # leaders registered before followers
             target = r.prefill_target_tokens
             r.prefilled_tokens = min(target, before + batch.chunk_of(r))
@@ -754,9 +986,12 @@ class SchedulerBase:
         if r in self._running:
             self._running.remove(r)
         self.tokens_in_use -= r.total_tokens
-        self.committed_tokens -= self._kv_footprint(r)
+        self.committed_tokens -= self._footprint_of.pop(
+            r.req_id, self._kv_footprint(r))
         self._kv_release(r)
         self._prompt_keys.pop(r.req_id, None)
+        if self.predictor is not None:
+            self.predictor.observe(self._template_key(r), len(r.output_tokens))
 
     def _maybe_finish_relquery(self, rq: RelQuery, end_ts: float) -> None:
         if rq.finish_time is None and rq.is_finished():
@@ -784,6 +1019,8 @@ class SchedulerBase:
             reqs[r.req_id] = r
         for r in self._running:
             reqs[r.req_id] = r
+        for r in self._swapped:             # a speculative swap-in target
+            reqs[r.req_id] = r
         for lst in self._waiting_of.values():
             for r in lst:
                 if r.prefilled_tokens:      # mid-chunk: a chunk-victim target
@@ -794,6 +1031,13 @@ class SchedulerBase:
                         self._unfinished, self.preemptions,
                         self.preempted_tokens, self.missing_decode_outputs,
                         self.shared_tokens_saved, self._queue_version),
+            "tiering": (list(self._swapped), list(self._swap_ops),
+                        self.host_tokens_in_use, self.swap_outs,
+                        self.swap_ins, self.swapped_out_tokens,
+                        self.swapped_in_tokens, self.swap_bytes_moved,
+                        self.reclaim_swap_decisions,
+                        self.reclaim_recompute_decisions),
+            "footprints": dict(self._footprint_of),
             "waiting_of": {k: list(v) for k, v in self._waiting_of.items()},
             "running": list(self._running),
             "order_cache": dict(self._order_cache),
@@ -813,6 +1057,8 @@ class SchedulerBase:
             "extra": self._checkpoint_extra(),
         }
         self._spec_log = []
+        if self.predictor is not None:
+            self.predictor.checkpoint()
         return cp
 
     def rollback(self, cp: dict) -> None:
@@ -824,10 +1070,18 @@ class SchedulerBase:
                 self._shared_ledger.acquire(keys)
                 self.prefix_cache.acquire_blocks(keys)
         self._spec_log = None
+        if self.predictor is not None:
+            self.predictor.rollback()
         (self.tokens_in_use, self.committed_tokens, self.partial_prefill_tokens,
          self.iteration, self._unfinished, self.preemptions,
          self.preempted_tokens, self.missing_decode_outputs,
          self.shared_tokens_saved, self._queue_version) = cp["scalars"]
+        (self._swapped, self._swap_ops, self.host_tokens_in_use,
+         self.swap_outs, self.swap_ins, self.swapped_out_tokens,
+         self.swapped_in_tokens, self.swap_bytes_moved,
+         self.reclaim_swap_decisions,
+         self.reclaim_recompute_decisions) = cp["tiering"]
+        self._footprint_of = cp["footprints"]
         self._waiting_of = cp["waiting_of"]
         self._running = cp["running"]
         self._order_cache = cp["order_cache"]
@@ -858,6 +1112,8 @@ class SchedulerBase:
         """Commit the speculative window: keep its mutations, close the
         journal."""
         self._spec_log = None
+        if self.predictor is not None:
+            self.predictor.discard()
 
     def _checkpoint_extra(self):
         """Policy hook: snapshot subclass state a speculative window touches."""
@@ -878,10 +1134,14 @@ class RelServeScheduler(SchedulerBase):
     def __init__(self, limits=None, latency_model=None, prefix_cache=None,
                  dpu_config: Optional[DPUConfig] = None,
                  kv_admission: str = "conservative",
-                 prefix_sharing: bool = False):
+                 prefix_sharing: bool = False, **kw):
         super().__init__(limits, latency_model, prefix_cache, kv_admission,
-                         prefix_sharing)
+                         prefix_sharing, **kw)
         self.dpu = DynamicPriorityUpdater(self.lm, self.limits, dpu_config)
+        # ALISE-style feed: with a predictor attached, the DPU's
+        # remaining-work estimate uses predicted output lengths instead of
+        # the OL(R) worst case (None keeps the estimate bit-identical)
+        self.dpu.predictor = self.predictor
         self.aba = AdaptiveBatchArranger(self.lm)
         # wall-clock overhead instrumentation (paper Table 6)
         self.dpu_time = 0.0
@@ -918,6 +1178,10 @@ class RelServeScheduler(SchedulerBase):
         make runs irreproducible across processes)."""
         out = self.running_rqs()
         seen = {rq.rel_id for rq in out}
+        for rq in self.swapped_rqs():
+            if rq.rel_id not in seen:
+                seen.add(rq.rel_id)
+                out.append(rq)
         for rel_id, lst in self._waiting_of.items():
             if lst and rel_id not in seen:
                 seen.add(rel_id)

@@ -105,6 +105,15 @@ class ServiceReport:
     # execution, and planner wall-clock (stamped by PlanExecutor.snapshot)
     deduped_requests: int = 0
     plan_time: float = 0.0
+    # KV-tiering subsystem: device<->host swap traffic and the cost model's
+    # per-victim reclaim decisions (all zero with tiering off)
+    swap_outs: int = 0
+    swap_ins: int = 0
+    swapped_out_tokens: int = 0
+    swapped_in_tokens: int = 0
+    swap_bytes_moved: int = 0
+    reclaim_swap_decisions: int = 0
+    reclaim_recompute_decisions: int = 0
 
     @property
     def avg_latency(self) -> float:
@@ -152,6 +161,13 @@ def merge_reports(reports: Sequence[ServiceReport]) -> ServiceReport:
         merged.shared_kv_tokens += rep.shared_kv_tokens
         merged.deduped_requests += rep.deduped_requests
         merged.plan_time += rep.plan_time
+        merged.swap_outs += rep.swap_outs
+        merged.swap_ins += rep.swap_ins
+        merged.swapped_out_tokens += rep.swapped_out_tokens
+        merged.swapped_in_tokens += rep.swapped_in_tokens
+        merged.swap_bytes_moved += rep.swap_bytes_moved
+        merged.reclaim_swap_decisions += rep.reclaim_swap_decisions
+        merged.reclaim_recompute_decisions += rep.reclaim_recompute_decisions
     merged.events.sort(key=lambda e: (e.start, e.replica))
     merged.cancelled_rel_ids.sort()
     merged.prefix_hit_ratio = (hit_tokens / merged.prefix_lookup_tokens
@@ -163,7 +179,8 @@ class EngineCore:
     """One serving replica: scheduler + executor behind a step interface."""
 
     def __init__(self, scheduler: SchedulerBase, executor, replica_id: int = 0,
-                 record_events: bool = True, engine_loop: str = "serial"):
+                 record_events: bool = True, engine_loop: str = "serial",
+                 debug_invariants: bool = False):
         if engine_loop not in ENGINE_LOOPS:
             raise ValueError(f"engine_loop must be one of {ENGINE_LOOPS} "
                              f"(got {engine_loop!r})")
@@ -175,6 +192,9 @@ class EngineCore:
         self.replica_id = replica_id
         self.record_events = record_events
         self.engine_loop = engine_loop
+        # per-tick ledger/block-pool consistency checks (off by default —
+        # O(resident blocks) per tick; benchmarks turn it on under --smoke)
+        self.debug_invariants = debug_invariants
         # finish-prediction rule for the speculative window: the simulated
         # executor terminates at the trace's sim_output_len; real executors
         # run to max_output_tokens unless a sampled EOS lands (unpredictable
@@ -234,8 +254,9 @@ class EngineCore:
         batch = self._acquire_batch(now)
         if batch is None:
             return None
+        swap_s = self._apply_swaps()
         duration, result = self.executor.execute(batch, now)
-        start, end = now, now + duration
+        start, end = now, now + duration + swap_s
         self.scheduler.complete_batch(batch, result, start, end)
         return self._finish_tick(batch, result, start, end)
 
@@ -260,10 +281,14 @@ class EngineCore:
             batch = self._acquire_batch(now)
             if batch is None:
                 return None
+        # swaps the schedule decided on (speculative ones included — a
+        # committed plan's journal survived, a flushed plan's was rolled
+        # back) land on the device before the batch that relies on them
+        swap_s = self._apply_swaps()
         inflight = self.executor.dispatch(batch, now)
         spec = self._speculate(batch, now)
         duration, result = self.executor.wait(inflight)
-        start, end = now, now + duration
+        start, end = now, now + duration + swap_s
         if spec is not None and self._prediction_matches(spec["predicted"],
                                                          result):
             self._commit_speculation(spec, batch, result, start, end)
@@ -296,8 +321,51 @@ class EngineCore:
             batch = self._schedule(now, retry=True)
         return batch, False
 
+    def _apply_swaps(self) -> float:
+        """Mirror the scheduler's swap decisions onto the executor *before*
+        the next dispatch: a swap-out must free device KV before the batch
+        that was admitted into that headroom runs, and a swap-in must restore
+        it before the request decodes. Returns the seconds of swap transfer
+        the executor charges to this tick (0.0 for real executors, which
+        overlap the copies with dispatch/wait; the simulated executor models
+        the transfer at its configured bandwidth)."""
+        ops = self.scheduler.drain_swap_ops()
+        if not ops:
+            return 0.0
+        out = getattr(self.executor, "swap_out", None)
+        inn = getattr(self.executor, "swap_in", None)
+        swap_s = 0.0
+        for kind, req_id, tokens in ops:
+            hook = out if kind == "out" else inn
+            if hook is not None:
+                swap_s += hook(req_id, tokens)
+        return swap_s
+
+    def _check_invariants(self) -> None:
+        """Per-tick consistency sweep (``debug_invariants``): scheduler token
+        ledgers stay non-negative and within cap-accounting bounds, the
+        shared-prefix ledger's discount matches its refcounts, and any real
+        block pool conserves device+host blocks exactly."""
+        s = self.scheduler
+        assert s.tokens_in_use >= 0, f"tokens_in_use={s.tokens_in_use}"
+        assert s.committed_tokens >= 0, f"committed_tokens={s.committed_tokens}"
+        assert s.partial_prefill_tokens >= 0
+        host = getattr(s, "host_tokens_in_use", 0)
+        assert host >= 0, f"host_tokens_in_use={host}"
+        cap = getattr(s, "host_kv_cap", 0)
+        if getattr(s, "kv_tiering", False):
+            assert host <= cap, f"host tier over cap: {host} > {cap}"
+        ledger = getattr(s, "_shared_ledger", None)
+        if ledger is not None:
+            ledger.check_invariants()
+        bm = getattr(self.executor, "bm", None)
+        if bm is not None:
+            bm.check_invariants()
+
     def _finish_tick(self, batch: Batch, result: BatchResult, start: float,
                      end: float) -> BatchEvent:
+        if self.debug_invariants:
+            self._check_invariants()
         self.iterations += 1
         event = BatchEvent(batch.kind, start, end, batch.num_requests,
                            batch.uncached_tokens, batch.rel_ids(),
@@ -510,6 +578,16 @@ class EngineCore:
             missing_decode_outputs=getattr(self.scheduler,
                                            "missing_decode_outputs", 0),
             shared_kv_tokens=getattr(self.scheduler, "shared_tokens_saved", 0),
+            swap_outs=getattr(self.scheduler, "swap_outs", 0),
+            swap_ins=getattr(self.scheduler, "swap_ins", 0),
+            swapped_out_tokens=getattr(self.scheduler, "swapped_out_tokens", 0),
+            swapped_in_tokens=getattr(self.scheduler, "swapped_in_tokens", 0),
+            swap_bytes_moved=getattr(self.scheduler, "swap_bytes_moved", 0),
+            reclaim_swap_decisions=getattr(self.scheduler,
+                                           "reclaim_swap_decisions", 0),
+            reclaim_recompute_decisions=getattr(self.scheduler,
+                                                "reclaim_recompute_decisions",
+                                                0),
         )
 
 
@@ -517,8 +595,9 @@ class ServingEngine:
     """Single-replica trace driver built on ``EngineCore``."""
 
     def __init__(self, scheduler: SchedulerBase, executor,
-                 engine_loop: str = "serial"):
-        self.core = EngineCore(scheduler, executor, engine_loop=engine_loop)
+                 engine_loop: str = "serial", debug_invariants: bool = False):
+        self.core = EngineCore(scheduler, executor, engine_loop=engine_loop,
+                               debug_invariants=debug_invariants)
 
     @property
     def scheduler(self) -> SchedulerBase:

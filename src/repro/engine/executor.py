@@ -181,6 +181,12 @@ class RealExecutor(_ExecutorBase):
         self._decode_fn = None
         self._decode_jit = jax.jit(model.decode_step, donate_argnums=(1,))
         self._compile_s = 0.0     # compile time to subtract from this batch
+        # host KV tier: req_id -> (request, slot position, stashed cache
+        # slice). Slices start as device arrays with an async device->host
+        # copy issued at swap-out; the next wait() materializes them to
+        # numpy, so the transfer overlaps the in-flight batch's compute.
+        self._host_stash: Dict[str, Tuple[Request, int, object]] = {}
+        self._pending_host: List[str] = []
 
     # ------------------------------------------------------------------ slots
     def _alloc_slot(self, req: Request) -> int:
@@ -197,10 +203,86 @@ class RealExecutor(_ExecutorBase):
             self.slots[i] = None
 
     def release_request(self, req_id: str) -> None:
-        """Free executor-side state held for a request (its decode slot).
-        Called by the engine on cancellation/preemption; unknown req_ids are
-        a no-op."""
+        """Free executor-side state held for a request (its decode slot
+        and/or host-tier stash). Called by the engine on cancellation/
+        preemption; unknown req_ids are a no-op."""
         self._free_slot(req_id)
+        self._host_stash.pop(req_id, None)
+
+    # --------------------------------------------------------------- swapping
+    def _slot_axis(self, arr) -> Optional[int]:
+        """First axis carrying the per-slot dimension (same convention as
+        ``_write_slot_cache``'s placement search); None for scalar-like cache
+        entries shared by all slots."""
+        for ax in range(arr.ndim):
+            if arr.shape[ax] == self.max_slots:
+                return ax
+        return None
+
+    def swap_out(self, req_id: str, tokens: int) -> float:
+        """Stash ``req_id``'s dense KV slot on the host and free the slot.
+        The device->host copy is issued async here and completed by the next
+        ``wait()`` — it rides under the dispatched batch's compute, so the
+        returned extra-seconds charge is 0.0. Unknown req_ids (already
+        released, e.g. cancelled between the swap decision and its
+        application) are a no-op."""
+        i = self._slot_of.get(req_id)
+        if i is None:
+            return 0.0
+        slot = self.slots[i]
+
+        def take(leaf):
+            ax = self._slot_axis(leaf)
+            if ax is None:
+                return "skip"   # string sentinel keeps the pytree structure
+            idx = [slice(None)] * leaf.ndim
+            idx[ax] = slice(i, i + 1)
+            piece = leaf[tuple(idx)]
+            copy = getattr(piece, "copy_to_host_async", None)
+            if copy is not None:
+                copy()
+            return piece
+
+        stash = jax.tree.map(take, self.cache)
+        self._host_stash[req_id] = (slot.req, slot.position, stash)
+        self._pending_host.append(req_id)
+        self._free_slot(req_id)
+        return 0.0
+
+    def swap_in(self, req_id: str, tokens: int) -> float:
+        """Restore a stashed request into a fresh slot (host->device write).
+        The request resumes decoding at its stashed position — no re-prefill."""
+        entry = self._host_stash.pop(req_id, None)
+        if entry is None:
+            return 0.0
+        req, position, stash = entry
+        i = self._alloc_slot(req)
+
+        def put(dst, src):
+            if isinstance(src, str):
+                return dst
+            ax = self._slot_axis(dst)
+            idx = [slice(None)] * dst.ndim
+            idx[ax] = slice(i, i + 1)
+            return dst.at[tuple(idx)].set(jnp.asarray(src).astype(dst.dtype))
+
+        self.cache = jax.tree.map(put, self.cache, stash)
+        self.slots[i].position = position
+        return 0.0
+
+    def _materialize_host_stash(self) -> None:
+        """Finish pending device->host stash transfers (called from ``wait``,
+        after the batch's own blocking transfer — by then the async copies
+        have landed and ``np.asarray`` is a cheap view materialization)."""
+        for req_id in self._pending_host:
+            entry = self._host_stash.get(req_id)
+            if entry is None:
+                continue    # released (cancel) before materialization
+            req, position, stash = entry
+            stash = jax.tree.map(
+                lambda x: x if isinstance(x, str) else np.asarray(x), stash)
+            self._host_stash[req_id] = (req, position, stash)
+        self._pending_host = []
 
     # ------------------------------------------------------------------ prefill
     def _prefill_issue(self, req: Request) -> Tuple[object, int]:
@@ -377,6 +459,7 @@ class RealExecutor(_ExecutorBase):
                     self._free_slot(r.req_id)
             decode_dur += _time.perf_counter() - t1
             self.decode_samples.append((len(inflight.decode_reqs), decode_dur))
+        self._materialize_host_stash()
         return prefill_dur + decode_dur, BatchResult(outputs)
 
     def execute(self, batch: Batch, now: float) -> Tuple[float, BatchResult]:
@@ -403,7 +486,8 @@ class PagedRealExecutor(_ExecutorBase):
                  prefix_cache: Optional[PrefixCache] = None,
                  greedy: bool = True, attn_impl: Optional[str] = None,
                  prefill_attn: Optional[str] = None,
-                 share_prefix_blocks: bool = False):
+                 share_prefix_blocks: bool = False,
+                 num_host_blocks: int = 0):
         if not getattr(model, "supports_paged", lambda: False)():
             raise NotImplementedError(
                 f"model {model.cfg.name!r} does not support the paged KV "
@@ -425,9 +509,17 @@ class PagedRealExecutor(_ExecutorBase):
         self.scratch_block = num_blocks          # pools hold one extra page
         self.max_blocks_per_seq = -(-max_len // block_size)
         self.share_prefix_blocks = share_prefix_blocks
-        self.bm = BlockManager(num_blocks, block_size=block_size)
+        self.num_host_blocks = num_host_blocks
+        self.bm = BlockManager(num_blocks, block_size=block_size,
+                               num_host_blocks=num_host_blocks)
         self.pools = model.init_paged_pools(num_blocks + 1, block_size)
         self._active: Dict[str, Request] = {}
+        # host KV tier: req_id -> (request, {"k": blocks, "v": blocks}) with
+        # blocks gathered along the pool's block axis in table order. Device
+        # arrays with an async device->host copy at swap-out, numpy after the
+        # next wait() materializes them (transfer overlapped with compute).
+        self._host_stash: Dict[str, Tuple[Request, Dict[str, object]]] = {}
+        self._pending_host: List[str] = []
         self._prefill_fn: Dict[Tuple[int, int], object] = {}
         self._scatter_fn: Dict[Tuple[int, int], object] = {}
         self._decode_fn: Dict[Tuple[int, int], object] = {}
@@ -457,9 +549,65 @@ class PagedRealExecutor(_ExecutorBase):
     def release_request(self, req_id: str) -> None:
         """Free the request's blocks (cancellation/preemption): real paged
         reclamation — siblings still referencing shared prefix blocks keep
-        them alive; only the last reference returns a block to the free list."""
-        if self._active.pop(req_id, None) is not None:
+        them alive; only the last reference returns a block to the free list.
+        Frees whichever tier(s) hold the request — a swapped request's host
+        blocks and stash go too."""
+        known = self._active.pop(req_id, None) is not None
+        known = (self._host_stash.pop(req_id, None) is not None) or known
+        if known:
             self.bm.free(req_id)
+
+    # --------------------------------------------------------------- swapping
+    def swap_out(self, req_id: str, tokens: int) -> float:
+        """Move ``req_id``'s blocks to the host tier per the BlockManager's
+        copy plan. Every block is gathered (shared prefix blocks included —
+        the host image is self-contained) before the manager drops the device
+        references, so a block a sibling still references stays resident and
+        is never freed here. The device->host copy is issued async and
+        completed by the next ``wait()``; returns 0.0 (overlapped)."""
+        r = self._active.pop(req_id, None)
+        if r is None:
+            return 0.0
+        plan = self.bm.swap_out(req_id)        # [(device_bid, host_bid)]
+        dev = jnp.asarray([d for d, _ in plan], jnp.int32)
+        data: Dict[str, object] = {}
+        for name in ("k", "v"):
+            piece = jnp.take(self.pools[name], dev, axis=2)
+            copy = getattr(piece, "copy_to_host_async", None)
+            if copy is not None:
+                copy()
+            data[name] = piece
+        self._host_stash[req_id] = (r, data)
+        self._pending_host.append(req_id)
+        return 0.0
+
+    def swap_in(self, req_id: str, tokens: int) -> float:
+        """Restore a swapped request into fresh private device blocks (its
+        shared-prefix identity was dropped at swap-out) and resume decode at
+        its stashed context length — no re-prefill."""
+        entry = self._host_stash.pop(req_id, None)
+        if entry is None:
+            return 0.0
+        r, data = entry
+        plan = self.bm.swap_in(req_id)         # [(host_bid, device_bid)]
+        dst = jnp.asarray([d for _, d in plan], jnp.int32)
+        for name in ("k", "v"):
+            src = jnp.asarray(data[name]).astype(self.pools[name].dtype)
+            self.pools[name] = self.pools[name].at[:, :, dst].set(src)
+        self._active[req_id] = r
+        return 0.0
+
+    def _materialize_host_stash(self) -> None:
+        """Finish pending device->host stash transfers (from ``wait``, after
+        the batch's own blocking transfer — the async copies have landed)."""
+        for req_id in self._pending_host:
+            entry = self._host_stash.get(req_id)
+            if entry is None:
+                continue    # released (cancel) before materialization
+            r, data = entry
+            self._host_stash[req_id] = (
+                r, {n: np.asarray(a) for n, a in data.items()})
+        self._pending_host = []
 
     def kv_tokens_resident(self) -> int:
         """Per-sequence resident tokens: shared prefix blocks count once per
@@ -701,6 +849,7 @@ class PagedRealExecutor(_ExecutorBase):
                     self.release_request(r.req_id)
             decode_dur += _time.perf_counter() - t1
             self.decode_samples.append((len(inflight.decode_reqs), decode_dur))
+        self._materialize_host_stash()
         return prefill_dur + decode_dur, BatchResult(outputs)
 
     def execute(self, batch: Batch, now: float) -> Tuple[float, BatchResult]:
@@ -715,10 +864,13 @@ def make_real_executor(kv_backend: str, model, params, *, max_slots: int = 32,
                        max_len: int = 512,
                        prefix_cache: Optional[PrefixCache] = None,
                        num_blocks: Optional[int] = None, block_size: int = 16,
-                       share_prefix_blocks: bool = False, **kw):
+                       share_prefix_blocks: bool = False,
+                       num_host_blocks: int = 0, **kw):
     """Build a real executor by backend name. ``num_blocks`` defaults to the
     dense layout's physical capacity (max_slots × max_len worth of tokens) so
-    switching backends never shrinks device KV."""
+    switching backends never shrinks device KV. ``num_host_blocks`` sizes the
+    paged backend's host swap tier (the dense backend's host stash is
+    per-slot and needs no sizing)."""
     if kv_backend == "dense":
         return RealExecutor(model, params, max_slots=max_slots,
                             max_len=max_len, prefix_cache=prefix_cache, **kw)
@@ -728,6 +880,7 @@ def make_real_executor(kv_backend: str, model, params, *, max_slots: int = 32,
         return PagedRealExecutor(model, params, num_blocks=num_blocks,
                                  block_size=block_size, max_len=max_len,
                                  prefix_cache=prefix_cache,
-                                 share_prefix_blocks=share_prefix_blocks, **kw)
+                                 share_prefix_blocks=share_prefix_blocks,
+                                 num_host_blocks=num_host_blocks, **kw)
     raise ValueError(f"unknown kv_backend {kv_backend!r}; expected one of "
                      f"{KV_BACKENDS}")

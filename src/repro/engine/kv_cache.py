@@ -20,11 +20,22 @@ class SeqAllocation:
     shared_prefix_blocks: int = 0
 
 
+@dataclass
+class HostAllocation:
+    """A sequence's KV parked on the host tier: one host block per device
+    block it occupied at swap-out time (including then-shared prefix blocks —
+    the host copy is always self-contained so swap-in never depends on a
+    sibling still being resident)."""
+    block_ids: List[int]
+    num_tokens: int
+
+
 class BlockManager:
     def __init__(self, num_blocks: int, block_size: int = 16,
-                 watermark: float = 0.01):
+                 watermark: float = 0.01, num_host_blocks: int = 0):
         self.num_blocks = num_blocks
         self.block_size = block_size
+        self.num_host_blocks = num_host_blocks
         self.watermark_blocks = max(1, int(num_blocks * watermark))
         self._free: List[int] = list(range(num_blocks - 1, -1, -1))
         self._ref: Dict[int, int] = {}
@@ -32,6 +43,9 @@ class BlockManager:
         # prefix-block sharing: hash key -> block id
         self._prefix_blocks: Dict[int, int] = {}
         self._block_keys: Dict[int, int] = {}
+        # host tier: swapped-out sequences hold host blocks (never shared)
+        self._host_free: List[int] = list(range(num_host_blocks - 1, -1, -1))
+        self._host_seqs: Dict[str, HostAllocation] = {}
 
     # ---------------------------------------------------------------- queries
     @property
@@ -53,6 +67,19 @@ class BlockManager:
 
     def tokens_in_use(self) -> int:
         return sum(a.num_tokens for a in self._seqs.values())
+
+    @property
+    def host_free_blocks(self) -> int:
+        return len(self._host_free)
+
+    def host_tokens_in_use(self) -> int:
+        return sum(a.num_tokens for a in self._host_seqs.values())
+
+    def is_swapped(self, seq_id: str) -> bool:
+        return seq_id in self._host_seqs
+
+    def host_block_table(self, seq_id: str) -> List[int]:
+        return list(self._host_seqs[seq_id].block_ids)
 
     # ---------------------------------------------------------------- alloc
     def allocate(self, seq_id: str, num_tokens: int,
@@ -155,8 +182,46 @@ class BlockManager:
         return list(table) + [pad_id] * (width - len(table))
 
     def free(self, seq_id: str) -> None:
+        alloc = self._seqs.pop(seq_id, None)
+        if alloc is not None:
+            for bid in alloc.block_ids:
+                self._ref[bid] -= 1
+                if self._ref[bid] == 0:
+                    del self._ref[bid]
+                    key = self._block_keys.pop(bid, None)
+                    if key is not None:
+                        self._prefix_blocks.pop(key, None)
+                    self._free.append(bid)
+        host = self._host_seqs.pop(seq_id, None)
+        if host is not None:
+            self._host_free.extend(host.block_ids)
+
+    # ---------------------------------------------------------------- swapping
+    def can_swap_out(self, seq_id: str) -> bool:
+        alloc = self._seqs.get(seq_id)
+        return (alloc is not None
+                and len(alloc.block_ids) <= len(self._host_free))
+
+    def swap_out(self, seq_id: str) -> List[Tuple[int, int]]:
+        """Park ``seq_id``'s KV on the host tier. Returns the copy plan
+        ``[(device_bid, host_bid), ...]`` in table order — the executor copies
+        *every* block (shared prefix blocks included, so the host image is
+        self-contained), then this accounting drops one device reference per
+        block: blocks siblings still reference stay resident on device and are
+        never returned to the free list here."""
         alloc = self._seqs.pop(seq_id)
+        need = len(alloc.block_ids)
+        if need > len(self._host_free):
+            self._seqs[seq_id] = alloc
+            raise OutOfBlocks(
+                f"swap_out {seq_id}: need {need} host blocks, "
+                f"have {len(self._host_free)}")
+        plan: List[Tuple[int, int]] = []
+        host_ids: List[int] = []
         for bid in alloc.block_ids:
+            hid = self._host_free.pop()
+            host_ids.append(hid)
+            plan.append((bid, hid))
             self._ref[bid] -= 1
             if self._ref[bid] == 0:
                 del self._ref[bid]
@@ -164,6 +229,38 @@ class BlockManager:
                 if key is not None:
                     self._prefix_blocks.pop(key, None)
                 self._free.append(bid)
+        self._host_seqs[seq_id] = HostAllocation(
+            block_ids=host_ids, num_tokens=alloc.num_tokens)
+        return plan
+
+    def can_swap_in(self, seq_id: str) -> bool:
+        host = self._host_seqs.get(seq_id)
+        return host is not None and len(host.block_ids) <= len(self._free)
+
+    def swap_in(self, seq_id: str) -> List[Tuple[int, int]]:
+        """Bring a swapped sequence back to device. Returns the copy plan
+        ``[(host_bid, device_bid), ...]``. The sequence gets fresh private
+        blocks (its former shared-prefix identity was dropped at swap-out —
+        resumption never aliases a sibling's pages)."""
+        host = self._host_seqs.pop(seq_id)
+        need = len(host.block_ids)
+        if need > len(self._free):
+            self._host_seqs[seq_id] = host
+            raise OutOfBlocks(
+                f"swap_in {seq_id}: need {need} blocks, "
+                f"have {len(self._free)}")
+        plan: List[Tuple[int, int]] = []
+        fresh: List[int] = []
+        for hid in host.block_ids:
+            bid = self._free.pop()
+            self._ref[bid] = 1
+            fresh.append(bid)
+            plan.append((hid, bid))
+        self._host_free.extend(host.block_ids)
+        self._seqs[seq_id] = SeqAllocation(
+            block_ids=fresh, num_tokens=host.num_tokens,
+            shared_prefix_blocks=0)
+        return plan
 
     # ---------------------------------------------------------------- invariants
     def check_invariants(self) -> None:
@@ -179,6 +276,18 @@ class BlockManager:
         assert len(free) + len(in_use) == self.num_blocks, \
             f"{len(free)} free + {len(in_use)} in use != {self.num_blocks}"
         assert len(self._free) == len(free), "duplicate id in free list"
+        # host-tier conservation: host blocks are never shared, so the sum of
+        # per-sequence host tables plus the host free list is exact
+        host_used = [b for a in self._host_seqs.values() for b in a.block_ids]
+        host_free = set(self._host_free)
+        assert len(set(host_used)) == len(host_used), \
+            "host block owned by two sequences"
+        assert not (set(host_used) & host_free), "host block free and in use"
+        assert len(host_free) + len(host_used) == self.num_host_blocks, \
+            (f"{len(host_free)} host free + {len(host_used)} host in use "
+             f"!= {self.num_host_blocks}")
+        assert len(self._host_free) == len(host_free), \
+            "duplicate id in host free list"
 
 
 class SharedPrefixLedger:

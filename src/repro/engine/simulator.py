@@ -64,13 +64,21 @@ class SimulatedExecutor:
     def __init__(self, latency_model: BatchLatencyModel,
                  prefix_cache: Optional[PrefixCache] = None, seed: int = 0,
                  straggler_prob: float = 0.0, straggler_slowdown: float = 10.0,
-                 hedge_threshold: Optional[float] = None):
+                 hedge_threshold: Optional[float] = None,
+                 swap_bandwidth_gbps: float = 32.0,
+                 kv_bytes_per_token: int = 819_200):
         self.lm = latency_model
         self.prefix_cache = prefix_cache
         self._rng = random.Random(seed)
         self.total_prefill_tokens = 0
         self.total_uncached_tokens = 0
         self.total_decode_tokens = 0
+        # host-tier swap model: moving a request's KV across the PCIe link
+        # costs tokens * kv_bytes_per_token / bandwidth seconds, charged to
+        # the tick that performs the swap (deterministic — no RNG)
+        self.swap_bandwidth_bytes = swap_bandwidth_gbps * 1e9
+        self.kv_bytes_per_token = kv_bytes_per_token
+        self.swap_busy_s = 0.0
         # straggler-mitigation model: with straggler_prob a batch takes
         # slowdown x nominal; with hedging, a duplicate dispatch to a healthy
         # DP replica bounds the wait at threshold x nominal + nominal.
@@ -89,6 +97,21 @@ class SimulatedExecutor:
             self.hedges_fired += 1
             return min(slow, duration * self.hedge_threshold + duration)
         return slow
+
+    # ------------------------------------------------------------------
+    # KV-tiering swap hooks (engine-drained): the simulated device has no
+    # buffers to copy, so a swap is pure modeled transfer time. One direction
+    # per call; the round trip costs twice this.
+    def _swap_time(self, tokens: int) -> float:
+        s = tokens * self.kv_bytes_per_token / self.swap_bandwidth_bytes
+        self.swap_busy_s += s
+        return s
+
+    def swap_out(self, req_id: str, tokens: int) -> float:
+        return self._swap_time(tokens)
+
+    def swap_in(self, req_id: str, tokens: int) -> float:
+        return self._swap_time(tokens)
 
     # ------------------------------------------------------------------
     def _true_utok(self, r: Request, chunk: int) -> int:

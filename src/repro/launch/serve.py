@@ -58,6 +58,13 @@ def _print_report(tag: str, report) -> None:
     if report.deduped_requests or report.plan_time:
         print(f"[{tag}] planner: {report.deduped_requests} rows answered by "
               f"dedup fan-out  plan {report.plan_time * 1e3:.2f}ms")
+    if report.swap_outs or report.swap_ins:
+        print(f"[{tag}] kv-tiering: {report.swap_outs} swap-outs "
+              f"({report.swapped_out_tokens} tok)  {report.swap_ins} swap-ins "
+              f"({report.swapped_in_tokens} tok)  "
+              f"{report.swap_bytes_moved / 1e9:.2f} GB moved  reclaim "
+              f"{report.reclaim_swap_decisions} swap / "
+              f"{report.reclaim_recompute_decisions} recompute")
 
 
 def run_planned(frontend: Frontend, trace, mode: str, tokenizer=None):
@@ -191,14 +198,36 @@ def main() -> None:
                          "accelerators, jnp reference on CPU); on CPU token "
                          "streams are bit-identical across backends")
     ap.add_argument("--kv-admission", default="conservative",
-                    choices=["conservative", "optimistic"],
+                    choices=["conservative", "optimistic", "predicted"],
                     help="KV-cap admission policy: 'conservative' reserves "
                          "each request's worst-case prompt+output footprint "
                          "upfront; 'optimistic' admits on current footprint "
                          "and preempts the lowest-priority running relQuery "
-                         "(re-prefill restart) when decode growth hits the cap")
+                         "(re-prefill restart) when decode growth hits the "
+                         "cap; 'predicted' admits on the per-template "
+                         "predicted output length (ALISE-style quantile of "
+                         "finished siblings; worst case until history "
+                         "accumulates) with preemption as the safety valve")
     ap.add_argument("--kv-cap", type=int, default=None,
                     help="override the KV-resident token cap (BatchLimits.cap)")
+    ap.add_argument("--kv-tiering", default="off", choices=["on", "off"],
+                    help="host-offload KV tier: under cap pressure a victim's "
+                         "KV is swapped to host memory (and back, resuming "
+                         "decode without re-prefill) whenever the modeled "
+                         "transfer beats re-prefilling it — per-victim "
+                         "cost-based reclaim; 'off' is bit-identical "
+                         "recompute-only preemption. Requires a preempting "
+                         "--kv-admission (optimistic or predicted)")
+    ap.add_argument("--host-kv-cap", type=int, default=None,
+                    help="host-tier capacity in KV tokens (with --kv-tiering "
+                         "on; default 4x the device cap)")
+    ap.add_argument("--swap-bandwidth", type=float, default=None,
+                    help="modeled device<->host link bandwidth in GB/s for "
+                         "the swap cost model (with --kv-tiering on; "
+                         "default 32)")
+    ap.add_argument("--debug-invariants", action="store_true",
+                    help="assert scheduler-ledger / block-pool / shared-"
+                         "ledger invariants after every tick (slow; CI smoke)")
     ap.add_argument("--prefix-sharing", default="off", choices=["on", "off"],
                     help="prefix-sharing-aware scheduling: warm-then-follow "
                          "prefill candidates and shared-block KV admission "
@@ -238,9 +267,30 @@ def main() -> None:
     if args.plan != "off" and args.open_loop:
         raise SystemExit("--plan rewrites a closed-loop trace replay; it does "
                          "not apply to the scripted --open-loop session")
+    kv_tiering = args.kv_tiering == "on"
+    if kv_tiering and args.kv_admission == "conservative":
+        raise SystemExit("--kv-tiering on requires a preempting admission "
+                         "mode; pass --kv-admission optimistic or predicted")
+    if not kv_tiering and args.host_kv_cap is not None:
+        raise SystemExit("--host-kv-cap only applies with --kv-tiering on")
+    if not kv_tiering and args.swap_bandwidth is not None:
+        raise SystemExit("--swap-bandwidth only applies with --kv-tiering on")
+    if args.host_kv_cap is not None and args.host_kv_cap < 1:
+        raise SystemExit(f"--host-kv-cap must be >= 1 (got {args.host_kv_cap})")
+    if args.swap_bandwidth is not None and args.swap_bandwidth <= 0:
+        raise SystemExit(f"--swap-bandwidth must be > 0 GB/s "
+                         f"(got {args.swap_bandwidth})")
     lm = a100_opt13b()
     limits = BatchLimits() if args.kv_cap is None else BatchLimits(cap=args.kv_cap)
     prefix_sharing = args.prefix_sharing == "on"
+    host_kv_cap = args.host_kv_cap if args.host_kv_cap is not None \
+        else 4 * limits.cap
+    swap_bandwidth = args.swap_bandwidth if args.swap_bandwidth is not None \
+        else 32.0
+    tiering_kw = dict(kv_tiering=kv_tiering,
+                      host_kv_cap=host_kv_cap if kv_tiering else 0,
+                      swap_bandwidth_gbps=swap_bandwidth,
+                      debug_invariants=args.debug_invariants)
 
     if args.simulate:
         ds = make_dataset(args.dataset, num_rows=10_000, seed=args.seed)
@@ -254,11 +304,12 @@ def main() -> None:
             args.num_replicas, scheduler=args.scheduler, latency_model=lm,
             router_policy=args.router, dpu_config=dpu, seed=args.seed,
             limits=limits, kv_admission=args.kv_admission,
-            prefix_sharing=prefix_sharing, engine_loop=args.engine_loop)
+            prefix_sharing=prefix_sharing, engine_loop=args.engine_loop,
+            **tiering_kw)
         print(f"scheduler={args.scheduler} replicas={args.num_replicas} "
               f"router={args.router} kv-admission={args.kv_admission} "
               f"prefix-sharing={args.prefix_sharing} "
-              f"engine-loop={args.engine_loop}")
+              f"engine-loop={args.engine_loop} kv-tiering={args.kv_tiering}")
         if args.open_loop:
             report = run_open_loop(Frontend(cluster), trace)
             _print_report("open-loop", report)
@@ -307,11 +358,12 @@ def main() -> None:
                 dpu_config=DPUConfig(
                     starvation_threshold=args.starvation_threshold,
                     exact_probe=args.dpu_exact_probe)
-                if args.scheduler.startswith("relserve") else None)
+                if args.scheduler.startswith("relserve") else None,
+                **tiering_kw)
         except NotImplementedError as e:
             raise SystemExit(f"--kv-backend {args.kv_backend}: {e}")
         print(f"scheduler={args.scheduler} kv-backend={args.kv_backend} "
-              f"engine-loop={args.engine_loop}")
+              f"engine-loop={args.engine_loop} kv-tiering={args.kv_tiering}")
         if args.open_loop:
             report = run_open_loop(Frontend(engine), trace)
             _print_report("open-loop", report)

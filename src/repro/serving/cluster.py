@@ -47,7 +47,7 @@ class Cluster:
     def __init__(self, make_scheduler: Callable[[int], object],
                  make_executor: Callable[[int], object],
                  num_replicas: int, router: Optional[Router] = None,
-                 engine_loop: str = "serial"):
+                 engine_loop: str = "serial", debug_invariants: bool = False):
         if num_replicas < 1:
             raise ValueError("num_replicas must be >= 1")
         self.cores = []
@@ -55,7 +55,8 @@ class Cluster:
             sched = make_scheduler(i)
             executor = make_executor(i)
             self.cores.append(EngineCore(sched, executor, replica_id=i,
-                                         engine_loop=engine_loop))
+                                         engine_loop=engine_loop,
+                                         debug_invariants=debug_invariants))
         self.router = router or Router(num_replicas)
         if self.router.num_replicas != num_replicas:
             raise ValueError("router sized for a different replica count")

@@ -26,7 +26,10 @@ def build_simulated_cluster(num_replicas: int, scheduler: str = "relserve",
                             router: Optional[Router] = None,
                             kv_admission: str = "conservative",
                             prefix_sharing: bool = False,
-                            engine_loop: str = "serial") -> Cluster:
+                            engine_loop: str = "serial",
+                            kv_tiering: bool = False, host_kv_cap: int = 0,
+                            swap_bandwidth_gbps: float = 32.0,
+                            debug_invariants: bool = False) -> Cluster:
     lm = latency_model or a100_opt13b()
     caches = {}
 
@@ -35,16 +38,20 @@ def build_simulated_cluster(num_replicas: int, scheduler: str = "relserve",
         kw = dict(limits=limits or BatchLimits(), latency_model=lm,
                   prefix_cache=caches[i], kv_admission=kv_admission,
                   prefix_sharing=prefix_sharing)
+        if kv_tiering:
+            kw.update(kv_tiering=True, host_kv_cap=host_kv_cap,
+                      swap_bandwidth_gbps=swap_bandwidth_gbps)
         if scheduler.startswith("relserve"):
             kw["dpu_config"] = dpu_config or DPUConfig()
         return SCHEDULERS[scheduler](**kw)
 
     def make_executor(i: int):
-        return SimulatedExecutor(lm, prefix_cache=caches[i], seed=seed + i)
+        return SimulatedExecutor(lm, prefix_cache=caches[i], seed=seed + i,
+                                 swap_bandwidth_gbps=swap_bandwidth_gbps)
 
     return Cluster(make_scheduler, make_executor, num_replicas,
                    router=router or Router(num_replicas, policy=router_policy),
-                   engine_loop=engine_loop)
+                   engine_loop=engine_loop, debug_invariants=debug_invariants)
 
 
 def build_real_engine(arch: str = "qwen3-1.7b", scheduler: str = "relserve",
@@ -57,7 +64,10 @@ def build_real_engine(arch: str = "qwen3-1.7b", scheduler: str = "relserve",
                       max_slots: int = 32, max_len: int = 512,
                       block_size: int = 16, num_blocks: Optional[int] = None,
                       seed: int = 0, model=None, params=None,
-                      engine_loop: str = "serial", **executor_kw):
+                      engine_loop: str = "serial",
+                      kv_tiering: bool = False, host_kv_cap: int = 0,
+                      swap_bandwidth_gbps: float = 32.0,
+                      debug_invariants: bool = False, **executor_kw):
     """A single-replica real-JAX serving engine on the chosen KV backend.
 
     ``kv_backend='dense'`` is the per-slot baseline; ``'paged'`` runs the
@@ -92,13 +102,24 @@ def build_real_engine(arch: str = "qwen3-1.7b", scheduler: str = "relserve",
         num_blocks = max(dense_equiv, cap_blocks)
     kw = dict(limits=limits, prefix_cache=pc,
               kv_admission=kv_admission, prefix_sharing=prefix_sharing)
+    if kv_tiering:
+        kw.update(kv_tiering=True, host_kv_cap=host_kv_cap,
+                  swap_bandwidth_gbps=swap_bandwidth_gbps)
     if latency_model is not None:
         kw["latency_model"] = latency_model
     if scheduler.startswith("relserve"):
         kw["dpu_config"] = dpu_config or DPUConfig()
     sched = SCHEDULERS[scheduler](**kw)
+    num_host_blocks = 0
+    if kv_tiering and kv_backend == "paged":
+        # whole-block rounding: each swapped sequence wastes < 1 block, so
+        # cap-in-blocks plus one block per possible resident sequence covers
+        # any population the scheduler's token-granular host cap admits
+        num_host_blocks = -(-host_kv_cap // block_size) + limits.max_num_seqs
     ex = make_real_executor(kv_backend, model, params, max_slots=max_slots,
                             max_len=max_len, prefix_cache=pc,
                             num_blocks=num_blocks, block_size=block_size,
-                            share_prefix_blocks=prefix_sharing, **executor_kw)
-    return ServingEngine(sched, ex, engine_loop=engine_loop)
+                            share_prefix_blocks=prefix_sharing,
+                            num_host_blocks=num_host_blocks, **executor_kw)
+    return ServingEngine(sched, ex, engine_loop=engine_loop,
+                         debug_invariants=debug_invariants)

@@ -46,16 +46,9 @@ def route_relquery(rel_id: str, num_replicas: int) -> int:
     return zlib.crc32(rel_id.encode()) % max(1, num_replicas)
 
 
-def template_fingerprint(rq: RelQuery, block_size: int = 16) -> int:
-    """Stable identity of the shared prompt prefix of ``rq``'s requests: the
-    template id when tagged, else the first prompt block of the first request
-    (the rendered template head — what actually lands in the prefix cache)."""
-    if rq.template_id:
-        return zlib.crc32(rq.template_id.encode())
-    if rq.requests:
-        blk = rq.requests[0].tokens[:block_size]
-        return zlib.crc32(b",".join(b"%d" % t for t in blk))
-    return zlib.crc32(rq.rel_id.encode())
+# canonical definition lives in core (the predictor keys on it too);
+# re-exported here for the router's existing callers
+from repro.core.predictor import template_fingerprint  # noqa: F401,E402
 
 
 class Router:

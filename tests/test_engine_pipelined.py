@@ -55,12 +55,15 @@ def _cap_for(trace, slack=2.0):
 
 
 def _build(policy, mode, trace, *, loop, prefix_sharing=False, slack=2.0,
-           dpu_config=None, exec_seed=0):
+           dpu_config=None, exec_seed=0, tiering=False):
     lm = a100_opt13b()
     pc = PrefixCache(block_size=16)
-    kw = dict(limits=BatchLimits(cap=_cap_for(trace, slack=slack)),
+    cap = _cap_for(trace, slack=slack)
+    kw = dict(limits=BatchLimits(cap=cap),
               latency_model=lm, prefix_cache=pc, kv_admission=mode,
               prefix_sharing=prefix_sharing)
+    if tiering:
+        kw.update(kv_tiering=True, host_kv_cap=8 * cap)
     if policy.startswith("relserve"):
         kw["dpu_config"] = dpu_config or DPUConfig(exact_probe=prefix_sharing)
     sched = SCHEDULERS[policy](**kw)
@@ -71,11 +74,11 @@ def _build(policy, mode, trace, *, loop, prefix_sharing=False, slack=2.0,
 
 
 def _run(policy, mode, trace, *, loop, prefix_sharing=False, slack=2.0,
-         dpu_config=None):
+         dpu_config=None, tiering=False):
     trace = copy.deepcopy(trace)
     engine, sched = _build(policy, mode, trace, loop=loop,
                            prefix_sharing=prefix_sharing, slack=slack,
-                           dpu_config=dpu_config)
+                           dpu_config=dpu_config, tiering=tiering)
     report = engine.run_trace(trace)
     return report, sched, trace
 
@@ -167,6 +170,72 @@ def test_pipelined_preemption_heavy_equivalence():
     assert rep_s.preemptions > 0, "cap not tight enough to exercise preemption"
     assert _streams(ran_s) == _streams(ran_p)
     _assert_reports_match(rep_s, rep_p)
+    _assert_conserved(sched_p)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_pipelined_tiering_matches_serial(policy):
+    """KV tiering under the pipelined loop: swap decisions journaled while a
+    batch is in flight (speculative planning) must commit or roll back to
+    the exact serial behavior — same streams, same event timing (serial and
+    pipelined both charge the modeled swap seconds to the deciding tick),
+    same swap counters, host ledger drained."""
+    trace = _trace(seed=13, num_relqueries=10, rate=6.0, max_requests=12)
+    rep_s, sched_s, ran_s = _run(policy, "optimistic", trace, loop="serial",
+                                 slack=1.2, tiering=True)
+    rep_p, sched_p, ran_p = _run(policy, "optimistic", trace,
+                                 loop="pipelined", slack=1.2, tiering=True)
+    if policy in ("relserve", "vllm"):
+        assert sched_s.swap_outs > 0, "cap not tight enough to swap"
+    assert _streams(ran_s) == _streams(ran_p)
+    _assert_reports_match(rep_s, rep_p)
+    assert (sched_s.swap_outs, sched_s.swap_ins, sched_s.swap_bytes_moved) \
+        == (sched_p.swap_outs, sched_p.swap_ins, sched_p.swap_bytes_moved)
+    assert sched_p.host_tokens_in_use == 0
+    _assert_conserved(sched_p)
+
+
+def test_pipelined_tiering_predicted_matches_serial():
+    """Predicted admission + tiering: the predictor's speculative-observation
+    journal and the swap-op journal roll back together."""
+    trace = _trace(seed=5, num_relqueries=10, rate=5.0, max_requests=12)
+    rep_s, sched_s, ran_s = _run("relserve", "predicted", trace,
+                                 loop="serial", slack=1.3, tiering=True)
+    rep_p, sched_p, ran_p = _run("relserve", "predicted", trace,
+                                 loop="pipelined", slack=1.3, tiering=True)
+    assert _streams(ran_s) == _streams(ran_p)
+    _assert_reports_match(rep_s, rep_p)
+    assert sched_s.predictor.observations == sched_p.predictor.observations
+    _assert_conserved(sched_p)
+
+
+def test_cancel_with_tiering_pipelined_matches_serial():
+    """Cancel between ticks with tiering on and a speculative window open:
+    swapped/parked requests drain to the identical serial state."""
+    trace = _trace(seed=11, num_relqueries=6, rate=4.0, max_requests=8)
+
+    def script(loop):
+        ran = copy.deepcopy(trace)
+        engine, sched = _build("relserve", "optimistic", ran, loop=loop,
+                               slack=1.2, tiering=True)
+        fe = Frontend(engine)
+        try:
+            handles = [fe.submit(rq, now=rq.arrival_time) for rq in ran]
+            for _ in range(4):
+                fe.step()
+            fe.cancel(handles[2])
+            final = fe.drain()
+        finally:
+            fe.close()
+        return _streams(ran), final, sched
+
+    st_s, fin_s, sched_s = script("serial")
+    st_p, fin_p, sched_p = script("pipelined")
+    assert sched_s.swap_outs > 0, "tiering never engaged in the script"
+    assert st_s == st_p
+    _assert_reports_match(fin_s, fin_p)
+    assert sched_s.host_tokens_in_use == 0 and sched_p.host_tokens_in_use == 0
+    _assert_conserved(sched_s)
     _assert_conserved(sched_p)
 
 

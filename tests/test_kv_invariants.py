@@ -201,6 +201,117 @@ def test_shared_ledger_discount_invariant(ops):
     assert ledger.discount == 0 and len(ledger) == 0
 
 
+TIER_OPS = st.lists(
+    st.tuples(st.sampled_from(["alloc", "fork", "extend", "swap_out",
+                               "swap_in", "free"]),
+              st.integers(1, 120), st.integers(0, 7)),
+    min_size=1, max_size=80)
+
+
+@given(TIER_OPS)
+@settings(max_examples=60, deadline=None)
+def test_three_tier_random_lifecycle_conserves_blocks(ops):
+    """alloc/fork/extend/swap_out/swap_in/free in any order across the
+    device and host tiers: both conservation laws hold at every step (device
+    free + in-use == num_blocks with shared blocks counted once; host free +
+    in-use == num_host_blocks with host blocks never shared), swapping a
+    forked sequence never frees a device block its sibling still references,
+    and a swapped-in sequence resumes at its exact token count."""
+    bm = BlockManager(num_blocks=64, block_size=8, num_host_blocks=48)
+    rng = random.Random(0xF00D)
+    device, swapped = [], []       # seq ids per tier
+    counter = [0]
+
+    def fresh_sid():
+        counter[0] += 1
+        return f"s{counter[0]}"
+
+    for op, tokens, pick in ops:
+        if op == "alloc":
+            sid = fresh_sid()
+            try:
+                bm.allocate(sid, tokens)
+                device.append(sid)
+            except OutOfBlocks:
+                pass
+        elif op == "fork" and device:
+            parent = device[pick % len(device)]
+            child = fresh_sid()
+            if bm.free_blocks >= 1:   # CoW appends may need headroom later
+                bm.fork(parent, child)
+                device.append(child)
+        elif op == "extend" and device:
+            sid = device[pick % len(device)]
+            try:
+                bm.append_token(sid)
+            except OutOfBlocks:
+                pass
+        elif op == "swap_out" and device:
+            sid = device[pick % len(device)]
+            siblings = {s: list(bm.block_table(s)) for s in device if s != sid}
+            if bm.can_swap_out(sid):
+                ntok = bm.context_len(sid)
+                bm.swap_out(sid)
+                device.remove(sid)
+                swapped.append((sid, ntok))
+                assert bm.is_swapped(sid)
+                # shared blocks a sibling still references stayed resident
+                for s, table in siblings.items():
+                    assert bm.block_table(s) == table
+        elif op == "swap_in" and swapped:
+            sid, ntok = swapped[pick % len(swapped)]
+            if bm.can_swap_in(sid):
+                plan = bm.swap_in(sid)
+                swapped.remove((sid, ntok))
+                device.append(sid)
+                assert bm.context_len(sid) == ntok
+                assert len(plan) == len(bm.block_table(sid))
+        elif op == "free":
+            pool = device + [s for s, _ in swapped]
+            if not pool:
+                continue
+            sid = pool[pick % len(pool)]
+            bm.free(sid)            # lenient: frees whichever tier holds it
+            if sid in device:
+                device.remove(sid)
+            else:
+                swapped = [(s, n) for s, n in swapped if s != sid]
+        _conservation(bm)
+        host_used = sum(len(bm.host_block_table(s)) for s, _ in swapped)
+        assert bm.host_free_blocks + host_used == bm.num_host_blocks
+
+    for sid in device + [s for s, _ in swapped]:
+        bm.free(sid)
+    _conservation(bm)
+    assert bm.free_blocks == 64 and bm.host_free_blocks == 48, \
+        "blocks leaked across the tiers after freeing every sequence"
+
+
+def test_swap_out_of_fork_keeps_sibling_blocks_alive():
+    """Deterministic pin of the shared-sibling rule: swapping out a CoW fork
+    moves a self-contained copy to the host and drops only the fork's
+    references — the parent keeps every shared device block; freeing the
+    parent afterwards releases them exactly once."""
+    bm = BlockManager(num_blocks=16, block_size=8, num_host_blocks=8)
+    bm.allocate("parent", 24)                      # 3 blocks
+    parent_table = list(bm.block_table("parent"))
+    bm.fork("parent", "child")
+    free_before = bm.free_blocks
+    plan = bm.swap_out("child")
+    assert [d for d, _ in plan] == parent_table    # full self-contained copy
+    assert bm.block_table("parent") == parent_table
+    assert bm.free_blocks == free_before           # all blocks still shared
+    bm.check_invariants()
+    # swap back in: fresh private blocks, disjoint from the parent's
+    bm.swap_in("child")
+    assert not set(bm.block_table("child")) & set(parent_table)
+    assert bm.context_len("child") == 24
+    bm.free("parent")
+    bm.free("child")
+    bm.check_invariants()
+    assert bm.free_blocks == 16 and bm.host_free_blocks == 8
+
+
 _PIPELINED_TRACE = None
 
 

@@ -396,3 +396,227 @@ def test_conservative_default_latencies_bit_identical(name):
 def test_invalid_admission_mode_rejected():
     with pytest.raises(ValueError, match="kv_admission"):
         RelServeScheduler(kv_admission="yolo")
+
+
+# ------------------------------------------------------------------ kv tiering
+def _tiered_sched(name="relserve", cap=1000, host_cap=100_000, **kw):
+    lm = a100_opt13b()
+    return SCHEDULERS[name](limits=BatchLimits(cap=cap), latency_model=lm,
+                            kv_admission="optimistic", kv_tiering=True,
+                            host_kv_cap=host_cap, **kw)
+
+
+def test_swap_lifecycle_resumes_without_reprefill():
+    """SWAPPED is not PREEMPTED: prefill progress and outputs survive the
+    trip to the host tier, and the resume is a decode batch, not a
+    re-prefill pass."""
+    sched = _tiered_sched()
+    rq = make_relquery("A", [[1] * 40], 0.0, 20)
+    sched.add_relquery(rq, 0.0)
+    r = rq.requests[0]
+    batch = sched.schedule(0.0)
+    sched.complete_batch(batch, BatchResult({r.req_id: (5, False)}), 0.0, 1.0)
+    tokens = r.total_tokens                        # 40 prompt + 1 output
+
+    sched.swap_out_request(r, 1.0)
+    assert r.state == RequestState.SWAPPED
+    assert r.prefilled and r.prefilled_tokens == 40   # progress kept
+    assert r.output_tokens == [5]
+    assert sched.tokens_in_use == 0 and sched.committed_tokens == 0
+    assert sched.host_tokens_in_use == tokens
+    assert sched.preemptions == 0                  # a swap is not a preempt
+    assert sched.swap_outs == 1 and sched.swapped_out_tokens == tokens
+    assert sched.drain_swap_ops() == [("out", r.req_id, tokens)]
+    assert sched.drain_swap_ops() == []            # drained exactly once
+
+    # next schedule swaps it straight back in and decodes
+    batch = sched.schedule(2.0)
+    assert r.state == RequestState.RUNNING
+    assert batch.kind == "decode" and batch.decode_requests == [r]
+    assert sched.host_tokens_in_use == 0
+    assert sched.tokens_in_use == tokens
+    assert sched.swap_ins == 1 and sched.swapped_in_tokens == tokens
+    assert sched.drain_swap_ops() == [("in", r.req_id, tokens)]
+    sched.complete_batch(batch, BatchResult({r.req_id: (7, False)}), 2.0, 3.0)
+    assert r.output_tokens == [5, 7]               # decode continued in place
+
+
+def test_reclaim_cost_model_swap_vs_recompute():
+    """Per-victim reclaim: swap when the modeled round trip beats re-prefill,
+    recompute-preempt when the host link is too slow or the host tier full."""
+    fast = _tiered_sched()                                  # 32 GB/s default
+    slow = _tiered_sched(swap_bandwidth_gbps=0.001)         # ~67s round trip
+    full = _tiered_sched(host_cap=10)                       # victim won't fit
+    for sched in (fast, slow, full):
+        rq = make_relquery("A", [[1] * 40], 0.0, 20)
+        sched.add_relquery(rq, 0.0)
+        r = rq.requests[0]
+        b = sched.schedule(0.0)
+        sched.complete_batch(b, BatchResult({r.req_id: (5, False)}), 0.0, 1.0)
+        sched._reclaim(r, 1.0)
+    assert fast.reclaim_swap_decisions == 1 and fast.swap_outs == 1
+    assert fast.preemptions == 0
+    assert slow.reclaim_recompute_decisions == 1 and slow.preemptions == 1
+    assert slow.swap_outs == 0
+    assert full.reclaim_recompute_decisions == 1 and full.swap_outs == 0
+
+
+def test_cancel_while_swapped_drains_everything():
+    """Cancelling a relQuery parked on the host tier must zero the host
+    ledger AND purge its undrained swap ops — the engine releases executor
+    state directly; mirroring a stale op would touch a freed request."""
+    sched = _tiered_sched()
+    rq = make_relquery("A", [[1] * 40] * 2, 0.0, 20)
+    sched.add_relquery(rq, 0.0)
+    batch = sched.schedule(0.0)
+    outs = {r.req_id: (5, False) for r in batch.prefill_requests}
+    sched.complete_batch(batch, BatchResult(outs), 0.0, 1.0)
+    for r in list(sched.running_requests()):
+        sched.swap_out_request(r, 1.0)
+    assert all(r.state == RequestState.SWAPPED for r in rq.requests)
+    assert sched.host_tokens_in_use == sum(r.total_tokens for r in rq.requests)
+
+    cancelled = sched.cancel_relquery("A", 2.0)
+    assert sorted(x.req_id for x in cancelled) == \
+        sorted(x.req_id for x in rq.requests)
+    assert all(r.state == RequestState.CANCELLED for r in rq.requests)
+    assert sched.host_tokens_in_use == 0 and not sched.has_work()
+    assert sched.tokens_in_use == 0 and sched.committed_tokens == 0
+    assert sched.drain_swap_ops() == []     # stale "out" ops purged
+    assert sched.schedule(3.0) is None
+
+
+@pytest.mark.parametrize("name", ["relserve", "vllm"])
+def test_tiering_streams_identical_under_pressure(name):
+    """End-to-end at a cap tight enough to force reclaim on every policy:
+    tiering-on actually swaps (and swaps everything back), yet every token
+    stream is bit-identical to the recompute-only run."""
+    trace = quick_trace("rotten", num_relqueries=10, rate=3.0, seed=3,
+                        max_requests=10)
+    max_fp = max(r.num_prompt_tokens + r.max_output_tokens
+                 for rq in trace for r in rq.requests)
+    cap = int(max_fp * 1.2)
+
+    def run(tiering):
+        lm = a100_opt13b()
+        kw = dict(limits=BatchLimits(cap=cap), latency_model=lm,
+                  kv_admission="optimistic")
+        if tiering:
+            kw.update(kv_tiering=True, host_kv_cap=8 * cap)
+        sched = SCHEDULERS[name](**kw)
+        ran = copy.deepcopy(trace)
+        ServingEngine(sched, SimulatedExecutor(lm)).run_trace(ran)
+        return sched, {r.req_id: tuple(r.output_tokens)
+                       for rq in ran for r in rq.requests}
+
+    off_sched, off_streams = run(False)
+    on_sched, on_streams = run(True)
+    assert off_sched.preemptions > 0, "cap not tight enough to reclaim"
+    assert on_sched.swap_outs > 0, "tiering never engaged"
+    assert on_sched.swap_ins == on_sched.swap_outs   # everything came back
+    assert on_streams == off_streams
+    assert on_sched.host_tokens_in_use == 0
+    assert on_sched.tokens_in_use == 0 and on_sched.committed_tokens == 0
+
+
+def test_tiering_param_validation():
+    with pytest.raises(ValueError, match="conservative"):
+        RelServeScheduler(kv_tiering=True, host_kv_cap=100)
+    with pytest.raises(ValueError, match="host_kv_cap"):
+        RelServeScheduler(kv_admission="optimistic", kv_tiering=True,
+                          host_kv_cap=0)
+    with pytest.raises(ValueError, match="swap_bandwidth"):
+        RelServeScheduler(kv_admission="optimistic", kv_tiering=True,
+                          host_kv_cap=100, swap_bandwidth_gbps=0.0)
+
+
+# ------------------------------------------------------- predicted admission
+def test_predicted_admission_charges_predicted_footprint():
+    """The per-template predictor shrinks the admission charge from the
+    worst case to prompt + predicted OL, clamped to [resident+1, worst]."""
+    lm = a100_opt13b()
+    sched = SCHEDULERS["vllm"](limits=BatchLimits(cap=10_000),
+                               latency_model=lm, kv_admission="predicted")
+    assert sched.predictor is not None      # auto-attached in predicted mode
+    rq = make_relquery("A", [[7] * 20], 0.0, 100)
+    sched.add_relquery(rq, 0.0)
+    r = rq.requests[0]
+    assert sched._kv_footprint(r) == 120    # no history -> worst case
+    key = sched._template_key(r)
+    for _ in range(8):
+        sched.predictor.observe(key, 10)
+    assert sched._kv_footprint(r) == 30     # prompt 20 + predicted OL 10
+    # a wild over-prediction never charges above the worst case
+    big = SCHEDULERS["vllm"](limits=BatchLimits(cap=10_000), latency_model=lm,
+                             kv_admission="predicted")
+    big.add_relquery(copy.deepcopy(rq), 0.0)
+    r2 = big.relqueries["A"].requests[0]
+    for _ in range(8):
+        big.predictor.observe(big._template_key(r2), 1000)
+    assert big._kv_footprint(r2) == 120
+
+
+def test_predicted_underprediction_rescued_by_valve():
+    """Predicted admission packs two requests whose true growth busts the
+    cap; the resident-measure pressure valve preempts instead of
+    deadlocking, and everything finishes under the cap."""
+    lm = a100_opt13b()
+    sched = SCHEDULERS["vllm"](limits=BatchLimits(cap=260), latency_model=lm,
+                               kv_admission="predicted")
+    core = EngineCore(sched, SimulatedExecutor(lm))
+    a = make_relquery("A", [[7] * 100] * 2, 0.0, 60)   # true fp 161 each
+    core.admit(a, 0.0)
+    for _ in range(6):                                 # predicted fp 102 each
+        sched.predictor.observe(sched._template_key(a.requests[0]), 2)
+    for _ in _drain(core):
+        assert sched.tokens_in_use + sched.partial_prefill_tokens \
+            <= sched.limits.cap, "predicted admission overshot resident KV"
+    assert a.is_finished()
+    assert sched.preemptions > 0, "valve never fired — cap was not stressed"
+    assert sched.tokens_in_use == 0 and sched.committed_tokens == 0
+
+
+# --------------------------------------------------------- real executor swap
+@pytest.mark.parametrize("backend", ["dense", "paged"])
+def test_real_executor_swap_roundtrip_preserves_stream(backend):
+    """Force a mid-run device->host->device round trip on the real JAX
+    backends: the restored KV must continue the exact greedy stream of an
+    undisturbed run (per-position comparison — req_ids are process-global)."""
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.engine.executor import make_real_executor
+    from repro.engine.tokenizer import HashTokenizer
+    from repro.models.registry import build_model
+
+    cfg = get_smoke_config("qwen3-1.7b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    tok = HashTokenizer(vocab_size=cfg.vocab_size - 2)
+    prompts = [tok.encode(f"row {i} of the relational table") for i in range(2)]
+
+    def run(force_swap):
+        rq = make_relquery("A", [list(p) for p in prompts], 0.0, 8)
+        sched = _tiered_sched(cap=4096)
+        ex = make_real_executor(backend, model, params, max_slots=8,
+                                max_len=256, num_blocks=128, block_size=16,
+                                num_host_blocks=128)
+        core = EngineCore(sched, ex, debug_invariants=True)
+        core.admit(rq, 0.0)
+        now, steps = 0.0, 0
+        while core.has_work():
+            ev = core.tick(now)
+            now = ev.end
+            steps += 1
+            if force_swap and steps == 2 and sched._running:
+                sched.swap_out_request(sched._running[-1], now)
+                core._apply_swaps()
+        assert rq.is_finished()
+        return sched, [list(r.output_tokens) for r in rq.requests]
+
+    base_sched, base = run(False)
+    swap_sched, swapped = run(True)
+    assert base_sched.swap_outs == 0
+    assert swap_sched.swap_outs >= 1
+    assert swap_sched.swap_ins == swap_sched.swap_outs
+    assert swapped == base, "host round trip corrupted the restored KV"

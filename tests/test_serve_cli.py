@@ -18,10 +18,40 @@ def _run(monkeypatch, *argv):
     (["--simulate", "--num-relqueries", "0"], "--num-relqueries must be >= 1"),
     (["--simulate", "--max-requests", "0"], "--max-requests must be >= 1"),
     (["--simulate", "--num-replicas", "0"], "--num-replicas must be >= 1"),
+    (["--simulate", "--kv-tiering", "on"],
+     "--kv-tiering on requires a preempting admission"),
+    (["--simulate", "--host-kv-cap", "4096"],
+     "--host-kv-cap only applies with --kv-tiering on"),
+    (["--simulate", "--swap-bandwidth", "16"],
+     "--swap-bandwidth only applies with --kv-tiering on"),
+    (["--simulate", "--kv-tiering", "on", "--kv-admission", "optimistic",
+      "--host-kv-cap", "0"], "--host-kv-cap must be >= 1"),
+    (["--simulate", "--kv-tiering", "on", "--kv-admission", "optimistic",
+      "--swap-bandwidth", "0"], "--swap-bandwidth must be > 0 GB/s"),
 ])
 def test_cli_validation(monkeypatch, argv, match):
     with pytest.raises(SystemExit, match=match):
         _run(monkeypatch, *argv)
+
+
+def test_simulated_tiering_smoke(monkeypatch, capsys):
+    """A tight --kv-cap plus --kv-tiering on actually swaps, reports the
+    swap counters, and still completes the whole trace."""
+    _run(monkeypatch, "--simulate", "--num-relqueries", "10", "--rate", "3.0",
+         "--max-requests", "10", "--kv-admission", "optimistic",
+         "--kv-cap", "400", "--kv-tiering", "on", "--debug-invariants")
+    out = capsys.readouterr().out
+    assert "kv-tiering=on" in out
+    assert "[merged] relqueries=10" in out
+    assert "kv-tiering:" in out and "swap-outs" in out
+
+
+def test_predicted_admission_smoke(monkeypatch, capsys):
+    _run(monkeypatch, "--simulate", "--num-relqueries", "8",
+         "--max-requests", "8", "--rate", "4.0",
+         "--kv-admission", "predicted")
+    out = capsys.readouterr().out
+    assert "[merged] relqueries=8" in out
 
 
 def test_open_loop_smoke_simulated(monkeypatch, capsys):
