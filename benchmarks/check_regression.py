@@ -36,7 +36,9 @@ LATENCY_KEYS = ("avg_latency_s", "p99_latency_s")
 VERDICT_TRUE_KEYS = ("optimistic_wins", "paged_decode_wins",
                      "streams_identical", "sharing_wins", "pipelined_wins",
                      "planned_wins", "dag_ok", "tiering_wins",
-                     "tiering_streams_identical")
+                     "tiering_streams_identical", "recovery_wins",
+                     "streams_identical_after_crash", "zero_duplicate_tokens",
+                     "autoscale_ok")
 
 
 def _walk(node, path=""):
@@ -149,7 +151,9 @@ def self_test() -> int:
                 "summary": {"verdict": {"x": {
                     "optimistic_wins": True, "deadlocks": 0,
                     "tiering_wins": True,
-                    "tiering_streams_identical": True}}}}
+                    "tiering_streams_identical": True,
+                    "recovery_wins": True,
+                    "streams_identical_after_crash": True}}}}
 
     def gate_with(fresh) -> int:
         with tempfile.TemporaryDirectory() as td:
@@ -192,6 +196,20 @@ def self_test() -> int:
     assert gate_with(corrupt) == 1, \
         "self-test: diverged tiering streams must fail the gate"
 
+    # crash-recovery regressions: snapshot failover stops beating the
+    # from-scratch rerun ...
+    slow_rec = copy.deepcopy(baseline)
+    slow_rec["summary"]["verdict"]["x"]["recovery_wins"] = False
+    assert gate_with(slow_rec) == 1, \
+        "self-test: injected recovery regression (recovery_wins=false) " \
+        "must fail"
+
+    # ... or failover replays/drops tokens and the post-crash streams diverge
+    replay = copy.deepcopy(baseline)
+    replay["summary"]["verdict"]["x"]["streams_identical_after_crash"] = False
+    assert gate_with(replay) == 1, \
+        "self-test: diverged post-crash streams must fail the gate"
+
     drift = copy.deepcopy(baseline)
     drift["config"] = {"seed": 1, "smoke": True}
     drift["cells"]["a"]["avg_latency_s"] = 99.0      # ignored: config drift
@@ -221,8 +239,9 @@ def self_test() -> int:
 
     print("CHECK-REGRESSION SELF-TEST OK: gate fails on injected latency "
           "regression, deadlock, flipped verdict (incl. tiering_wins / "
-          "tiering_streams_identical) and missing artifact; passes clean "
-          "runs and skips config drift")
+          "tiering_streams_identical / recovery_wins / "
+          "streams_identical_after_crash) and missing artifact; passes "
+          "clean runs and skips config drift")
     return 0
 
 

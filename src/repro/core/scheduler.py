@@ -164,14 +164,129 @@ class SchedulerBase:
 
     # ------------------------------------------------------------- queue state
     def add_relquery(self, rq: RelQuery, now: float) -> None:
+        if any(r.state is not RequestState.WAITING or r.output_tokens
+               or r.prefilled_tokens for r in rq.requests):
+            # A relQuery with progress is a failover/drain re-admission from
+            # another replica, not a fresh arrival — its generated tokens must
+            # survive (preemption-style restart), not be double-queued.
+            self.readmit_relquery(rq, now)
+            return
         self.relqueries[rq.rel_id] = rq
         self._waiting_of[rq.rel_id] = list(rq.requests)
         self._queue_version += 1
         self._unfinished += 1
         self.on_relquery_added(rq, now)
 
+    def readmit_relquery(self, rq: RelQuery, now: float) -> None:
+        """Re-admit a relQuery recovered from another replica (crash failover
+        or graceful drain). Non-terminal requests re-enter the waiting queue;
+        any that already generated output restarts preemption-style — the
+        next prefill pass recomputes prompt + preserved generation, and the
+        preserved tokens are never re-emitted downstream. The relQuery brings
+        no resident KV with it: whatever it held belonged to the replica that
+        lost it, so no ledger is charged here."""
+        if rq.rel_id in self.relqueries:
+            raise ValueError(f"relQuery {rq.rel_id!r} is already admitted on "
+                             f"this replica")
+        waiting: List[Request] = []
+        for r in rq.requests:
+            if r.is_terminal():
+                continue
+            r.prefilled = False
+            r.prefilled_tokens = 0
+            r.finish_time = None
+            if r.output_tokens:
+                r.preserved_output_tokens = len(r.output_tokens)
+                r.state = RequestState.PREEMPTED
+            else:
+                r.preserved_output_tokens = 0
+                r.state = RequestState.WAITING
+            waiting.append(r)
+        rq.note_phase_change()
+        self.relqueries[rq.rel_id] = rq
+        if waiting:
+            self._waiting_of[rq.rel_id] = waiting
+            self._queue_version += 1
+        if rq.finish_time is None and rq.cancel_time is None:
+            self._unfinished += 1
+        elif rq.finish_time is not None and rq.cancel_time is None:
+            self.finished_relqueries.append(rq)
+        self.on_relquery_added(rq, now)
+
+    def remove_relquery(self, rel_id: str) -> Optional[RelQuery]:
+        """Detach a live relQuery for migration to another replica (graceful
+        drain). Only legal while it holds no replica-local KV: every
+        non-terminal request WAITING or PREEMPTED with no landed chunks —
+        resident work must finish (or be preempted) on this replica first.
+        Unlike cancellation the relQuery stays live; the caller re-admits it
+        elsewhere (``readmit_relquery``). Returns the detached relQuery, or
+        None when unknown."""
+        rq = self.relqueries.get(rel_id)
+        if rq is None:
+            return None
+        for r in rq.requests:
+            if r.is_terminal():
+                continue
+            if r.state not in (RequestState.WAITING, RequestState.PREEMPTED) \
+                    or r.prefilled_tokens:
+                raise ValueError(
+                    f"cannot migrate relQuery {rel_id!r}: request "
+                    f"{r.req_id} is {r.state.value} with resident KV")
+        del self.relqueries[rel_id]
+        self._waiting_of.pop(rel_id, None)
+        self._order_cache.pop(rel_id, None)
+        self._queue_version += 1
+        self._tmpl_key.pop(rel_id, None)
+        for r in rq.requests:
+            self._prompt_keys.pop(r.req_id, None)
+        if rq.finish_time is None and rq.cancel_time is None:
+            self._unfinished -= 1
+        self.on_relquery_removed(rq)
+        return rq
+
     def on_relquery_added(self, rq: RelQuery, now: float) -> None:
         pass
+
+    def on_relquery_removed(self, rq: RelQuery) -> None:
+        pass
+
+    def audit_ledgers(self, *, repair: bool = False) -> Dict[str, int]:
+        """One audited source of truth for every token ledger, derived from
+        the queues themselves: ``tokens_in_use`` is the resident KV of the
+        running requests, ``partial_prefill_tokens`` the landed chunks of
+        waiting requests, ``host_tokens_in_use`` the swapped population,
+        ``committed_tokens`` the sum of charged footprints (the per-request
+        charge is prediction-dependent, so the footprint map is the ledger of
+        record, not a recomputation), and ``_unfinished`` the non-terminal
+        relQuery count. ``repair=True`` assigns the derived values (the
+        restore path); ``repair=False`` asserts the incremental ledgers match
+        them exactly (the ``--debug-invariants`` per-tick audit)."""
+        waiting = [r for lst in self._waiting_of.values() for r in lst]
+        expected = {
+            "tokens_in_use": sum(r.total_tokens for r in self._running),
+            "partial_prefill_tokens": sum(r.prefilled_tokens for r in waiting),
+            "host_tokens_in_use": sum(r.total_tokens for r in self._swapped),
+            "committed_tokens": sum(self._footprint_of.values()),
+            "_unfinished": sum(
+                1 for rq in self.relqueries.values()
+                if rq.finish_time is None and rq.cancel_time is None),
+        }
+        if repair:
+            for key, value in expected.items():
+                setattr(self, key, value)
+            return expected
+        for key, value in expected.items():
+            got = getattr(self, key)
+            assert got == value, (
+                f"ledger drift: {key}={got} but queues imply {value}")
+        owners = {r.req_id for r in self._running}
+        owners |= {r.req_id for r in waiting if r.prefilled_tokens}
+        charged = set(self._footprint_of)
+        assert charged == owners, (
+            f"footprint ledger drift: charged-but-not-resident="
+            f"{sorted(charged - owners)}, resident-but-uncharged="
+            f"{sorted(owners - charged)}")
+        return expected
 
     def active_relqueries(self) -> List[RelQuery]:
         return [rq for rq in self.relqueries.values()
@@ -1150,6 +1265,12 @@ class RelServeScheduler(SchedulerBase):
     def on_relquery_cancelled(self, rq: RelQuery, now: float) -> None:
         # The DPU keeps a per-relQuery resample clock; drop it so the entry
         # can't alias a future relQuery reusing the id.
+        self.dpu.forget(rq.rel_id)
+
+    def on_relquery_removed(self, rq: RelQuery) -> None:
+        # Migration (graceful drain) detaches the relQuery the same way
+        # cancellation does as far as DPU identity is concerned: the
+        # receiving replica's DPU starts it fresh.
         self.dpu.forget(rq.rel_id)
 
     def _checkpoint_extra(self):

@@ -350,6 +350,10 @@ class EngineCore:
         assert s.tokens_in_use >= 0, f"tokens_in_use={s.tokens_in_use}"
         assert s.committed_tokens >= 0, f"committed_tokens={s.committed_tokens}"
         assert s.partial_prefill_tokens >= 0
+        if hasattr(s, "audit_ledgers"):
+            # every incremental ledger must equal its queue-derived value —
+            # the same derivation restore_scheduler rebuilds from
+            s.audit_ledgers(repair=False)
         host = getattr(s, "host_tokens_in_use", 0)
         assert host >= 0, f"host_tokens_in_use={host}"
         cap = getattr(s, "host_kv_cap", 0)

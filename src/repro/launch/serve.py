@@ -37,7 +37,8 @@ from repro.core.priority import BatchLimits, DPUConfig
 from repro.data.datasets import ALL_DATASETS, make_dataset
 from repro.data.trace import TraceConfig, build_trace
 from repro.planner import PLAN_MODES, PlanExecutor, Planner
-from repro.serving import ROUTER_POLICIES, Frontend, build_simulated_cluster
+from repro.serving import (ROUTER_POLICIES, AutoscaleConfig, Autoscaler,
+                           Frontend, build_simulated_cluster)
 from repro.serving.frontend import RelQueryStatus
 
 
@@ -162,6 +163,72 @@ def run_open_loop(frontend: Frontend, trace) -> "object":
     return report
 
 
+def run_elastic_replay(frontend: Frontend, cluster, trace,
+                       crash_at: "float | None" = None,
+                       metrics_log: "str | None" = None,
+                       metrics_interval: float = 5.0,
+                       max_iterations: int = 2_000_000):
+    """Closed-loop replay with the elastic controls live: deterministic
+    replica-crash injection at ``--crash-at`` (the busiest admitting replica
+    dies; its in-flight relQueries fail over to the survivors), autoscaler
+    ticks (attached on the cluster), and periodic ``metrics_snapshot``
+    samples written as JSONL to ``--metrics-log``."""
+    import json
+    import math
+    import os
+
+    pending = sorted(trace, key=lambda r: r.arrival_time)
+    idx = 0
+    it = 0
+    crash_done = crash_at is None
+    samples = []
+    next_sample = 0.0
+    while True:
+        f = frontend.next_step_time()
+        next_step = math.inf if f is None else f
+        next_arrival = (pending[idx].arrival_time if idx < len(pending)
+                        else math.inf)
+        if not crash_done and min(next_step, next_arrival) >= crash_at:
+            admitting = cluster.admitting_replicas()
+            victim = max(admitting,
+                         key=lambda i: (cluster.cores[i].load(), -i))
+            event = cluster.crash_replica(victim, crash_at)
+            print(f"[fault] crashed replica {victim} at t={crash_at:.2f}s: "
+                  f"{event['victims']} relQueries failed over "
+                  f"({event['from_snapshot']} from snapshot, "
+                  f"{event['tokens_preserved']} tokens preserved, "
+                  f"{event['tokens_lost']} lost -> recomputed)")
+            crash_done = True
+            continue
+        if math.isinf(next_step) and math.isinf(next_arrival):
+            break
+        if next_arrival <= next_step:
+            frontend.submit(pending[idx], now=next_arrival)
+            idx += 1
+        else:
+            frontend.step()
+            it += 1
+            if it >= max_iterations:
+                raise RuntimeError(
+                    "elastic replay exceeded max_iterations — likely livelock")
+        if metrics_log is not None and frontend.clock >= next_sample:
+            samples.append(cluster.metrics_snapshot(frontend.clock))
+            next_sample = frontend.clock + metrics_interval
+    if not crash_done:
+        print(f"[fault] warning: workload drained before --crash-at "
+              f"{crash_at}s — no crash was injected")
+    if metrics_log is not None:
+        samples.append(cluster.metrics_snapshot(frontend.clock))
+        parent = os.path.dirname(metrics_log)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        with open(metrics_log, "w") as fh:
+            for s in samples:
+                fh.write(json.dumps(s) + "\n")
+        print(f"[metrics] wrote {len(samples)} samples to {metrics_log}")
+    return cluster.report()
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scheduler", default="relserve", choices=list(SCHEDULERS))
@@ -247,6 +314,36 @@ def main() -> None:
                          "streams and simulated-clock reports are "
                          "bit-identical either way")
     ap.add_argument("--starvation-threshold", type=float, default=None)
+    ap.add_argument("--autoscale", action="store_true",
+                    help="attach the queue-depth/p50 autoscaler: replicas are "
+                         "added under backlog and gracefully drained (migrate "
+                         "waiting relQueries, finish resident work, retire) "
+                         "when idle, between --min-replicas and "
+                         "--max-replicas (simulate, closed-loop)")
+    ap.add_argument("--min-replicas", type=int, default=None,
+                    help="autoscaler floor (default 1)")
+    ap.add_argument("--max-replicas", type=int, default=None,
+                    help="autoscaler ceiling (default max(4, 2x "
+                         "--num-replicas))")
+    ap.add_argument("--crash-at", type=float, default=None,
+                    help="deterministic fault injection: kill the busiest "
+                         "admitting replica at this simulated time; its "
+                         "in-flight relQueries fail over to the survivors "
+                         "(rewound to the last periodic snapshot when one "
+                         "exists) with final streams bit-identical to a "
+                         "crash-free run (simulate, closed-loop, "
+                         ">= 2 replicas)")
+    ap.add_argument("--snapshot-every", type=int, default=None,
+                    help="periodic per-replica scheduler snapshot cadence in "
+                         "batches — the crash-recovery anchor (default 20 "
+                         "with --crash-at, else 0 = off)")
+    ap.add_argument("--metrics-log", default=None, metavar="PATH",
+                    help="write periodic cluster metrics_snapshot samples "
+                         "(per-replica queue depth, KV device/host occupancy, "
+                         "preemptions, swaps, prefix-hit ratio, router "
+                         "spills) as JSONL (simulate, closed-loop)")
+    ap.add_argument("--metrics-interval", type=float, default=5.0,
+                    help="simulated seconds between --metrics-log samples")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -280,6 +377,41 @@ def main() -> None:
     if args.swap_bandwidth is not None and args.swap_bandwidth <= 0:
         raise SystemExit(f"--swap-bandwidth must be > 0 GB/s "
                          f"(got {args.swap_bandwidth})")
+    elastic = (args.autoscale or args.crash_at is not None
+               or args.metrics_log is not None)
+    if elastic and not args.simulate:
+        raise SystemExit("--autoscale/--crash-at/--metrics-log drive the "
+                         "elastic simulated cluster; add --simulate")
+    if elastic and (args.open_loop or args.plan != "off"):
+        raise SystemExit("--autoscale/--crash-at/--metrics-log run the "
+                         "closed-loop elastic replay; drop --open-loop/--plan")
+    if args.crash_at is not None and args.crash_at <= 0:
+        raise SystemExit(f"--crash-at must be > 0 s (got {args.crash_at})")
+    if args.crash_at is not None and args.num_replicas < 2:
+        raise SystemExit("--crash-at needs --num-replicas >= 2: the failed "
+                         "replica's work must have a survivor to fail over to")
+    if (args.min_replicas is not None or args.max_replicas is not None) \
+            and not args.autoscale:
+        raise SystemExit("--min-replicas/--max-replicas only apply with "
+                         "--autoscale")
+    if args.snapshot_every is not None and args.snapshot_every < 0:
+        raise SystemExit(f"--snapshot-every must be >= 0 batches "
+                         f"(got {args.snapshot_every})")
+    if args.snapshot_every is not None and not args.simulate:
+        raise SystemExit("--snapshot-every only applies with --simulate")
+    if args.metrics_interval <= 0:
+        raise SystemExit(f"--metrics-interval must be > 0 s "
+                         f"(got {args.metrics_interval})")
+    min_replicas = args.min_replicas if args.min_replicas is not None else 1
+    max_replicas = args.max_replicas if args.max_replicas is not None \
+        else max(4, 2 * args.num_replicas)
+    if args.autoscale and not (min_replicas <= args.num_replicas
+                               <= max_replicas):
+        raise SystemExit(f"--autoscale needs --min-replicas <= --num-replicas "
+                         f"<= --max-replicas (got {min_replicas} / "
+                         f"{args.num_replicas} / {max_replicas})")
+    snapshot_every = args.snapshot_every if args.snapshot_every is not None \
+        else (20 if args.crash_at is not None else 0)
     lm = a100_opt13b()
     limits = BatchLimits() if args.kv_cap is None else BatchLimits(cap=args.kv_cap)
     prefix_sharing = args.prefix_sharing == "on"
@@ -305,7 +437,7 @@ def main() -> None:
             router_policy=args.router, dpu_config=dpu, seed=args.seed,
             limits=limits, kv_admission=args.kv_admission,
             prefix_sharing=prefix_sharing, engine_loop=args.engine_loop,
-            **tiering_kw)
+            snapshot_every=snapshot_every, **tiering_kw)
         print(f"scheduler={args.scheduler} replicas={args.num_replicas} "
               f"router={args.router} kv-admission={args.kv_admission} "
               f"prefix-sharing={args.prefix_sharing} "
@@ -316,16 +448,41 @@ def main() -> None:
         elif args.plan != "off":
             report = run_planned(Frontend(cluster), trace, args.plan)
             _print_report("planned", report)
+        elif elastic:
+            if args.autoscale:
+                cluster.attach_autoscaler(Autoscaler(cluster, AutoscaleConfig(
+                    min_replicas=min_replicas, max_replicas=max_replicas)))
+            fe = Frontend(cluster)
+            try:
+                result = run_elastic_replay(
+                    fe, cluster, trace, crash_at=args.crash_at,
+                    metrics_log=args.metrics_log,
+                    metrics_interval=args.metrics_interval)
+            finally:
+                fe.close()
+            for i, rep in enumerate(result.per_replica):
+                _print_report(f"replica {i}", rep)
+            _print_report("merged", result.merged)
+            report = result.merged
+            if result.scale_events:
+                adds = sum(1 for e in result.scale_events
+                           if e["action"] == "add")
+                drains = sum(1 for e in result.scale_events
+                             if e["action"] == "drain")
+                print(f"[autoscale] {adds} replicas added, {drains} drained; "
+                      f"final fleet {result.replica_states}")
         else:
             result = cluster.run_trace(trace)
             for i, rep in enumerate(result.per_replica):
                 _print_report(f"replica {i}", rep)
             _print_report("merged", result.merged)
             report = result.merged
-        if args.num_replicas > 1:
+        if args.num_replicas > 1 or elastic:
             stats = cluster.router.stats
             print(f"router: {stats['routed']} routed, "
-                  f"{stats['spilled']} spilled")
+                  f"{stats['spilled']} spilled, "
+                  f"{stats['template_homes']} live template homes "
+                  f"({stats['template_homes_created']} created)")
     else:
         import jax
 

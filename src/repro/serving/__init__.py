@@ -1,6 +1,7 @@
 """Serving layer: the open-loop ``Frontend`` (submit / stream / cancel /
 snapshot) over a relQuery-affine ``Router`` and a ``Cluster`` of steppable
 ``EngineCore`` replicas sharing one clock."""
+from repro.serving.autoscaler import AutoscaleConfig, Autoscaler
 from repro.serving.cluster import Cluster, ClusterReport
 from repro.serving.factory import build_real_engine, build_simulated_cluster
 from repro.serving.frontend import (Frontend, RelQueryCancelledError,
@@ -8,7 +9,8 @@ from repro.serving.frontend import (Frontend, RelQueryCancelledError,
 from repro.serving.router import (ROUTER_POLICIES, Router, route_relquery,
                                   template_fingerprint)
 
-__all__ = ["Cluster", "ClusterReport", "Frontend", "RelQueryCancelledError",
-           "RelQueryHandle", "RelQueryStatus", "Router", "ROUTER_POLICIES",
-           "build_real_engine", "build_simulated_cluster", "route_relquery",
+__all__ = ["AutoscaleConfig", "Autoscaler", "Cluster", "ClusterReport",
+           "Frontend", "RelQueryCancelledError", "RelQueryHandle",
+           "RelQueryStatus", "Router", "ROUTER_POLICIES", "build_real_engine",
+           "build_simulated_cluster", "route_relquery",
            "template_fingerprint"]

@@ -29,7 +29,8 @@ def build_simulated_cluster(num_replicas: int, scheduler: str = "relserve",
                             engine_loop: str = "serial",
                             kv_tiering: bool = False, host_kv_cap: int = 0,
                             swap_bandwidth_gbps: float = 32.0,
-                            debug_invariants: bool = False) -> Cluster:
+                            debug_invariants: bool = False,
+                            snapshot_every: int = 0) -> Cluster:
     lm = latency_model or a100_opt13b()
     caches = {}
 
@@ -51,7 +52,8 @@ def build_simulated_cluster(num_replicas: int, scheduler: str = "relserve",
 
     return Cluster(make_scheduler, make_executor, num_replicas,
                    router=router or Router(num_replicas, policy=router_policy),
-                   engine_loop=engine_loop, debug_invariants=debug_invariants)
+                   engine_loop=engine_loop, debug_invariants=debug_invariants,
+                   snapshot_every=snapshot_every)
 
 
 def build_real_engine(arch: str = "qwen3-1.7b", scheduler: str = "relserve",

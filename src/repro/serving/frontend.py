@@ -206,12 +206,22 @@ class Frontend:
         # Chain onto (don't clobber) any already-installed batch listener, so
         # a second Frontend over the same backend — e.g. the deprecated
         # run_trace shims — never detaches a live frontend's streaming.
-        self._prev_on_batch = [core.on_batch for core in self.backend.cores]
+        self._prev_on_batch = []
         self._installed = []
-        for core, prev in zip(self.backend.cores, self._prev_on_batch):
-            listener = self._chained(prev)
-            core.on_batch = listener
-            self._installed.append(listener)
+        for core in self.backend.cores:
+            self._install_listener(core)
+        # Elastic backends (Cluster) mint replicas after construction; the
+        # hook keeps new cores streaming through this frontend too.
+        hooks = getattr(self.backend, "core_added_hooks", None)
+        if hooks is not None:
+            hooks.append(self._install_listener)
+
+    def _install_listener(self, core) -> None:
+        prev = core.on_batch
+        listener = self._chained(prev)
+        core.on_batch = listener
+        self._prev_on_batch.append(prev)
+        self._installed.append(listener)
 
     def _chained(self, prev):
         def listener(event, batch, result):
@@ -229,6 +239,9 @@ class Frontend:
         run_trace shims call this so their throwaway frontends don't outlive
         the replay."""
         self._closed = True
+        hooks = getattr(self.backend, "core_added_hooks", None)
+        if hooks is not None and self._install_listener in hooks:
+            hooks.remove(self._install_listener)
         for core, prev, mine in zip(self.backend.cores, self._prev_on_batch,
                                     self._installed):
             if core.on_batch is mine:
@@ -281,6 +294,26 @@ class Frontend:
         self.handles[rq.rel_id] = handle
         if deadline is not None:
             self._deadline_handles.append(handle)
+        return handle
+
+    def attach(self, rq: RelQuery, *, replica: int = 0,
+               on_token: Optional[TokenCallback] = None,
+               delivered: Optional[Dict[str, int]] = None) -> RelQueryHandle:
+        """Adopt a relQuery that is *already admitted* in the backend — the
+        restart path: a replica restored via ``restore_scheduler`` comes up
+        holding relQueries this (new) frontend never saw. ``delivered`` seeds
+        the per-request streamed-token high-water marks (the restore result's
+        ``delivered`` map), so re-prefilled generation is recomputed but
+        never re-emitted to the client. Tokens already on the requests are
+        treated as delivered when no floor is given."""
+        if rq.rel_id in self.handles:
+            raise ValueError(f"relQuery {rq.rel_id!r} already has a handle")
+        handle = RelQueryHandle(self, rq, replica, on_token=on_token)
+        floors = delivered or {}
+        for r in rq.requests:
+            handle._delivered[r.req_id] = floors.get(
+                r.req_id, len(r.output_tokens))
+        self.handles[rq.rel_id] = handle
         return handle
 
     def step(self) -> Optional[BatchEvent]:

@@ -64,29 +64,69 @@ class Router:
         self._rr = 0
         self._template_home: Dict[int, int] = {}   # fingerprint -> replica
         self.max_template_homes = 4096             # oldest dropped beyond this
+        # ``template_homes`` is the LIVE map size (eviction and replica death
+        # shrink it); ``template_homes_created`` counts first-sight
+        # assignments cumulatively — the two diverge once the FIFO bound or
+        # ``evict_replica`` fires.
         self.stats = {"routed": 0, "spilled": 0, "template_homes": 0,
-                      "warm_hits": 0, "rehomed": 0}
+                      "template_homes_created": 0, "warm_hits": 0,
+                      "rehomed": 0}
 
+    # ------------------------------------------------------------- elasticity
+    def grow(self, num_replicas: int) -> None:
+        """Widen the replica index space (the cluster added replicas)."""
+        if num_replicas < self.num_replicas:
+            raise ValueError(
+                f"grow({num_replicas}) below current {self.num_replicas}; "
+                f"shrinking routes through eligibility, not resizing")
+        self.num_replicas = num_replicas
+
+    def evict_replica(self, replica: int) -> int:
+        """Forget template homes pinned to a dead/retired replica. Affected
+        templates re-home on next sight (warmth/load-aware), exactly like a
+        FIFO-evicted entry. Returns the number of homes dropped."""
+        gone = [fp for fp, home in self._template_home.items()
+                if home == replica]
+        for fp in gone:
+            del self._template_home[fp]
+        self.stats["template_homes"] = len(self._template_home)
+        return len(gone)
+
+    # ---------------------------------------------------------------- routing
     def route(self, rq: RelQuery, loads: Optional[Sequence[int]] = None,
-              warmth: Optional[Sequence[int]] = None) -> int:
+              warmth: Optional[Sequence[int]] = None,
+              eligible: Optional[Sequence[int]] = None) -> int:
         """Pick the replica for ``rq``. ``loads`` is the per-replica
         outstanding-request count at admission time (required by the
         load-aware policies); ``warmth`` is an optional per-replica
-        cached-prefix-token probe for ``rq``'s prompts (prefix_affinity)."""
+        cached-prefix-token probe for ``rq``'s prompts (prefix_affinity);
+        ``eligible`` restricts placement to the admitting replicas (draining
+        and dead replicas drop out) — None means all are admitting."""
         self.stats["routed"] += 1
-        if self.num_replicas <= 1:
-            return 0
+        elig = list(range(self.num_replicas)) if eligible is None \
+            else sorted(eligible)
+        if not elig:
+            raise ValueError("route() needs at least one eligible replica")
+        if len(elig) == 1:
+            return elig[0]
+        elig_set = set(elig)
         if self.policy == "round_robin":
-            r = self._rr
-            self._rr = (self._rr + 1) % self.num_replicas
+            r = self._rr % self.num_replicas
+            while r not in elig_set:
+                r = (r + 1) % self.num_replicas
+            self._rr = (r + 1) % self.num_replicas
             return r
         if self.policy == "prefix_affinity":
-            home = self._template_home_for(rq, loads, warmth)
+            home = self._template_home_for(rq, loads, warmth, elig)
         else:
             home = route_relquery(rq.rel_id, self.num_replicas)
+            if home not in elig_set:
+                # the affine home is not admitting: fall back to a stable
+                # hash over the eligible set so placement stays deterministic
+                home = elig[zlib.crc32(rq.rel_id.encode()) % len(elig)]
         if self.policy == "affinity" or loads is None:
             return home
-        coldest = min(range(self.num_replicas), key=lambda i: (loads[i], i))
+        coldest = min(elig, key=lambda i: (loads[i], i))
         if self.policy == "least_loaded":
             return coldest
         # affinity_spill / prefix_affinity: stay home unless home is
@@ -97,33 +137,40 @@ class Router:
         return home
 
     def _template_home_for(self, rq: RelQuery, loads: Optional[Sequence[int]],
-                           warmth: Optional[Sequence[int]]) -> int:
+                           warmth: Optional[Sequence[int]],
+                           elig: Sequence[int]) -> int:
         """Sticky template->replica assignment. First sight of a template
         picks the warmest replica (its cache already holds this prefix), else
         the least-loaded one, else the stable hash; later relQueries follow."""
         fp = template_fingerprint(rq)
         home = self._template_home.get(fp)
-        if home is not None:
+        elig_set = set(elig)
+        if home is not None and home in elig_set:
             # sticky homes can go stale in a long-running service: if the
             # home's cache no longer holds this prefix but another replica's
             # does (e.g. past spillover traffic warmed it), follow the warmth
-            if warmth is not None and warmth[home] == 0 and max(warmth) > 0:
-                home = max(range(self.num_replicas), key=lambda i: (warmth[i], -i))
+            if warmth is not None and warmth[home] == 0 \
+                    and max(warmth[i] for i in elig) > 0:
+                home = max(elig, key=lambda i: (warmth[i], -i))
                 self._template_home[fp] = home
                 self.stats["rehomed"] += 1
             return home
-        if warmth is not None and max(warmth) > 0:
-            home = max(range(self.num_replicas),
-                       key=lambda i: (warmth[i], -i))
+        if home is not None:
+            # the sticky home stopped admitting (drain/crash): rehome below
+            self.stats["rehomed"] += 1
+        if warmth is not None and max(warmth[i] for i in elig) > 0:
+            home = max(elig, key=lambda i: (warmth[i], -i))
             self.stats["warm_hits"] += 1
         elif loads is not None:
-            home = min(range(self.num_replicas), key=lambda i: (loads[i], i))
+            home = min(elig, key=lambda i: (loads[i], i))
         else:
-            home = fp % self.num_replicas
+            home = elig[fp % len(elig)]
+        if fp not in self._template_home:
+            self.stats["template_homes_created"] += 1
         self._template_home[fp] = home
-        self.stats["template_homes"] += 1
         while len(self._template_home) > self.max_template_homes:
             # FIFO bound (insertion-ordered dict): an evicted template simply
             # re-homes on next sight — the map must not grow without bound
             self._template_home.pop(next(iter(self._template_home)))
+        self.stats["template_homes"] = len(self._template_home)
         return home

@@ -1,15 +1,24 @@
 """Fault tolerance: engine snapshot/restore mid-trace; in-flight relQueries
-replay their prefill (idempotent) and the service completes."""
+replay their prefill (idempotent) and the service completes. The round-trip
+property suite stresses every request state the scheduler can produce
+(preempted, mid-chunk prefill, swapped-out, cancelled) and pins that restored
+replicas regenerate bit-identical token streams — both lossless
+(``kv_lost=False``) and crash-semantics (``kv_lost=True``) restores — plus
+the in-process Cluster failover, drain, and autoscaling built on top."""
 import copy
+import json
+import math
+from collections import defaultdict
 
 import pytest
 
 from repro.core.latency_model import a100_opt13b
 from repro.core.policies import SCHEDULERS
 from repro.core.priority import BatchLimits
-from repro.core.relquery import RequestState
+from repro.core.relquery import RelQuery, Request, RequestState
 from repro.data.trace import quick_trace
-from repro.distributed.fault_tolerance import restore_scheduler, snapshot_scheduler
+from repro.distributed.fault_tolerance import (restore_scheduler,
+                                               snapshot_scheduler)
 from repro.engine.engine import ServingEngine
 from repro.engine.prefix_cache import PrefixCache
 from repro.engine.simulator import SimulatedExecutor, sim_output_len
@@ -84,3 +93,425 @@ def test_snapshot_preserves_latency_bookkeeping():
         assert rq2.finish_time == rq.finish_time
         assert rq2.first_prefill_start == rq.first_prefill_start
         assert rq2.latency() == rq.latency()
+
+
+# ==========================================================================
+# round-trip property suite: snapshot under pressure, restore, continue
+# ==========================================================================
+_BASE_TRACE = None
+
+
+def _base_trace():
+    """One trace shared (via deepcopy) by every run in this suite — req_ids
+    are assigned from a process-global counter, so reference and restored
+    runs must copy the *same* trace objects to stay comparable."""
+    global _BASE_TRACE
+    if _BASE_TRACE is None:
+        _BASE_TRACE = quick_trace("beer", num_relqueries=8, rate=4.0, seed=3,
+                                  max_requests=10)
+    return copy.deepcopy(_BASE_TRACE)
+
+
+def _stress_scheduler(name: str, trace, pc=None):
+    """A scheduler under every kind of KV pressure at once: tight cap +
+    optimistic admission, a small prefill chunk (mid-chunk WAITING requests),
+    and an undersized host tier — so reclaim sometimes swaps (SWAPPED
+    residents) and sometimes recomputes (PREEMPTED restarts)."""
+    lm = a100_opt13b()
+    max_fp = max(r.num_prompt_tokens + r.max_output_tokens
+                 for rq in trace for r in rq.requests)
+    cap = int(max_fp * 1.3)
+    limits = BatchLimits(cap=cap, max_num_batched_tokens=96)
+    pc = pc or PrefixCache(block_size=16)
+    sched = SCHEDULERS[name](limits=limits, latency_model=lm, prefix_cache=pc,
+                             kv_admission="optimistic", kv_tiering=True,
+                             host_kv_cap=int(0.5 * cap))
+    return sched, SimulatedExecutor(lm, prefix_cache=pc), pc
+
+
+def _drive(sched, ex, pending, iterations, now=0.0, idx=0, cancel_at=None):
+    """Manual engine loop for ``iterations`` batches; returns (now, idx)."""
+    for it in range(iterations):
+        while idx < len(pending) and pending[idx].arrival_time <= now:
+            sched.add_relquery(pending[idx], now)
+            idx += 1
+        if cancel_at is not None and it == cancel_at and sched.relqueries:
+            live = [rq for rq in sched.relqueries.values()
+                    if rq.finish_time is None and rq.cancel_time is None]
+            if live:
+                sched.cancel_relquery(live[0].rel_id, now)
+        batch = sched.schedule(now)
+        if batch is None:
+            if idx < len(pending):
+                now = pending[idx].arrival_time
+                continue
+            break
+        dur, result = ex.execute(batch, now)
+        sched.complete_batch(batch, result, now, now + dur)
+        now += dur
+    return now, idx
+
+
+_REFERENCE = {}
+
+
+def _reference_streams(name: str):
+    if name not in _REFERENCE:
+        trace = _base_trace()
+        sched, ex, pc = _stress_scheduler(name, trace)
+        ServingEngine(sched, ex, debug_invariants=True).run_trace(trace)
+        _REFERENCE[name] = {r.req_id: tuple(r.output_tokens)
+                            for rq in trace for r in rq.requests}
+    return _REFERENCE[name]
+
+
+@pytest.mark.parametrize("name", ["relserve", "vllm"])
+@pytest.mark.parametrize("kv_lost", [True, False])
+@pytest.mark.parametrize("stop_after", [30, 400])
+def test_roundtrip_under_pressure_continues_bitidentical(name, kv_lost,
+                                                         stop_after):
+    """Snapshot a scheduler mid-flight under cap pressure, restore into a
+    fresh one (with and without the KV surviving), finish the workload, and
+    require the final token streams to match a never-interrupted run."""
+    reference = _reference_streams(name)
+
+    trace = _base_trace()
+    sched, ex, _ = _stress_scheduler(name, trace)
+    pending = sorted(trace, key=lambda r: r.arrival_time)
+    now, idx = _drive(sched, ex, pending, stop_after)
+    sched.audit_ledgers(repair=False)        # ledgers conserved mid-flight
+    snap = snapshot_scheduler(sched)
+    snap = json.loads(json.dumps(snap))      # must survive a JSON round-trip
+
+    sched2, ex2, _ = _stress_scheduler(name, trace)
+    info = restore_scheduler(sched2, snap, kv_lost=kv_lost)
+    assert set(info["delivered"]) == {r.req_id
+                                      for rq in trace for r in rq.requests
+                                      if rq.rel_id in sched.relqueries}
+    sched2.audit_ledgers(repair=False)       # audited rebuild is consistent
+    if kv_lost:
+        # crash semantics: nothing resident, generated tokens preserved
+        assert not sched2.running_requests()
+        assert sched2.tokens_in_use == 0
+        assert sched2.host_tokens_in_use == 0
+        assert sched2.partial_prefill_tokens == 0
+        for rq in sched2.relqueries.values():
+            for r in rq.requests:
+                assert r.state not in (RequestState.RUNNING,
+                                       RequestState.SWAPPED)
+                if r.state is RequestState.PREEMPTED:
+                    assert r.preserved_output_tokens == len(r.output_tokens)
+    else:
+        # lossless: queues, states, mid-chunk progress, ledgers all exact
+        assert [r.req_id for r in sched2._running] == \
+            [r.req_id for r in sched._running]
+        assert [r.req_id for r in sched2._swapped] == \
+            [r.req_id for r in sched._swapped]
+        assert {k: [r.req_id for r in v]
+                for k, v in sched2._waiting_of.items()} == \
+            {k: [r.req_id for r in v] for k, v in sched._waiting_of.items()}
+        assert sched2._footprint_of == sched._footprint_of
+        assert sched2.tokens_in_use == sched.tokens_in_use
+        assert sched2.host_tokens_in_use == sched.host_tokens_in_use
+        assert sched2.partial_prefill_tokens == sched.partial_prefill_tokens
+        assert sched2.committed_tokens == sched.committed_tokens
+        assert sched2.preemptions == sched.preemptions
+        assert sched2.swap_outs == sched.swap_outs
+        for rel_id, rq in sched.relqueries.items():
+            for r, r2 in zip(rq.requests, sched2.relqueries[rel_id].requests):
+                assert (r2.state, r2.prefilled_tokens, r2.output_tokens) == \
+                    (r.state, r.prefilled_tokens, r.output_tokens)
+
+    eng = ServingEngine(sched2, ex2, debug_invariants=True)
+    eng.run_trace(pending[idx:])
+    streams = {r.req_id: tuple(r.output_tokens)
+               for rq in sched2.relqueries.values() for r in rq.requests}
+    assert streams == reference, "restored run diverged from reference"
+    assert sched2.tokens_in_use == 0 and sched2.host_tokens_in_use == 0
+
+
+@pytest.mark.parametrize("name,expect", [
+    # relserve chunks its prefill, so mid-chunk WAITING must appear too;
+    # vllm prefills whole prompts and never leaves a partial chunk
+    ("relserve", {RequestState.PREEMPTED, RequestState.SWAPPED, "mid_chunk"}),
+    ("vllm", {RequestState.PREEMPTED, RequestState.SWAPPED}),
+])
+def test_stress_snapshot_is_nonvacuous(name, expect):
+    """The pressure config must actually produce the states the round-trip
+    suite claims to cover — otherwise those tests silently test nothing."""
+    trace = _base_trace()
+    sched, ex, _ = _stress_scheduler(name, trace)
+    pending = sorted(trace, key=lambda r: r.arrival_time)
+    seen = set()
+    now, idx = 0.0, 0
+    for _ in range(500):
+        now, idx = _drive(sched, ex, pending, 1, now=now, idx=idx)
+        for rq in sched.relqueries.values():
+            for r in rq.requests:
+                seen.add(r.state)
+                if r.state is RequestState.WAITING and r.prefilled_tokens:
+                    seen.add("mid_chunk")
+    assert RequestState.RUNNING in seen
+    missing = expect - seen
+    assert not missing, f"stress config never produced {missing}"
+
+
+def test_cancelled_relquery_roundtrip():
+    trace = _base_trace()
+    sched, ex, _ = _stress_scheduler("relserve", trace)
+    pending = sorted(trace, key=lambda r: r.arrival_time)
+    now, idx = _drive(sched, ex, pending, 20, cancel_at=10)
+    cancelled = [rq for rq in sched.relqueries.values()
+                 if rq.cancel_time is not None]
+    assert cancelled, "driver never cancelled a relQuery"
+    snap = json.loads(json.dumps(snapshot_scheduler(sched)))
+    sched2, ex2, _ = _stress_scheduler("relserve", trace)
+    restore_scheduler(sched2, snap)
+    for rq in cancelled:
+        rq2 = sched2.relqueries[rq.rel_id]
+        assert rq2.cancel_time == rq.cancel_time
+        assert all(r.state is RequestState.CANCELLED for r in rq2.requests
+                   if r.state is not RequestState.FINISHED) or \
+            all(r2.state == r.state for r, r2 in zip(rq.requests,
+                                                     rq2.requests))
+        assert rq2 not in sched2.finished_relqueries
+    # cancelled work stays dead: finishing the trace never revives it
+    ServingEngine(sched2, ex2).run_trace(pending[idx:])
+    for rq in cancelled:
+        assert sched2.relqueries[rq.rel_id].cancel_time is not None
+
+
+def test_predictor_and_dpu_state_roundtrip():
+    trace = _base_trace()
+    sched, ex, _ = _stress_scheduler("relserve", trace)
+    pending = sorted(trace, key=lambda r: r.arrival_time)
+    _drive(sched, ex, pending, 30)
+    snap = json.loads(json.dumps(snapshot_scheduler(sched)))
+    sched2, _, _ = _stress_scheduler("relserve", trace)
+    restore_scheduler(sched2, snap)
+    if sched.predictor is not None:
+        assert sched2.predictor._obs == sched.predictor._obs
+        assert sched2.predictor.observations == sched.predictor.observations
+        assert sched2.predictor.quantile == sched.predictor.quantile
+    assert sched2.dpu._rng.getstate() == sched.dpu._rng.getstate()
+    assert sched2.dpu._iteration == sched.dpu._iteration
+    assert sched2.dpu._last_sampled == sched.dpu._last_sampled
+    assert sched2.dpu.stats == sched.dpu.stats
+
+
+def test_restore_refuses_bad_version_and_nonempty_scheduler():
+    trace = quick_trace("beer", num_relqueries=2, rate=4.0, seed=1,
+                        max_requests=4)
+    sched, ex, _ = _stress_scheduler("relserve", trace)
+    sched.add_relquery(trace[0], 0.0)
+    snap = snapshot_scheduler(sched)
+    with pytest.raises(ValueError, match="empty scheduler"):
+        restore_scheduler(sched, snap)
+    bad = dict(snap, version=1)
+    sched2, _, _ = _stress_scheduler("relserve", trace)
+    with pytest.raises(ValueError, match="version"):
+        restore_scheduler(sched2, bad)
+
+
+def test_audit_ledgers_detects_drift():
+    trace = _base_trace()
+    sched, ex, _ = _stress_scheduler("relserve", trace)
+    pending = sorted(trace, key=lambda r: r.arrival_time)
+    _drive(sched, ex, pending, 15)
+    sched.audit_ledgers(repair=False)     # consistent mid-flight
+    sched.tokens_in_use += 7              # inject drift
+    with pytest.raises(AssertionError, match="ledger drift"):
+        sched.audit_ledgers(repair=False)
+    sched.audit_ledgers(repair=True)      # audited rebuild heals it
+    sched.audit_ledgers(repair=False)
+
+
+# ==========================================================================
+# cluster failover / drain / autoscaling
+# ==========================================================================
+def _replay_cluster(trace, scheduler, engine_loop, *, crash_frac=None,
+                    snapshot_every=0):
+    """Frontend replay over a 2-replica cluster; optionally crash the
+    busiest replica at ``crash_frac`` x the trace's end-to-end time.
+    Returns (streams, delivered, crash_events, report)."""
+    from repro.serving import Frontend, build_simulated_cluster
+    cluster = build_simulated_cluster(2, scheduler=scheduler, seed=7,
+                                      engine_loop=engine_loop,
+                                      snapshot_every=snapshot_every,
+                                      debug_invariants=True)
+    ran = copy.deepcopy(trace)
+    fe = Frontend(cluster)
+    delivered = defaultdict(list)
+    pending = sorted(ran, key=lambda r: r.arrival_time)
+    idx, crash_at = 0, None
+    if crash_frac is not None:
+        crash_at = crash_frac * max(r.arrival_time for r in pending)
+    crash_done = crash_at is None
+    while True:
+        nxt = fe.next_step_time()
+        ns = math.inf if nxt is None else nxt
+        na = pending[idx].arrival_time if idx < len(pending) else math.inf
+        if not crash_done and min(ns, na) >= crash_at:
+            victim = max(cluster.admitting_replicas(),
+                         key=lambda i: (cluster.cores[i].load(), -i))
+            cluster.crash_replica(victim, crash_at)
+            crash_done = True
+            continue
+        if math.isinf(ns) and math.isinf(na):
+            break
+        if na <= ns:
+            fe.submit(pending[idx], now=na,
+                      on_token=lambda rid, tok: delivered[rid].append(tok))
+            idx += 1
+            continue
+        fe.step()
+    rep = cluster.report()
+    streams = {r.req_id: tuple(r.output_tokens)
+               for rq in ran for r in rq.requests}
+    return streams, {k: tuple(v) for k, v in delivered.items()}, \
+        list(rep.crash_events), rep
+
+
+@pytest.mark.parametrize("scheduler", ["relserve", "vllm"])
+@pytest.mark.parametrize("engine_loop", ["serial", "pipelined"])
+def test_cluster_crash_failover_bitidentical(scheduler, engine_loop):
+    """Kill one of two replicas mid-flight: the failed-over run must finish
+    with byte-identical final streams and must never re-deliver a token the
+    on_token callback already emitted."""
+    trace = quick_trace("beer", num_relqueries=10, rate=3.0, seed=5,
+                        max_requests=12)
+    s_free, d_free, _, rep_free = _replay_cluster(trace, scheduler,
+                                                  engine_loop)
+    s_crash, d_crash, events, rep = _replay_cluster(
+        trace, scheduler, engine_loop, crash_frac=1.2, snapshot_every=4)
+    assert len(events) == 1 and events[0]["victims"] > 0, \
+        "crash point missed the in-flight window — test is vacuous"
+    assert events[0]["from_snapshot"] > 0
+    assert s_crash == s_free, "post-crash streams diverged"
+    for streams, dlv in ((s_free, d_free), (s_crash, d_crash)):
+        assert dlv == {k: v for k, v in streams.items() if v}, \
+            "a client saw duplicated or dropped tokens"
+    assert len(rep.merged.latencies) == len(trace)
+    assert rep.replica_states.count("dead") == 1
+
+
+def test_cluster_drain_migrates_and_retires():
+    from repro.serving import Frontend, build_simulated_cluster
+    trace = quick_trace("beer", num_relqueries=16, rate=6.0, seed=5,
+                        max_requests=10)
+    cluster = build_simulated_cluster(3, scheduler="relserve", seed=7,
+                                      debug_invariants=True)
+    fe = Frontend(cluster)
+    pending = sorted(copy.deepcopy(trace), key=lambda r: r.arrival_time)
+    for rq in pending[:12]:
+        fe.submit(rq, now=rq.arrival_time)
+    for _ in range(8):
+        fe.step()
+    ev = cluster.drain_replica(1, fe.clock)
+    assert cluster.replica_state[1] in ("draining", "dead")
+    with pytest.raises(ValueError):
+        cluster.drain_replica(1, fe.clock)     # already draining/dead
+    for rq in pending[12:]:
+        fe.submit(rq, now=max(rq.arrival_time, fe.clock))
+    fe.drain()
+    rep = cluster.report()
+    assert len(rep.merged.latencies) == len(trace)
+    assert rep.replica_states[1] == "dead"
+    assert ev["action"] == "drain"
+    # a dead replica never admits again
+    assert 1 not in cluster.admitting_replicas()
+
+
+def test_autoscaler_scales_up_and_finishes():
+    from repro.serving import (AutoscaleConfig, Autoscaler, Frontend,
+                               build_simulated_cluster)
+    trace = quick_trace("beer", num_relqueries=20, rate=8.0, seed=5,
+                        max_requests=10)
+    cluster = build_simulated_cluster(1, scheduler="relserve", seed=7,
+                                      debug_invariants=True)
+    auto = Autoscaler(cluster, AutoscaleConfig(
+        min_replicas=1, max_replicas=3, scale_up_queue=4.0,
+        scale_down_queue=0.5, eval_interval_s=0.25, cooldown_s=1.0))
+    cluster.attach_autoscaler(auto)
+    Frontend(cluster).replay(copy.deepcopy(trace))
+    rep = cluster.report()
+    ups = [d for d in auto.decisions if d["action"] == "scale_up"]
+    assert len(ups) >= 1, "burst never triggered a scale-up"
+    assert len(cluster.cores) > 1
+    assert len(rep.merged.latencies) == len(trace)
+    for d in auto.decisions:
+        assert d["signals"]["admitting"] >= 1
+    # config validation rejects nonsense
+    with pytest.raises(ValueError):
+        AutoscaleConfig(min_replicas=3, max_replicas=1).validate()
+
+
+def test_router_template_home_stats_and_evict():
+    from repro.serving import Router
+
+    def mk_rq(rel_id, template):
+        r = Request(rel_id=rel_id, tokens=(1, 2, 3), max_output_tokens=4,
+                    req_id=f"{rel_id}/0", eos_token=None)
+        return RelQuery(rel_id=rel_id, requests=[r], arrival_time=0.0,
+                        max_output_tokens=4, template_id=template)
+
+    router = Router(2, policy="prefix_affinity")
+    for i in range(4):
+        router.route(mk_rq(f"q{i}", f"tmpl-{i % 2}"), loads=[0, 0])
+    assert router.stats["template_homes"] == 2          # live map size
+    assert router.stats["template_homes_created"] == 2  # cumulative
+    # re-routing the same templates must not inflate either stat (the
+    # pre-fix code bumped the live counter on every first-sight branch)
+    for i in range(4):
+        router.route(mk_rq(f"r{i}", f"tmpl-{i % 2}"), loads=[0, 0])
+    assert router.stats["template_homes"] == 2
+    assert router.stats["template_homes_created"] == 2
+    # both templates homed on replica 0 (least-loaded, index tie-break);
+    # killing it drops the live homes but not the cumulative count
+    assert set(router._template_home.values()) == {0}
+    assert router.evict_replica(0) == 2
+    assert router.stats["template_homes"] == 0
+    assert router.stats["template_homes_created"] == 2
+    # next sight re-homes on a surviving replica and counts a fresh creation
+    router.grow(3)
+    router.route(mk_rq("s0", "tmpl-0"), loads=[0, 0, 0], eligible=[1, 2])
+    assert router._template_home and \
+        all(h in (1, 2) for h in router._template_home.values())
+    assert router.stats["template_homes"] == 1
+    assert router.stats["template_homes_created"] == 3
+    with pytest.raises(ValueError):
+        router.grow(1)      # shrinking via grow() is a bug
+
+
+def test_save_checkpoint_stages_inside_target(tmp_path, monkeypatch):
+    """Regression: the staging dir must be created *inside* the target path
+    so the atomic publish is a same-filesystem rename (mkdtemp's default
+    falls back to the system tmpdir and os.replace raises EXDEV) — which
+    requires the target path to exist before mkdtemp runs."""
+    import tempfile
+
+    import numpy as np
+
+    from repro.distributed.fault_tolerance import (latest_step,
+                                                   load_checkpoint,
+                                                   save_checkpoint)
+    target = tmp_path / "nested" / "ckpts"     # does not exist yet
+    staged_dirs = []
+    real_mkdtemp = tempfile.mkdtemp
+
+    def spying_mkdtemp(*a, **kw):
+        staged_dirs.append(kw.get("dir"))
+        return real_mkdtemp(*a, **kw)
+
+    monkeypatch.setattr(tempfile, "mkdtemp", spying_mkdtemp)
+    trees = {"params": {"w": np.arange(4.0).reshape(2, 2)}}
+    final = save_checkpoint(str(target), 3, trees)
+    assert staged_dirs == [str(target)], \
+        "staging dir must live under the checkpoint path"
+    assert latest_step(str(target)) == 3
+    step, loaded = load_checkpoint(str(target), template_trees=trees)
+    assert step == 3
+    np.testing.assert_array_equal(loaded["params"]["w"], trees["params"]["w"])
+    # no stray staging dirs survive the publish
+    assert [d for d in target.iterdir() if d.name.startswith(".ckpt_tmp_")] \
+        == []
