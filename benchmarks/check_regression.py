@@ -16,6 +16,10 @@ Two kinds of checks:
   (``real_executor``) are never latency-compared — their verdict booleans
   carry the regression signal instead.
 
+When ``$GITHUB_STEP_SUMMARY`` is set (GitHub Actions), the gate also appends
+a markdown verdict table — one row per verdict boolean, one per latency
+metric vs its baseline — so the evidence renders on the run page.
+
     PYTHONPATH=src python -m benchmarks.check_regression \
         --baseline-dir benchmarks/baselines --fresh-dir bench_fresh
     PYTHONPATH=src python -m benchmarks.check_regression --self-test
@@ -24,6 +28,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 from pathlib import Path
 from typing import Dict, List, Tuple
@@ -38,7 +43,8 @@ VERDICT_TRUE_KEYS = ("optimistic_wins", "paged_decode_wins",
                      "planned_wins", "dag_ok", "tiering_wins",
                      "tiering_streams_identical", "recovery_wins",
                      "streams_identical_after_crash", "zero_duplicate_tokens",
-                     "autoscale_ok")
+                     "autoscale_ok", "proactive_wins",
+                     "proactive_streams_identical")
 
 
 def _walk(node, path=""):
@@ -67,25 +73,31 @@ def check_invariants(name: str, fresh: dict) -> List[str]:
 
 
 def check_latencies(name: str, baseline: dict, fresh: dict,
-                    tolerance: float) -> Tuple[List[str], List[str]]:
-    """Returns (problems, notes). Latency metrics are matched by path."""
+                    tolerance: float) -> Tuple[List[str], List[str], List[dict]]:
+    """Returns (problems, notes, rows). Latency metrics are matched by path;
+    ``rows`` carries per-metric baseline/fresh pairs for the job summary."""
     if name in WALL_CLOCK_BENCHES:
-        return [], [f"{name}: wall-clock bench — latency comparison skipped"]
+        return [], [f"{name}: wall-clock bench — latency comparison skipped"], []
     if baseline.get("config") != fresh.get("config"):
         return [], [f"{name}: config drift (baseline vs fresh run differ) — "
-                    f"latency comparison skipped"]
+                    f"latency comparison skipped"], []
     base_vals: Dict[str, float] = {
         path: v for path, key, v in _walk(baseline)
         if key in LATENCY_KEYS and isinstance(v, (int, float))}
-    problems, notes = [], []
+    problems, notes, rows = [], [], []
     fresh_vals = {path: v for path, key, v in _walk(fresh)
                   if key in LATENCY_KEYS and isinstance(v, (int, float))}
     for path, base in sorted(base_vals.items()):
         cur = fresh_vals.get(path)
         if cur is None:
             problems.append(f"{name}: metric {path} vanished from fresh run")
+            rows.append({"bench": name, "metric": path, "baseline": base,
+                         "fresh": None, "ok": False})
             continue
-        if base > 0 and cur > base * (1.0 + tolerance):
+        ok = not (base > 0 and cur > base * (1.0 + tolerance))
+        rows.append({"bench": name, "metric": path, "baseline": base,
+                     "fresh": cur, "ok": ok})
+        if not ok:
             problems.append(
                 f"{name}: {path} regressed {base:.4f}s -> {cur:.4f}s "
                 f"(+{(cur / base - 1) * 100:.1f}% > {tolerance * 100:.0f}% "
@@ -93,7 +105,55 @@ def check_latencies(name: str, baseline: dict, fresh: dict,
     notes.append(f"{name}: {len(base_vals)} latency metrics within "
                  f"{tolerance * 100:.0f}%"
                  if not problems else f"{name}: LATENCY REGRESSION")
-    return problems, notes
+    return problems, notes, rows
+
+
+def collect_verdicts(name: str, fresh: dict) -> List[dict]:
+    """Every verdict boolean in the artifact, for the job-summary table."""
+    return [{"bench": name, "verdict": path, "value": value}
+            for path, key, value in _walk(fresh) if key in VERDICT_TRUE_KEYS]
+
+
+def write_step_summary(verdict_rows: List[dict], lat_rows: List[dict],
+                       problems: List[str], tolerance: float) -> None:
+    """Append a markdown verdict table to ``$GITHUB_STEP_SUMMARY`` so the
+    gate's evidence shows up on the Actions run page. No-op outside CI."""
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    ok = "✅" if not problems else "❌"
+    lines = [f"## Bench regression gate {ok} "
+             f"({len(problems)} problem(s))", ""]
+    if verdict_rows:
+        lines += ["### Verdicts", "",
+                  "| bench | verdict | holds |", "|---|---|---|"]
+        for row in verdict_rows:
+            mark = "✅" if row["value"] is True else "❌"
+            lines.append(f"| {row['bench']} | `{row['verdict']}` | {mark} |")
+        lines.append("")
+    if lat_rows:
+        lines += [f"### Latencies vs baseline (tolerance "
+                  f"{tolerance * 100:.0f}%)", "",
+                  "| bench | metric | baseline | fresh | Δ | ok |",
+                  "|---|---|---|---|---|---|"]
+        for row in lat_rows:
+            base, cur = row["baseline"], row["fresh"]
+            if cur is None:
+                delta, fresh_s = "—", "missing"
+            else:
+                delta = (f"{(cur / base - 1) * 100:+.1f}%" if base > 0
+                         else "—")
+                fresh_s = f"{cur:.3f}s"
+            mark = "✅" if row["ok"] else "❌"
+            lines.append(f"| {row['bench']} | `{row['metric']}` | "
+                         f"{base:.3f}s | {fresh_s} | {delta} | {mark} |")
+        lines.append("")
+    if problems:
+        lines += ["### Problems", ""]
+        lines += [f"- {p}" for p in problems]
+        lines.append("")
+    with open(path, "a", encoding="utf-8") as fh:
+        fh.write("\n".join(lines) + "\n")
 
 
 def run_gate(baseline_dir: Path, fresh_dir: Path, tolerance: float) -> int:
@@ -108,6 +168,8 @@ def run_gate(baseline_dir: Path, fresh_dir: Path, tolerance: float) -> int:
     names = sorted({p.name for p in baselines} |
                    {p.name for p in fresh_dir.glob("BENCH_*.json")})
     problems: List[str] = []
+    verdict_rows: List[dict] = []
+    lat_rows: List[dict] = []
     for fname in names:
         name = fname[len("BENCH_"):-len(".json")]
         bpath, fpath = baseline_dir / fname, fresh_dir / fname
@@ -117,16 +179,20 @@ def run_gate(baseline_dir: Path, fresh_dir: Path, tolerance: float) -> int:
             continue
         fresh = json.loads(fpath.read_text())
         problems += check_invariants(name, fresh)
+        verdict_rows += collect_verdicts(name, fresh)
         if not bpath.exists():
             print(f"[check_regression] {name}: no baseline committed — "
                   f"invariants only (commit {bpath} to start tracking)",
                   flush=True)
             continue
         baseline = json.loads(bpath.read_text())
-        lat_problems, notes = check_latencies(name, baseline, fresh, tolerance)
+        lat_problems, notes, rows = check_latencies(name, baseline, fresh,
+                                                    tolerance)
         problems += lat_problems
+        lat_rows += rows
         for note in notes:
             print(f"[check_regression] {note}", flush=True)
+    write_step_summary(verdict_rows, lat_rows, problems, tolerance)
     if problems:
         print(f"[check_regression] {len(problems)} problem(s):",
               file=sys.stderr)
@@ -153,15 +219,25 @@ def self_test() -> int:
                     "tiering_wins": True,
                     "tiering_streams_identical": True,
                     "recovery_wins": True,
-                    "streams_identical_after_crash": True}}}}
+                    "streams_identical_after_crash": True,
+                    "proactive_wins": True,
+                    "proactive_streams_identical": True}}}}
 
-    def gate_with(fresh) -> int:
-        with tempfile.TemporaryDirectory() as td:
-            bdir, fdir = Path(td, "base"), Path(td, "fresh")
-            bdir.mkdir(), fdir.mkdir()
-            (bdir / "BENCH_selftest.json").write_text(json.dumps(baseline))
-            (fdir / "BENCH_selftest.json").write_text(json.dumps(fresh))
-            return run_gate(bdir, fdir, tolerance=0.10)
+    def gate_with(fresh, summary_path=None) -> int:
+        old = os.environ.pop("GITHUB_STEP_SUMMARY", None)
+        if summary_path is not None:
+            os.environ["GITHUB_STEP_SUMMARY"] = str(summary_path)
+        try:
+            with tempfile.TemporaryDirectory() as td:
+                bdir, fdir = Path(td, "base"), Path(td, "fresh")
+                bdir.mkdir(), fdir.mkdir()
+                (bdir / "BENCH_selftest.json").write_text(json.dumps(baseline))
+                (fdir / "BENCH_selftest.json").write_text(json.dumps(fresh))
+                return run_gate(bdir, fdir, tolerance=0.10)
+        finally:
+            os.environ.pop("GITHUB_STEP_SUMMARY", None)
+            if old is not None:
+                os.environ["GITHUB_STEP_SUMMARY"] = old
 
     import copy
     clean = copy.deepcopy(baseline)
@@ -210,6 +286,40 @@ def self_test() -> int:
     assert gate_with(replay) == 1, \
         "self-test: diverged post-crash streams must fail the gate"
 
+    # proactive-tiering regressions: the proactive+prefetch lane stops
+    # beating reactive tiering (e.g. the prefetch stopped landing zero-stall
+    # or the idle-horizon offloads thrash the swap channel) ...
+    noproactive = copy.deepcopy(baseline)
+    noproactive["summary"]["verdict"]["x"]["proactive_wins"] = False
+    assert gate_with(noproactive) == 1, \
+        "self-test: injected proactive regression (proactive_wins=false) " \
+        "must fail"
+
+    # ... or the prefetch staging corrupts KV and the streams diverge
+    pcorrupt = copy.deepcopy(baseline)
+    pcorrupt["summary"]["verdict"]["x"]["proactive_streams_identical"] = False
+    assert gate_with(pcorrupt) == 1, \
+        "self-test: diverged proactive streams must fail the gate"
+
+    # the markdown job summary lands in $GITHUB_STEP_SUMMARY with one row
+    # per verdict boolean and one per latency metric
+    with tempfile.TemporaryDirectory() as td:
+        summary = Path(td, "step_summary.md")
+        assert gate_with(clean, summary_path=summary) == 0
+        text = summary.read_text(encoding="utf-8")
+        assert "Bench regression gate ✅" in text, text
+        assert "`summary.verdict.x.proactive_wins`" in text, text
+        assert "`cells.a.avg_latency_s`" in text, text
+        assert "❌" not in text, text
+    with tempfile.TemporaryDirectory() as td:
+        summary = Path(td, "step_summary.md")
+        assert gate_with(noproactive, summary_path=summary) == 1
+        text = summary.read_text(encoding="utf-8")
+        assert "Bench regression gate ❌" in text, text
+        assert "| selftest | `summary.verdict.x.proactive_wins` | ❌ |" \
+            in text, text
+        assert "### Problems" in text, text
+
     drift = copy.deepcopy(baseline)
     drift["config"] = {"seed": 1, "smoke": True}
     drift["cells"]["a"]["avg_latency_s"] = 99.0      # ignored: config drift
@@ -240,8 +350,10 @@ def self_test() -> int:
     print("CHECK-REGRESSION SELF-TEST OK: gate fails on injected latency "
           "regression, deadlock, flipped verdict (incl. tiering_wins / "
           "tiering_streams_identical / recovery_wins / "
-          "streams_identical_after_crash) and missing artifact; passes "
-          "clean runs and skips config drift")
+          "streams_identical_after_crash / proactive_wins / "
+          "proactive_streams_identical) and missing artifact; passes "
+          "clean runs, skips config drift, and writes the markdown "
+          "verdict table to $GITHUB_STEP_SUMMARY")
     return 0
 
 

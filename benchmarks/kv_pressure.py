@@ -13,10 +13,18 @@ A third lane runs the optimistic tight-cap cell again with KV *tiering* on
 cost-based reclaim should beat recompute-only on avg latency at the tightest
 cap while leaving every token stream bit-identical.
 
+A fourth *proactive* lane reruns the tiered cell with proactive offload and
+swap-in prefetch on (PR 10): idle-tail victims are swapped out before
+``_reclaim`` is forced to, and the next resume candidate's host->device copy
+is issued a tick early so it rides under compute and lands with a zero-stall
+charge. Proactive must beat the reactive tiered lane on avg latency at the
+tightest cap — again with bit-identical streams.
+
 Writes ``BENCH_kv_pressure.json``: per-cell metrics plus a summary verdict
 that optimistic+preemption beats conservative on avg latency at the tightest
-cap, with zero deadlocks, for both schedulers — and that the tiered run wins
-against recompute-only with identical streams.
+cap, with zero deadlocks, for both schedulers — that the tiered run wins
+against recompute-only with identical streams — and that the proactive lane
+wins against reactive tiering with identical streams.
 
     PYTHONPATH=src python -m benchmarks.kv_pressure
     PYTHONPATH=src python -m benchmarks.kv_pressure --smoke   # CI: tiny + asserts
@@ -40,6 +48,8 @@ MODES = ("conservative", "optimistic")
 
 def run_cell(scheduler: str, mode: str, cap: int, trace, *,
              tiering: bool = False, host_kv_cap: int = 0,
+             proactive: bool = False, idle_horizon_s=None,
+             swap_prefetch: bool = False,
              debug_invariants: bool = False) -> tuple:
     """Returns (cell_metrics, streams) — streams keyed by req_id for the
     tiering bit-identity verdict (never written to the JSON artifact)."""
@@ -48,7 +58,9 @@ def run_cell(scheduler: str, mode: str, cap: int, trace, *,
     kw = dict(limits=BatchLimits(cap=cap), latency_model=lm,
               prefix_cache=pc, kv_admission=mode)
     if tiering:
-        kw.update(kv_tiering=True, host_kv_cap=host_kv_cap)
+        kw.update(kv_tiering=True, host_kv_cap=host_kv_cap,
+                  proactive_offload=proactive, idle_horizon_s=idle_horizon_s,
+                  swap_prefetch=swap_prefetch)
     sched = SCHEDULERS[scheduler](**kw)
     engine = ServingEngine(sched, SimulatedExecutor(lm, prefix_cache=pc),
                            debug_invariants=debug_invariants)
@@ -63,7 +75,10 @@ def run_cell(scheduler: str, mode: str, cap: int, trace, *,
                 swap_outs=report.swap_outs, swap_ins=report.swap_ins,
                 swap_bytes_moved=report.swap_bytes_moved,
                 reclaim_swap_decisions=report.reclaim_swap_decisions,
-                reclaim_recompute_decisions=report.reclaim_recompute_decisions)
+                reclaim_recompute_decisions=report.reclaim_recompute_decisions,
+                proactive_offloads=report.proactive_offloads,
+                swap_prefetches=report.swap_prefetches,
+                prefetch_hits=report.prefetch_hits)
     assert sched.tokens_in_use == 0 and sched.committed_tokens == 0 \
         and sched.partial_prefill_tokens == 0, \
         "KV ledger leaked tokens after drain"
@@ -122,20 +137,39 @@ def main() -> None:
                f"{cells[key]['swap_ins']:<4d}")
         print(f"[kv_pressure] {key:36s} {tag}", flush=True)
 
+    # proactive lane: the tiered cell again with proactive offload + swap-in
+    # prefetch — resumes land with zero-stall charges (PR 10)
+    for name in SCHED_NAMES:
+        key = f"{name}/proactive/cap{tight}"
+        cells[key], streams[key] = run_cell(
+            name, "optimistic", tight, trace, tiering=True,
+            host_kv_cap=8 * tight, proactive=True, swap_prefetch=True,
+            debug_invariants=dbg)
+        tag = ("DEADLOCK" if cells[key]["deadlock"] else
+               f"avg {cells[key]['avg_latency_s']:8.2f}s  "
+               f"prefetch {cells[key]['swap_prefetches']:3d} "
+               f"({cells[key]['prefetch_hits']} hits)")
+        print(f"[kv_pressure] {key:36s} {tag}", flush=True)
+
     summary = {"max_request_footprint": max_fp, "caps": caps,
                "tight_cap": tight, "verdict": {}}
     for name in SCHED_NAMES:
         cons = cells[f"{name}/conservative/cap{tight}"]
         opti = cells[f"{name}/optimistic/cap{tight}"]
         tier = cells[f"{name}/tiered/cap{tight}"]
+        proa = cells[f"{name}/proactive/cap{tight}"]
         summary["verdict"][name] = {
             "conservative_avg_s": cons.get("avg_latency_s"),
             "optimistic_avg_s": opti.get("avg_latency_s"),
             "tiered_avg_s": tier.get("avg_latency_s"),
             "optimistic_preemptions": opti["preemptions"],
             "tiered_swap_outs": tier.get("swap_outs", 0),
+            "proactive_avg_s": proa.get("avg_latency_s"),
+            "proactive_offloads": proa.get("proactive_offloads", 0),
+            "swap_prefetches": proa.get("swap_prefetches", 0),
+            "prefetch_hits": proa.get("prefetch_hits", 0),
             "deadlocks": (int(cons["deadlock"]) + int(opti["deadlock"])
-                          + int(tier["deadlock"])),
+                          + int(tier["deadlock"]) + int(proa["deadlock"])),
             "optimistic_wins": (not cons["deadlock"] and not opti["deadlock"]
                                 and opti["avg_latency_s"] < cons["avg_latency_s"]),
             "tiering_wins": (not opti["deadlock"] and not tier["deadlock"]
@@ -143,6 +177,11 @@ def main() -> None:
             "tiering_streams_identical": (
                 streams[f"{name}/tiered/cap{tight}"]
                 == streams[f"{name}/optimistic/cap{tight}"]),
+            "proactive_wins": (not tier["deadlock"] and not proa["deadlock"]
+                               and proa["avg_latency_s"] < tier["avg_latency_s"]),
+            "proactive_streams_identical": (
+                streams[f"{name}/proactive/cap{tight}"]
+                == streams[f"{name}/tiered/cap{tight}"]),
         }
         v = summary["verdict"][name]
         fmt = lambda x: "DEADLOCK" if x is None else f"{x:.2f}s"
@@ -154,6 +193,12 @@ def main() -> None:
               f"recompute-only {fmt(v['optimistic_avg_s'])} "
               f"({'WIN' if v['tiering_wins'] else 'NO WIN'}, streams "
               f"{'identical' if v['tiering_streams_identical'] else 'DIVERGED'})",
+              flush=True)
+        print(f"[kv_pressure] {name}: proactive {fmt(v['proactive_avg_s'])} vs "
+              f"reactive tiered {fmt(v['tiered_avg_s'])} "
+              f"({'WIN' if v['proactive_wins'] else 'NO WIN'}, "
+              f"{v['swap_prefetches']} prefetches / {v['prefetch_hits']} hits, "
+              f"streams {'identical' if v['proactive_streams_identical'] else 'DIVERGED'})",
               flush=True)
 
     write_bench_json("kv_pressure", {"config": {
@@ -174,8 +219,16 @@ def main() -> None:
             f"{name}: tiering altered a token stream"
         assert v["tiering_wins"], \
             f"{name}: tiered run did not beat recompute-only at cap {tight}"
-    print("KV-PRESSURE OK: optimistic+preemption beats conservative and "
-          f"tiered swapping beats recompute-only at cap {tight} for "
+        assert v["swap_prefetches"] > 0, \
+            f"{name}: proactive lane never prefetched — no swap-in traffic"
+        assert v["proactive_streams_identical"], \
+            f"{name}: proactive tiering altered a token stream"
+        assert v["proactive_wins"], \
+            f"{name}: proactive lane did not beat reactive tiering at " \
+            f"cap {tight}"
+    print("KV-PRESSURE OK: optimistic+preemption beats conservative, "
+          f"tiered swapping beats recompute-only, and proactive+prefetch "
+          f"beats reactive tiering at cap {tight} for "
           f"{', '.join(SCHED_NAMES)}")
 
 

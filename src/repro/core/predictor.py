@@ -87,6 +87,19 @@ class OutputLenPredictor:
                   max(0, int(self.quantile * len(ordered) + 0.999999) - 1))
         return ordered[idx]
 
+    def predicted_remaining(self, key: int, produced: int) -> Optional[int]:
+        """Output tokens a request of template ``key`` that has already
+        produced ``produced`` tokens is still expected to emit — the
+        remaining-work estimate proactive offload's idle horizon consumes.
+        None with no history (callers fall back to ``remaining_output``).
+        A request that outran its prediction clamps to 0: it is presumed
+        near finish, so it is never an idle-tail victim on prediction
+        grounds."""
+        p = self.predict(key)
+        if p is None:
+            return None
+        return max(0, p - produced)
+
     # ---------------------------------------------------- speculation support
     def checkpoint(self) -> None:
         self._journal = []

@@ -101,6 +101,14 @@ class RelQuery:
     _was_all_waiting: bool = False     # Eq. 12 reuse predicate memo
     cache_miss_ratio: float = 1.0      # sampled utok*/tok estimate (Eq. 11)
     preemptions: int = 0               # times any request of R was preempted
+    # Parked relQueries hold results another stage is waiting on (a derive
+    # stage blocked on upstream DAG output, or a tool-call suspension): their
+    # device KV is idle until whoever parked them unparks them. A tiering
+    # scheduler with proactive offload treats their RUNNING requests as
+    # first-class swap-out victims and will not swap them back in while
+    # parked. Parking only affects KV placement — it does not cancel, finish,
+    # or reorder the relQuery.
+    parked: bool = False
     # Monotone counter bumped by the scheduler whenever any request of R
     # changes state (prefill finish, decode finish, preemption, cancel,
     # speculative rollback). The DPU's incremental refresh memoizes its

@@ -61,7 +61,10 @@ class SchedulerBase:
                  host_kv_cap: int = 0,
                  swap_bandwidth_gbps: float = 32.0,
                  kv_bytes_per_token: int = KV_BYTES_PER_TOKEN,
-                 predictor: Optional[OutputLenPredictor] = None):
+                 predictor: Optional[OutputLenPredictor] = None,
+                 proactive_offload: bool = False,
+                 idle_horizon_s: Optional[float] = None,
+                 swap_prefetch: bool = False):
         from repro.core.latency_model import a100_opt13b
         if kv_admission not in KV_ADMISSION_MODES:
             raise ValueError(f"kv_admission must be one of {KV_ADMISSION_MODES}"
@@ -77,6 +80,19 @@ class SchedulerBase:
         if kv_tiering and swap_bandwidth_gbps <= 0:
             raise ValueError(f"swap_bandwidth_gbps must be > 0 "
                              f"(got {swap_bandwidth_gbps})")
+        if proactive_offload and not kv_tiering:
+            raise ValueError("proactive_offload requires kv_tiering — without "
+                             "a host tier there is nowhere to park idle-tail "
+                             "KV")
+        if swap_prefetch and not kv_tiering:
+            raise ValueError("swap_prefetch requires kv_tiering — there are "
+                             "no swap-ins to prefetch without a host tier")
+        if idle_horizon_s is not None and not proactive_offload:
+            raise ValueError("idle_horizon_s only applies with "
+                             "proactive_offload on")
+        if idle_horizon_s is not None and idle_horizon_s <= 0:
+            raise ValueError(f"idle_horizon_s must be > 0 "
+                             f"(got {idle_horizon_s})")
         self.limits = limits or BatchLimits()
         self.lm = latency_model or a100_opt13b()
         self.prefix_cache = prefix_cache
@@ -96,8 +112,35 @@ class SchedulerBase:
         self.reclaim_swap_decisions = 0
         self.reclaim_recompute_decisions = 0
         # swap ops the engine must mirror onto the executor before the next
-        # dispatch: ("out" | "in", req_id, tokens), in decision order
+        # dispatch: ("out" | "in" | "prefetch" | "prefetch_cancel", req_id,
+        # tokens), in decision order
         self._swap_ops: List[Tuple[str, str, int]] = []
+        # --- proactive tiering (FastServe-style offload + ALISE prefetch) ---
+        self.proactive_offload = bool(proactive_offload)
+        if self.proactive_offload and idle_horizon_s is None:
+            # the horizon must sit well above a typical request's remaining
+            # decode time: a victim below it is mid-flight work the batch
+            # would have scheduled, and offloading it thrashes the swap
+            # channel (measured: 2x avg-latency regression at 1s horizons on
+            # the kv_pressure trace). 8s only catches genuine stragglers.
+            idle_horizon_s = 8.0
+        self.idle_horizon_s = idle_horizon_s
+        self.swap_prefetch = bool(swap_prefetch)
+        self.proactive_offloads = 0
+        self.swap_prefetches = 0
+        self.prefetch_cancelled = 0
+        # proactively-offloaded victims: held on the host tier while admission
+        # work is waiting, so offload->swap-in ping-pong can't oscillate
+        self._proactive_out: Set[str] = set()
+        # req_id -> tokens whose host->device copy was issued ahead of the
+        # swap-in commit (the executor holds the staged blocks)
+        self._prefetch_inflight: Dict[str, int] = {}
+        # per-tick swap-channel state: requests resumed this tick are never
+        # proactive victims in the same tick, and the queue ledger is the
+        # contention term `_swap_cost_s` adds on top of the raw transfer
+        self._resumed_this_tick: Set[str] = set()
+        self._swap_tick_now: Optional[float] = None
+        self._tick_swap_queue_s = 0.0
         # per-request charged footprint: under predicted admission the charge
         # is prediction-dependent, so releases must use the exact value that
         # was charged, not a recomputed one
@@ -271,14 +314,27 @@ class SchedulerBase:
                 1 for rq in self.relqueries.values()
                 if rq.finish_time is None and rq.cancel_time is None),
         }
+        swapped_ids = {r.req_id for r in self._swapped}
         if repair:
             for key, value in expected.items():
                 setattr(self, key, value)
+            # proactive/prefetch tags are only meaningful for requests still
+            # on the host tier — restore paths intersect them down
+            self._proactive_out &= swapped_ids
+            self._prefetch_inflight = {
+                rid: tok for rid, tok in self._prefetch_inflight.items()
+                if rid in swapped_ids}
             return expected
         for key, value in expected.items():
             got = getattr(self, key)
             assert got == value, (
                 f"ledger drift: {key}={got} but queues imply {value}")
+        assert self._proactive_out <= swapped_ids, (
+            f"proactive-offload tags for non-swapped requests: "
+            f"{sorted(self._proactive_out - swapped_ids)}")
+        assert set(self._prefetch_inflight) <= swapped_ids, (
+            f"prefetch staged for non-swapped requests: "
+            f"{sorted(set(self._prefetch_inflight) - swapped_ids)}")
         owners = {r.req_id for r in self._running}
         owners |= {r.req_id for r in waiting if r.prefilled_tokens}
         charged = set(self._footprint_of)
@@ -760,6 +816,8 @@ class SchedulerBase:
             self._prompt_keys.pop(r.req_id, None)
             r.state = RequestState.CANCELLED
             r.finish_time = now
+        pending_prefetch = {op[1] for op in self._swap_ops
+                            if op[0] == "prefetch"}
         if self._swap_ops:
             # drop not-yet-drained swap ops for the cancelled requests: the
             # engine releases their executor state directly, so mirroring a
@@ -767,6 +825,22 @@ class SchedulerBase:
             gone = {r.req_id for r in cancelled}
             self._swap_ops = [op for op in self._swap_ops
                               if op[1] not in gone]
+        # cancel-while-prefetching: a staged swap-in for a cancelled request
+        # must release its device staging and refund this tick's bandwidth
+        # ledger — the copy never happens, so the channel time it reserved is
+        # given back. Prefetch ops still queued locally were purged above;
+        # ops already drained to the executor need an explicit cancel op so
+        # the staged device blocks are freed.
+        for r in cancelled:
+            self._proactive_out.discard(r.req_id)
+            staged = self._prefetch_inflight.pop(r.req_id, None)
+            if staged is None:
+                continue
+            self.prefetch_cancelled += 1
+            self._tick_swap_queue_s = max(
+                0.0, self._tick_swap_queue_s - self._xfer_s(staged))
+            if r.req_id not in pending_prefetch:
+                self._swap_ops.append(("prefetch_cancel", r.req_id, staged))
         rq.note_phase_change()
         rq.cancel_time = now
         self._unfinished -= 1
@@ -816,10 +890,20 @@ class SchedulerBase:
         return out
 
     # ------------------------------------------------------------- KV tiering
+    def _xfer_s(self, tokens: int) -> float:
+        """One-way transfer time of ``tokens`` of KV over the host link at
+        the full budget — the unit the per-tick queue ledger accumulates."""
+        return tokens * self.kv_bytes_per_token / self.swap_bandwidth_bytes
+
     def _swap_cost_s(self, tokens: int) -> float:
         """Modeled wall time to move ``tokens`` of KV device->host AND back
-        (a swap is only worth taking if the round trip beats re-prefill)."""
-        return 2.0 * tokens * self.kv_bytes_per_token / self.swap_bandwidth_bytes
+        (a swap is only worth taking if the round trip beats re-prefill).
+        Swaps already decided this tick share the ``swap_bandwidth_gbps``
+        budget, so the round trip queues behind them — under a swap storm
+        the contention term pushes the break-even toward recompute. A tick's
+        first swap sees an empty queue and prices exactly as the
+        pre-contention model did."""
+        return self._tick_swap_queue_s + 2.0 * self._xfer_s(tokens)
 
     def _should_swap(self, r: Request) -> bool:
         """Per-victim reclaim decision: swap beats recompute when moving the
@@ -868,6 +952,7 @@ class SchedulerBase:
         self.swap_outs += 1
         self.swapped_out_tokens += tokens
         self.swap_bytes_moved += tokens * self.kv_bytes_per_token
+        self._tick_swap_queue_s += self._xfer_s(tokens)
         self._swap_ops.append(("out", r.req_id, tokens))
 
     def _swap_in_request(self, r: Request, now: float) -> None:
@@ -887,16 +972,48 @@ class SchedulerBase:
         self.swap_ins += 1
         self.swapped_in_tokens += tokens
         self.swap_bytes_moved += tokens * self.kv_bytes_per_token
+        self._proactive_out.discard(r.req_id)
+        self._resumed_this_tick.add(r.req_id)
+        if self._prefetch_inflight.pop(r.req_id, None) is None:
+            # un-prefetched resume: the copy happens now and occupies the
+            # shared channel this tick (a prefetched one already paid when
+            # the copy was issued)
+            self._tick_swap_queue_s += self._xfer_s(tokens)
         self._swap_ops.append(("in", r.req_id, tokens))
 
+    def _swap_in_blocked(self, r: Request) -> bool:
+        """A swapped request the resume scan must pass over: its relQuery is
+        parked (the KV was offloaded *because* nobody will decode it), or it
+        is a proactive victim and admission work is still waiting — resuming
+        it would undo the offload and ping-pong against the next tick's
+        pressure. Proactive victims resume once the waiting queue drains."""
+        if self.relqueries[r.rel_id].parked:
+            return True
+        return (r.req_id in self._proactive_out
+                and any(self._waiting_of.values()))
+
+    def _pick_swap_in_candidate(self) -> Optional[Request]:
+        """Next resume candidate: the first swapped request not blocked.
+        With nothing blocked this is the FCFS head — identical to the
+        pre-proactive scheduler."""
+        for r in self._swapped:
+            if not self._swap_in_blocked(r):
+                return r
+        return None
+
     def _maybe_swap_in(self, now: float) -> None:
-        """Bring swapped requests back to device, FCFS, while the *resident*
-        measure plus one decode step fits under the cap. Progress guarantee:
-        with nothing running and nothing waiting, the head swaps in as long
-        as it alone fits the cap — a replica whose whole population is on
-        the host tier must not idle forever."""
+        """Bring swapped requests back to device, FCFS (skipping blocked
+        entries — parked relQueries and held proactive victims), while the
+        *resident* measure plus one decode step fits under the cap. Progress
+        guarantee: with nothing running and nothing waiting, the candidate
+        swaps in as long as it alone fits the cap — a replica whose whole
+        population is on the host tier must not idle forever. With prefetch
+        enabled, the next candidate's host->device copy is issued now so a
+        later commit finds the blocks already staged."""
         while self._swapped:
-            r = self._swapped[0]
+            r = self._pick_swap_in_candidate()
+            if r is None:
+                break
             tokens = r.total_tokens
             growth = min(len(self._running) + 1, self.limits.max_num_seqs)
             fits = (len(self._running) < self.limits.max_num_seqs
@@ -908,6 +1025,92 @@ class SchedulerBase:
             if not (fits or force):
                 break
             self._swap_in_request(r, now)
+        if self.swap_prefetch:
+            self._issue_swap_prefetch(now)
+
+    def _issue_swap_prefetch(self, now: float) -> None:
+        """Start the next resume candidate's host->device copy one tick
+        early: the executor stages the blocks under this tick's compute, so
+        when ``_maybe_swap_in`` commits the resume the copy has already been
+        paid for. One candidate deep — prefetching further would speculate
+        on a resume order that pressure may reshuffle. Timing-only: the
+        resume decision itself is unchanged, so token streams are
+        bit-identical prefetch-on vs off."""
+        r = self._pick_swap_in_candidate()
+        if r is None or r.req_id in self._prefetch_inflight:
+            return
+        tokens = r.total_tokens
+        self._prefetch_inflight[r.req_id] = tokens
+        self.swap_prefetches += 1
+        self._tick_swap_queue_s += self._xfer_s(tokens)
+        self._swap_ops.append(("prefetch", r.req_id, tokens))
+
+    def _proactive_offload_tick(self, now: float) -> None:
+        """FastServe-style proactive offload, run after resumes and *before*
+        ``preempt_for_headroom``/``choose_batch`` — victims leave the running
+        list before the batch is chosen, so a scheduled request is never
+        evicted by construction. Three idle-tail victim classes:
+
+        1. requests of parked relQueries (a derive stage blocked on upstream
+           DAG results): their device KV is dead weight until unparked;
+        2. overflow stragglers past the decode batch width: the decode
+           candidate can never include them this tick;
+        3. under pre-pressure (the head-of-line admission need does not fit
+           the cap), the running request with the largest predicted remaining
+           work, while that estimate exceeds the idle horizon.
+
+        Victims are tagged in ``_proactive_out`` so ``_maybe_swap_in`` holds
+        them on the host tier while admission work is waiting; requests
+        resumed this tick are never re-offloaded in the same tick."""
+        def can_offload(r: Request) -> bool:
+            return (r.state == RequestState.RUNNING
+                    and r.req_id not in self._resumed_this_tick
+                    and self.host_tokens_in_use + r.total_tokens
+                    <= self.host_kv_cap)
+
+        def offload(r: Request) -> None:
+            self.proactive_offloads += 1
+            self._proactive_out.add(r.req_id)
+            self.swap_out_request(r, now)
+
+        for r in [r for r in self._running
+                  if self.relqueries[r.rel_id].parked]:
+            if can_offload(r):
+                offload(r)
+        width = min(self.limits.max_num_seqs,
+                    self.limits.max_num_batched_tokens)
+        for r in list(self._running[width:]):
+            if can_offload(r):
+                offload(r)
+        if self.idle_horizon_s is None:
+            return
+        while True:
+            need = self._progress_need()
+            if need <= 0 or self.kv_demand() + need <= self.limits.cap:
+                break       # no pre-pressure: nothing to make headroom for
+            best: Optional[Request] = None
+            best_s = self.idle_horizon_s
+            for r in self._running:
+                if not can_offload(r):
+                    continue
+                rem_s = self._predicted_remaining_s(r)
+                if rem_s > best_s:
+                    best, best_s = r, rem_s
+            if best is None:
+                break
+            offload(best)
+
+    def _predicted_remaining_s(self, r: Request) -> float:
+        """Expected remaining decode wall time of ``r`` — the idle-horizon
+        yardstick. Predictor-driven when history exists, worst-case
+        ``remaining_output`` otherwise."""
+        rem: Optional[int] = None
+        if self.predictor is not None:
+            rem = self.predictor.predicted_remaining(
+                self._template_key(r), len(r.output_tokens))
+        if rem is None:
+            rem = r.remaining_output
+        return rem * self.lm.decode_time(1)
 
     def drain_swap_ops(self) -> List[Tuple[str, str, int]]:
         """Swap decisions since the last drain, in order — the engine mirrors
@@ -1012,11 +1215,19 @@ class SchedulerBase:
     # ------------------------------------------------------------- lifecycle
     def schedule(self, now: float) -> Optional[Batch]:
         """Template: refresh priorities, resume swapped requests that fit
-        again (tiering), relieve KV pressure (preempting admission modes),
-        then let the policy pick this iteration's batch."""
+        again (tiering), proactively offload idle tails, relieve KV pressure
+        (preempting admission modes), then let the policy pick this
+        iteration's batch."""
         self.refresh_priorities(now)
         if self.kv_tiering:
+            if now != self._swap_tick_now:
+                # fresh tick: the swap channel drained, resumes age out
+                self._swap_tick_now = now
+                self._tick_swap_queue_s = 0.0
+                self._resumed_this_tick = set()
             self._maybe_swap_in(now)
+            if self.proactive_offload:
+                self._proactive_offload_tick(now)
         if self.kv_admission != "conservative":
             self.preempt_for_headroom(now)
         return self.choose_batch(now)
@@ -1151,7 +1362,13 @@ class SchedulerBase:
                         self.swap_ins, self.swapped_out_tokens,
                         self.swapped_in_tokens, self.swap_bytes_moved,
                         self.reclaim_swap_decisions,
-                        self.reclaim_recompute_decisions),
+                        self.reclaim_recompute_decisions,
+                        set(self._proactive_out),
+                        dict(self._prefetch_inflight),
+                        set(self._resumed_this_tick),
+                        self._swap_tick_now, self._tick_swap_queue_s,
+                        self.proactive_offloads, self.swap_prefetches,
+                        self.prefetch_cancelled),
             "footprints": dict(self._footprint_of),
             "waiting_of": {k: list(v) for k, v in self._waiting_of.items()},
             "running": list(self._running),
@@ -1195,7 +1412,12 @@ class SchedulerBase:
          self.swap_outs, self.swap_ins, self.swapped_out_tokens,
          self.swapped_in_tokens, self.swap_bytes_moved,
          self.reclaim_swap_decisions,
-         self.reclaim_recompute_decisions) = cp["tiering"]
+         self.reclaim_recompute_decisions,
+         self._proactive_out, self._prefetch_inflight,
+         self._resumed_this_tick,
+         self._swap_tick_now, self._tick_swap_queue_s,
+         self.proactive_offloads, self.swap_prefetches,
+         self.prefetch_cancelled) = cp["tiering"]
         self._footprint_of = cp["footprints"]
         self._waiting_of = cp["waiting_of"]
         self._running = cp["running"]

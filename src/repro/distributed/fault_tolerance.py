@@ -123,7 +123,8 @@ _SCHED_COUNTERS = (
     "preemptions", "preempted_tokens", "missing_decode_outputs",
     "shared_tokens_saved", "swap_outs", "swap_ins", "swapped_out_tokens",
     "swapped_in_tokens", "swap_bytes_moved", "reclaim_swap_decisions",
-    "reclaim_recompute_decisions",
+    "reclaim_recompute_decisions", "proactive_offloads", "swap_prefetches",
+    "prefetch_cancelled",
 )
 
 

@@ -114,6 +114,13 @@ class ServiceReport:
     swap_bytes_moved: int = 0
     reclaim_swap_decisions: int = 0
     reclaim_recompute_decisions: int = 0
+    # proactive-tiering subsystem: idle-tail offloads ahead of pressure,
+    # prefetched swap-ins (and how many committed with the copy fully
+    # landed), and prefetches aborted by cancellation
+    proactive_offloads: int = 0
+    swap_prefetches: int = 0
+    prefetch_hits: int = 0
+    prefetch_cancelled: int = 0
 
     @property
     def avg_latency(self) -> float:
@@ -168,6 +175,10 @@ def merge_reports(reports: Sequence[ServiceReport]) -> ServiceReport:
         merged.swap_bytes_moved += rep.swap_bytes_moved
         merged.reclaim_swap_decisions += rep.reclaim_swap_decisions
         merged.reclaim_recompute_decisions += rep.reclaim_recompute_decisions
+        merged.proactive_offloads += rep.proactive_offloads
+        merged.swap_prefetches += rep.swap_prefetches
+        merged.prefetch_hits += rep.prefetch_hits
+        merged.prefetch_cancelled += rep.prefetch_cancelled
     merged.events.sort(key=lambda e: (e.start, e.replica))
     merged.cancelled_rel_ids.sort()
     merged.prefix_hit_ratio = (hit_tokens / merged.prefix_lookup_tokens
@@ -254,7 +265,7 @@ class EngineCore:
         batch = self._acquire_batch(now)
         if batch is None:
             return None
-        swap_s = self._apply_swaps()
+        swap_s = self._apply_swaps(now)
         duration, result = self.executor.execute(batch, now)
         start, end = now, now + duration + swap_s
         self.scheduler.complete_batch(batch, result, start, end)
@@ -284,7 +295,7 @@ class EngineCore:
         # swaps the schedule decided on (speculative ones included — a
         # committed plan's journal survived, a flushed plan's was rolled
         # back) land on the device before the batch that relies on them
-        swap_s = self._apply_swaps()
+        swap_s = self._apply_swaps(now)
         inflight = self.executor.dispatch(batch, now)
         spec = self._speculate(batch, now)
         duration, result = self.executor.wait(inflight)
@@ -321,22 +332,32 @@ class EngineCore:
             batch = self._schedule(now, retry=True)
         return batch, False
 
-    def _apply_swaps(self) -> float:
+    def _apply_swaps(self, now: float = 0.0) -> float:
         """Mirror the scheduler's swap decisions onto the executor *before*
         the next dispatch: a swap-out must free device KV before the batch
-        that was admitted into that headroom runs, and a swap-in must restore
-        it before the request decodes. Returns the seconds of swap transfer
-        the executor charges to this tick (0.0 for real executors, which
-        overlap the copies with dispatch/wait; the simulated executor models
-        the transfer at its configured bandwidth)."""
+        that was admitted into that headroom runs, a swap-in must restore it
+        before the request decodes, and a prefetch stages the copy early so
+        the later swap-in commit finds it landed (prefetch_cancel undoes a
+        staging whose request was cancelled first). Returns the seconds of
+        swap transfer the executor charges to this tick (0.0 for real
+        executors, which overlap the copies with dispatch/wait; the simulated
+        executor prices a shared-bandwidth channel)."""
         ops = self.scheduler.drain_swap_ops()
         if not ops:
             return 0.0
-        out = getattr(self.executor, "swap_out", None)
-        inn = getattr(self.executor, "swap_in", None)
+        begin = getattr(self.executor, "begin_swap_tick", None)
+        if begin is not None:
+            begin(now)
+        hooks = {
+            "out": getattr(self.executor, "swap_out", None),
+            "in": getattr(self.executor, "swap_in", None),
+            "prefetch": getattr(self.executor, "prefetch_swap_in", None),
+            "prefetch_cancel": getattr(self.executor,
+                                       "cancel_swap_prefetch", None),
+        }
         swap_s = 0.0
         for kind, req_id, tokens in ops:
-            hook = out if kind == "out" else inn
+            hook = hooks[kind]
             if hook is not None:
                 swap_s += hook(req_id, tokens)
         return swap_s
@@ -592,6 +613,12 @@ class EngineCore:
             reclaim_recompute_decisions=getattr(self.scheduler,
                                                 "reclaim_recompute_decisions",
                                                 0),
+            proactive_offloads=getattr(self.scheduler,
+                                       "proactive_offloads", 0),
+            swap_prefetches=getattr(self.scheduler, "swap_prefetches", 0),
+            prefetch_hits=getattr(self.executor, "prefetch_hits", 0),
+            prefetch_cancelled=getattr(self.scheduler,
+                                       "prefetch_cancelled", 0),
         )
 
 

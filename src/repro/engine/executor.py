@@ -187,6 +187,10 @@ class RealExecutor(_ExecutorBase):
         # numpy, so the transfer overlaps the in-flight batch's compute.
         self._host_stash: Dict[str, Tuple[Request, int, object]] = {}
         self._pending_host: List[str] = []
+        # swap-in prefetch: req_id -> device-resident copy of its stash,
+        # staged ahead of the commit so the slot write pays no host->device
+        # transfer (the stash itself stays authoritative until commit)
+        self._prestaged: Dict[str, object] = {}
 
     # ------------------------------------------------------------------ slots
     def _alloc_slot(self, req: Request) -> int:
@@ -208,6 +212,7 @@ class RealExecutor(_ExecutorBase):
         preemption; unknown req_ids are a no-op."""
         self._free_slot(req_id)
         self._host_stash.pop(req_id, None)
+        self._prestaged.pop(req_id, None)
 
     # --------------------------------------------------------------- swapping
     def _slot_axis(self, arr) -> Optional[int]:
@@ -249,13 +254,39 @@ class RealExecutor(_ExecutorBase):
         self._free_slot(req_id)
         return 0.0
 
+    def prefetch_swap_in(self, req_id: str, tokens: int) -> float:
+        """Stage a stashed request's KV back onto the device ahead of its
+        swap-in commit: the ``device_put`` is issued here, riding under the
+        in-flight batch's compute, so the commit's slot write consumes an
+        already-resident array instead of paying the host->device copy at
+        dispatch. Unknown/already-staged req_ids are a no-op."""
+        entry = self._host_stash.get(req_id)
+        if entry is None or req_id in self._prestaged:
+            return 0.0
+        _, _, stash = entry
+        self._prestaged[req_id] = jax.tree.map(
+            lambda x: x if isinstance(x, str) else jax.device_put(x), stash)
+        return 0.0
+
+    def cancel_swap_prefetch(self, req_id: str, tokens: int) -> float:
+        """Drop a staged prefetch whose request was cancelled before the
+        swap-in commit (the authoritative host stash is freed by
+        ``release_request``). Idempotent."""
+        self._prestaged.pop(req_id, None)
+        return 0.0
+
     def swap_in(self, req_id: str, tokens: int) -> float:
         """Restore a stashed request into a fresh slot (host->device write).
-        The request resumes decoding at its stashed position — no re-prefill."""
+        The request resumes decoding at its stashed position — no re-prefill.
+        A prefetched request's staged device copy is consumed instead of the
+        host stash, skipping the transfer."""
         entry = self._host_stash.pop(req_id, None)
         if entry is None:
             return 0.0
         req, position, stash = entry
+        staged = self._prestaged.pop(req_id, None)
+        if staged is not None:
+            stash = staged
         i = self._alloc_slot(req)
 
         def put(dst, src):
@@ -520,6 +551,9 @@ class PagedRealExecutor(_ExecutorBase):
         # next wait() materializes them (transfer overlapped with compute).
         self._host_stash: Dict[str, Tuple[Request, Dict[str, object]]] = {}
         self._pending_host: List[str] = []
+        # swap-in prefetch: req_id -> staged copy plan; the blocks were
+        # written at prefetch time, so the commit is pure accounting
+        self._staged_swap_in: Dict[str, List[Tuple[int, int]]] = {}
         self._prefill_fn: Dict[Tuple[int, int], object] = {}
         self._scatter_fn: Dict[Tuple[int, int], object] = {}
         self._decode_fn: Dict[Tuple[int, int], object] = {}
@@ -554,8 +588,9 @@ class PagedRealExecutor(_ExecutorBase):
         blocks and stash go too."""
         known = self._active.pop(req_id, None) is not None
         known = (self._host_stash.pop(req_id, None) is not None) or known
+        self._staged_swap_in.pop(req_id, None)
         if known:
-            self.bm.free(req_id)
+            self.bm.free(req_id)   # staged prefetch blocks go back too
 
     # --------------------------------------------------------------- swapping
     def swap_out(self, req_id: str, tokens: int) -> float:
@@ -581,14 +616,50 @@ class PagedRealExecutor(_ExecutorBase):
         self._pending_host.append(req_id)
         return 0.0
 
+    def prefetch_swap_in(self, req_id: str, tokens: int) -> float:
+        """Stage a swapped request's host image into freshly-allocated device
+        blocks ahead of the swap-in commit — the pool writes happen here,
+        riding under the in-flight batch's compute, so the commit is pure
+        accounting. No-op when the request is unknown, already staged, or
+        the pool lacks free blocks (the commit falls back to the synchronous
+        path)."""
+        entry = self._host_stash.get(req_id)
+        if entry is None or req_id in self._staged_swap_in:
+            return 0.0
+        plan = self.bm.prefetch_swap_in(req_id)
+        if plan is None:
+            return 0.0
+        _, data = entry
+        dst = jnp.asarray([d for _, d in plan], jnp.int32)
+        for name in ("k", "v"):
+            src = jnp.asarray(data[name]).astype(self.pools[name].dtype)
+            self.pools[name] = self.pools[name].at[:, :, dst].set(src)
+        self._staged_swap_in[req_id] = plan
+        return 0.0
+
+    def cancel_swap_prefetch(self, req_id: str, tokens: int) -> float:
+        """Return a staged prefetch's device blocks (the request was
+        cancelled before commit). The pool bytes written at staging are
+        simply orphaned — freed blocks are always rewritten before reuse.
+        Idempotent."""
+        if self._staged_swap_in.pop(req_id, None) is not None:
+            self.bm.cancel_prefetch(req_id)
+        return 0.0
+
     def swap_in(self, req_id: str, tokens: int) -> float:
         """Restore a swapped request into fresh private device blocks (its
         shared-prefix identity was dropped at swap-out) and resume decode at
-        its stashed context length — no re-prefill."""
+        its stashed context length — no re-prefill. A prefetched request's
+        blocks were already allocated and written at staging, so its commit
+        skips the copy entirely."""
         entry = self._host_stash.pop(req_id, None)
         if entry is None:
             return 0.0
         r, data = entry
+        if self._staged_swap_in.pop(req_id, None) is not None:
+            self.bm.commit_prefetch(req_id)
+            self._active[req_id] = r
+            return 0.0
         plan = self.bm.swap_in(req_id)         # [(host_bid, device_bid)]
         dst = jnp.asarray([d for _, d in plan], jnp.int32)
         for name in ("k", "v"):

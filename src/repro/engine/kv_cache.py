@@ -46,6 +46,10 @@ class BlockManager:
         # host tier: swapped-out sequences hold host blocks (never shared)
         self._host_free: List[int] = list(range(num_host_blocks - 1, -1, -1))
         self._host_seqs: Dict[str, HostAllocation] = {}
+        # swap-in prefetch staging: seq_id -> fresh device blocks already
+        # holding (a copy of) the host image, awaiting commit or cancel. The
+        # host allocation stays authoritative until commit.
+        self._staged: Dict[str, List[int]] = {}
 
     # ---------------------------------------------------------------- queries
     @property
@@ -192,6 +196,7 @@ class BlockManager:
                     if key is not None:
                         self._prefix_blocks.pop(key, None)
                     self._free.append(bid)
+        self.cancel_prefetch(seq_id)
         host = self._host_seqs.pop(seq_id, None)
         if host is not None:
             self._host_free.extend(host.block_ids)
@@ -234,14 +239,67 @@ class BlockManager:
         return plan
 
     def can_swap_in(self, seq_id: str) -> bool:
+        if seq_id in self._staged:
+            return True    # its device blocks are already allocated
         host = self._host_seqs.get(seq_id)
         return host is not None and len(host.block_ids) <= len(self._free)
+
+    # ------------------------------------------------------- swap-in prefetch
+    def prefetch_swap_in(self, seq_id: str) -> Optional[List[Tuple[int, int]]]:
+        """Stage a swapped sequence's host image into fresh device blocks
+        ahead of the swap-in commit. Returns the copy plan
+        ``[(host_bid, device_bid), ...]``, or None when the sequence is not on
+        the host tier, is already staged, or the pool lacks free blocks (the
+        commit then takes the synchronous ``swap_in`` path). The host
+        allocation stays authoritative until ``commit_prefetch`` — a cancel
+        just returns the fresh blocks."""
+        host = self._host_seqs.get(seq_id)
+        if host is None or seq_id in self._staged:
+            return None
+        need = len(host.block_ids)
+        if need > len(self._free):
+            return None
+        fresh = [self._free.pop() for _ in range(need)]
+        for bid in fresh:
+            self._ref[bid] = 1
+        self._staged[seq_id] = fresh
+        return list(zip(host.block_ids, fresh))
+
+    def commit_prefetch(self, seq_id: str) -> None:
+        """Finish a staged swap-in: the staged blocks become the sequence's
+        device allocation and its host blocks are returned to the host free
+        list."""
+        fresh = self._staged.pop(seq_id)
+        host = self._host_seqs.pop(seq_id)
+        self._host_free.extend(host.block_ids)
+        self._seqs[seq_id] = SeqAllocation(
+            block_ids=fresh, num_tokens=host.num_tokens,
+            shared_prefix_blocks=0)
+
+    def cancel_prefetch(self, seq_id: str) -> None:
+        """Abort a staged swap-in (the request was cancelled between prefetch
+        and commit): the staged device blocks return to the free list; the
+        host image is untouched — ``free`` reclaims it separately.
+        Idempotent."""
+        fresh = self._staged.pop(seq_id, None)
+        if fresh is None:
+            return
+        for bid in fresh:
+            del self._ref[bid]
+            self._free.append(bid)
 
     def swap_in(self, seq_id: str) -> List[Tuple[int, int]]:
         """Bring a swapped sequence back to device. Returns the copy plan
         ``[(host_bid, device_bid), ...]``. The sequence gets fresh private
         blocks (its former shared-prefix identity was dropped at swap-out —
-        resumption never aliases a sibling's pages)."""
+        resumption never aliases a sibling's pages). A staged sequence
+        commits its prefetched blocks instead (the plan's copies already
+        happened, but re-copying is harmless)."""
+        if seq_id in self._staged:
+            plan = list(zip(self._host_seqs[seq_id].block_ids,
+                            self._staged[seq_id]))
+            self.commit_prefetch(seq_id)
+            return plan
         host = self._host_seqs.pop(seq_id)
         need = len(host.block_ids)
         if need > len(self._free):
@@ -267,6 +325,13 @@ class BlockManager:
         in_use = set()
         for alloc in self._seqs.values():
             in_use.update(alloc.block_ids)
+        # staged prefetch blocks are device-resident (not free, not yet a
+        # sequence allocation) and only ever staged for host-tier sequences
+        assert set(self._staged) <= set(self._host_seqs), \
+            "prefetch staged for a sequence not on the host tier"
+        for blocks in self._staged.values():
+            assert not (in_use & set(blocks)), "staged block also allocated"
+            in_use.update(blocks)
         free = set(self._free)
         assert not (in_use & free), "block both free and in use"
         assert all(self._ref.get(b, 0) > 0 for b in in_use)

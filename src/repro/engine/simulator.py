@@ -78,7 +78,20 @@ class SimulatedExecutor:
         # the tick that performs the swap (deterministic — no RNG)
         self.swap_bandwidth_bytes = swap_bandwidth_gbps * 1e9
         self.kv_bytes_per_token = kv_bytes_per_token
-        self.swap_busy_s = 0.0
+        self.swap_busy_s = 0.0          # seconds the channel actually moved bytes
+        self.swap_bytes_total = 0.0     # invariant: busy_s * bandwidth == bytes
+        # shared-bandwidth budget: one device<->host channel, FIFO. Absolute
+        # sim time the channel frees up (prefetch copies queued in earlier
+        # ticks keep it busy across tick boundaries), and the per-tick charge
+        # ledger (seconds of swap stall this tick's ops billed the engine).
+        self._channel_free_at = 0.0
+        self._tick_now: Optional[float] = None
+        self._tick_charged_s = 0.0
+        # req_id -> absolute time its prefetched host->device copy completes
+        self._prefetch_done: Dict[str, float] = {}
+        self.prefetch_issues = 0
+        self.prefetch_hits = 0          # commits whose copy had fully landed
+        self.prefetch_cancels = 0
         # straggler-mitigation model: with straggler_prob a batch takes
         # slowdown x nominal; with hedging, a duplicate dispatch to a healthy
         # DP replica bounds the wait at threshold x nominal + nominal.
@@ -100,18 +113,102 @@ class SimulatedExecutor:
 
     # ------------------------------------------------------------------
     # KV-tiering swap hooks (engine-drained): the simulated device has no
-    # buffers to copy, so a swap is pure modeled transfer time. One direction
-    # per call; the round trip costs twice this.
-    def _swap_time(self, tokens: int) -> float:
-        s = tokens * self.kv_bytes_per_token / self.swap_bandwidth_bytes
-        self.swap_busy_s += s
-        return s
+    # buffers to copy, so a swap is pure modeled transfer time, priced by a
+    # shared-bandwidth queue — concurrent ops serialize on one channel, so a
+    # tick's k-th swap queues behind the first k-1 and any still-running
+    # prefetch copy. With the channel free at tick start this degenerates to
+    # the per-op full-bandwidth price (each op charged exactly bytes/budget),
+    # bit-identical to the pre-budget model.
+    def _horizon(self) -> float:
+        """When this tick's already-billed swap stall ends — the point a new
+        op's wait is measured from (the engine serializes billed charges)."""
+        return (self._tick_now or 0.0) + self._tick_charged_s
+
+    def begin_swap_tick(self, now: float) -> None:
+        """Engine hook: called before a tick's swap ops are mirrored. Resets
+        the per-tick charge ledger; the channel-free clock persists across
+        ticks (a prefetch issued last tick may still occupy the link)."""
+        if now != self._tick_now:
+            self._tick_now = now
+            self._tick_charged_s = 0.0
+
+    def _charge(self, nbytes: float) -> float:
+        """Queue a synchronous (engine-blocking) transfer on the channel and
+        return the stall it bills this tick: wait-for-channel + transfer.
+        Never less than the raw transfer time, never negative."""
+        dur = nbytes / self.swap_bandwidth_bytes
+        horizon = self._horizon()
+        end = max(horizon, self._channel_free_at) + dur
+        self._channel_free_at = end
+        charge = end - horizon
+        self._tick_charged_s += charge
+        self.swap_busy_s += dur
+        self.swap_bytes_total += nbytes
+        return charge
 
     def swap_out(self, req_id: str, tokens: int) -> float:
-        return self._swap_time(tokens)
+        return self._charge(tokens * self.kv_bytes_per_token)
 
     def swap_in(self, req_id: str, tokens: int) -> float:
-        return self._swap_time(tokens)
+        done = self._prefetch_done.pop(req_id, None)
+        if done is None:
+            return self._charge(tokens * self.kv_bytes_per_token)
+        # prefetched commit: the copy was queued (and its bytes accounted)
+        # when issued; the commit only bills whatever tail of it hasn't
+        # landed yet. A fully-landed copy is a zero-stall resume.
+        charge = max(0.0, done - self._horizon())
+        if charge == 0.0:
+            self.prefetch_hits += 1
+        self._tick_charged_s += charge
+        return charge
+
+    def prefetch_swap_in(self, req_id: str, tokens: int) -> float:
+        """Issue a request's host->device copy ahead of its swap-in commit.
+        The copy queues on the shared channel and rides under compute — the
+        issuing tick is billed nothing; the commit bills only the un-landed
+        tail (usually zero by the time it fires)."""
+        if req_id in self._prefetch_done:
+            return 0.0
+        nbytes = tokens * self.kv_bytes_per_token
+        dur = nbytes / self.swap_bandwidth_bytes
+        start = max(self._horizon(), self._channel_free_at)
+        self._channel_free_at = start + dur
+        self._prefetch_done[req_id] = start + dur
+        self.prefetch_issues += 1
+        self.swap_busy_s += dur
+        self.swap_bytes_total += nbytes
+        return 0.0
+
+    def cancel_swap_prefetch(self, req_id: str, tokens: int) -> float:
+        """Abort a staged prefetch (request cancelled before commit). The
+        un-copied remainder is refunded to the channel — bytes that never
+        moved must not count as moved — when the copy is still the channel's
+        tail; a copy another op already queued behind is sunk cost."""
+        done = self._prefetch_done.pop(req_id, None)
+        if done is None:
+            return 0.0
+        self.prefetch_cancels += 1
+        dur = tokens * self.kv_bytes_per_token / self.swap_bandwidth_bytes
+        if self._channel_free_at == done:
+            new_free = max(min(self._horizon(), done), done - dur)
+            refund = done - new_free
+            self._channel_free_at = new_free
+            self.swap_busy_s -= refund
+            self.swap_bytes_total -= refund * self.swap_bandwidth_bytes
+        return 0.0
+
+    def swap_ledger(self) -> Dict[str, float]:
+        """Audit view of the bandwidth budget — tests assert conservation
+        (busy seconds x budget == bytes moved; both non-negative)."""
+        return {
+            "busy_s": self.swap_busy_s,
+            "bytes": self.swap_bytes_total,
+            "tick_charged_s": self._tick_charged_s,
+            "channel_free_at": self._channel_free_at,
+            "prefetch_issues": self.prefetch_issues,
+            "prefetch_hits": self.prefetch_hits,
+            "prefetch_cancels": self.prefetch_cancels,
+        }
 
     # ------------------------------------------------------------------
     def _true_utok(self, r: Request, chunk: int) -> int:

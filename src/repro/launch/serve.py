@@ -66,6 +66,11 @@ def _print_report(tag: str, report) -> None:
               f"{report.swap_bytes_moved / 1e9:.2f} GB moved  reclaim "
               f"{report.reclaim_swap_decisions} swap / "
               f"{report.reclaim_recompute_decisions} recompute")
+    if report.proactive_offloads or report.swap_prefetches:
+        print(f"[{tag}] proactive-tiering: {report.proactive_offloads} offloads  "
+              f"{report.swap_prefetches} prefetches "
+              f"({report.prefetch_hits} zero-stall hits, "
+              f"{report.prefetch_cancelled} cancelled)")
 
 
 def run_planned(frontend: Frontend, trace, mode: str, tokenizer=None):
@@ -291,7 +296,29 @@ def main() -> None:
     ap.add_argument("--swap-bandwidth", type=float, default=None,
                     help="modeled device<->host link bandwidth in GB/s for "
                          "the swap cost model (with --kv-tiering on; "
-                         "default 32)")
+                         "default 32). Concurrent swaps in one tick queue "
+                         "against this shared budget")
+    ap.add_argument("--proactive-offload", default="off",
+                    choices=["on", "off"],
+                    help="FastServe-style proactive KV offload (with "
+                         "--kv-tiering on): each tick, idle-tail victims — "
+                         "requests of parked relQueries, stragglers past the "
+                         "decode batch width, and (under pre-pressure) "
+                         "requests whose predicted remaining work exceeds "
+                         "--idle-horizon — are swapped to the host tier "
+                         "before the pressure valve is forced to act. "
+                         "Timing-only: token streams are bit-identical "
+                         "on vs off")
+    ap.add_argument("--idle-horizon", type=float, default=None,
+                    help="predicted-remaining-work threshold in seconds for "
+                         "the proactive-offload idle-tail victim class (with "
+                         "--proactive-offload on; default 1.0)")
+    ap.add_argument("--swap-prefetch", default="off", choices=["on", "off"],
+                    help="ALISE-style swap-in prefetch (with --kv-tiering "
+                         "on): the next resume candidate's host->device copy "
+                         "is issued a tick early and rides under compute, so "
+                         "the resume commits with zero stall. Timing-only: "
+                         "token streams are bit-identical on vs off")
     ap.add_argument("--debug-invariants", action="store_true",
                     help="assert scheduler-ledger / block-pool / shared-"
                          "ledger invariants after every tick (slow; CI smoke)")
@@ -377,6 +404,19 @@ def main() -> None:
     if args.swap_bandwidth is not None and args.swap_bandwidth <= 0:
         raise SystemExit(f"--swap-bandwidth must be > 0 GB/s "
                          f"(got {args.swap_bandwidth})")
+    proactive_offload = args.proactive_offload == "on"
+    swap_prefetch = args.swap_prefetch == "on"
+    if proactive_offload and not kv_tiering:
+        raise SystemExit("--proactive-offload only applies with "
+                         "--kv-tiering on")
+    if swap_prefetch and not kv_tiering:
+        raise SystemExit("--swap-prefetch only applies with --kv-tiering on")
+    if args.idle_horizon is not None and not proactive_offload:
+        raise SystemExit("--idle-horizon only applies with "
+                         "--proactive-offload on")
+    if args.idle_horizon is not None and args.idle_horizon <= 0:
+        raise SystemExit(f"--idle-horizon must be > 0 s "
+                         f"(got {args.idle_horizon})")
     elastic = (args.autoscale or args.crash_at is not None
                or args.metrics_log is not None)
     if elastic and not args.simulate:
@@ -422,6 +462,9 @@ def main() -> None:
     tiering_kw = dict(kv_tiering=kv_tiering,
                       host_kv_cap=host_kv_cap if kv_tiering else 0,
                       swap_bandwidth_gbps=swap_bandwidth,
+                      proactive_offload=proactive_offload,
+                      idle_horizon_s=args.idle_horizon,
+                      swap_prefetch=swap_prefetch,
                       debug_invariants=args.debug_invariants)
 
     if args.simulate:

@@ -29,6 +29,9 @@ def build_simulated_cluster(num_replicas: int, scheduler: str = "relserve",
                             engine_loop: str = "serial",
                             kv_tiering: bool = False, host_kv_cap: int = 0,
                             swap_bandwidth_gbps: float = 32.0,
+                            proactive_offload: bool = False,
+                            idle_horizon_s: Optional[float] = None,
+                            swap_prefetch: bool = False,
                             debug_invariants: bool = False,
                             snapshot_every: int = 0) -> Cluster:
     lm = latency_model or a100_opt13b()
@@ -41,7 +44,10 @@ def build_simulated_cluster(num_replicas: int, scheduler: str = "relserve",
                   prefix_sharing=prefix_sharing)
         if kv_tiering:
             kw.update(kv_tiering=True, host_kv_cap=host_kv_cap,
-                      swap_bandwidth_gbps=swap_bandwidth_gbps)
+                      swap_bandwidth_gbps=swap_bandwidth_gbps,
+                      proactive_offload=proactive_offload,
+                      idle_horizon_s=idle_horizon_s,
+                      swap_prefetch=swap_prefetch)
         if scheduler.startswith("relserve"):
             kw["dpu_config"] = dpu_config or DPUConfig()
         return SCHEDULERS[scheduler](**kw)
@@ -69,6 +75,9 @@ def build_real_engine(arch: str = "qwen3-1.7b", scheduler: str = "relserve",
                       engine_loop: str = "serial",
                       kv_tiering: bool = False, host_kv_cap: int = 0,
                       swap_bandwidth_gbps: float = 32.0,
+                      proactive_offload: bool = False,
+                      idle_horizon_s: Optional[float] = None,
+                      swap_prefetch: bool = False,
                       debug_invariants: bool = False, **executor_kw):
     """A single-replica real-JAX serving engine on the chosen KV backend.
 
@@ -106,7 +115,10 @@ def build_real_engine(arch: str = "qwen3-1.7b", scheduler: str = "relserve",
               kv_admission=kv_admission, prefix_sharing=prefix_sharing)
     if kv_tiering:
         kw.update(kv_tiering=True, host_kv_cap=host_kv_cap,
-                  swap_bandwidth_gbps=swap_bandwidth_gbps)
+                  swap_bandwidth_gbps=swap_bandwidth_gbps,
+                  proactive_offload=proactive_offload,
+                  idle_horizon_s=idle_horizon_s,
+                  swap_prefetch=swap_prefetch)
     if latency_model is not None:
         kw["latency_model"] = latency_model
     if scheduler.startswith("relserve"):

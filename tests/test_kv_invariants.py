@@ -287,6 +287,42 @@ def test_three_tier_random_lifecycle_conserves_blocks(ops):
         "blocks leaked across the tiers after freeing every sequence"
 
 
+def test_cancel_while_prefetching_releases_staged_device_blocks():
+    """PR-10 regression: a sequence cancelled between prefetch issue and
+    swap-in commit must return its staged device blocks to the free pool —
+    via the explicit ``cancel_prefetch`` or the blanket ``free`` (the
+    executor's release path) — and a staged-then-committed sequence resumes
+    at its exact token count with no block leaked on either tier."""
+    bm = BlockManager(num_blocks=16, block_size=8, num_host_blocks=8)
+    bm.allocate("a", 24)                           # 3 blocks
+    bm.swap_out("a")
+    free0 = bm.free_blocks
+    plan = bm.prefetch_swap_in("a")
+    assert plan is not None and len(plan) == 3
+    assert bm.free_blocks == free0 - 3             # staged blocks held
+    bm.check_invariants()
+    assert bm.prefetch_swap_in("a") is None        # already staged: no-op
+    bm.free("a")                                   # cancel path (release)
+    bm.check_invariants()
+    assert bm.free_blocks == 16 and bm.host_free_blocks == 8
+
+    # explicit cancel: host image survives, only the staging is undone
+    bm.allocate("b", 24)
+    bm.swap_out("b")
+    assert bm.prefetch_swap_in("b") is not None
+    bm.cancel_prefetch("b")
+    bm.cancel_prefetch("b")                        # idempotent
+    bm.check_invariants()
+    assert bm.free_blocks == 16                    # staging fully undone
+    assert bm.is_swapped("b")                      # still resumable
+    bm.prefetch_swap_in("b")
+    bm.swap_in("b")                                # commits the staged copy
+    assert bm.context_len("b") == 24
+    bm.check_invariants()
+    bm.free("b")
+    assert bm.free_blocks == 16 and bm.host_free_blocks == 8
+
+
 def test_swap_out_of_fork_keeps_sibling_blocks_alive():
     """Deterministic pin of the shared-sibling rule: swapping out a CoW fork
     moves a self-contained copy to the host and drops only the fork's
@@ -380,6 +416,105 @@ def test_pipelined_cancel_interleavings_conserve_ledgers(script):
         for r in rq.requests:
             assert all(t >= 0 for t in r.output_tokens), \
                 "speculative placeholder token survived cancel/drain"
+
+
+# ----------------------------------------------------- proactive tiering (PR 10)
+SWAP_LEDGER_OPS = st.lists(
+    st.tuples(st.sampled_from(["tick", "out", "in", "prefetch", "cancel"]),
+              st.integers(1, 5000), st.integers(0, 7)),
+    min_size=1, max_size=80)
+
+
+@given(SWAP_LEDGER_OPS)
+@settings(max_examples=50, deadline=None)
+def test_swap_bandwidth_ledger_conservation(ops):
+    """Random swap traffic over the shared per-tick bandwidth budget: every
+    synchronous charge covers at least the raw transfer (bytes moved /
+    budget), charges and ledgers are never negative, and busy-seconds x
+    budget == bytes-moved holds after every op — including prefetch issues
+    (billed nothing up front) and cancels (refunds roll both sides back)."""
+    from repro.core.latency_model import a100_opt13b
+    from repro.engine.simulator import SimulatedExecutor
+
+    ex = SimulatedExecutor(a100_opt13b(), swap_bandwidth_gbps=8.0)
+    bw = ex.swap_bandwidth_bytes
+    now, counter = 0.0, [0]
+    ex.begin_swap_tick(now)
+    swapped, staged = [], []       # (req_id, tokens) per state
+    for op, tokens, pick in ops:
+        if op == "tick":
+            now += tokens / 1000.0
+            ex.begin_swap_tick(now)
+        elif op == "out":
+            counter[0] += 1
+            rid = f"r{counter[0]}"
+            charge = ex.swap_out(rid, tokens)
+            assert charge >= tokens * ex.kv_bytes_per_token / bw - 1e-9
+            swapped.append((rid, tokens))
+        elif op == "in" and swapped:
+            rid, tok = swapped.pop(pick % len(swapped))
+            assert ex.swap_in(rid, tok) >= 0.0
+            staged = [(r, t) for r, t in staged if r != rid]
+        elif op == "prefetch" and swapped:
+            rid, tok = swapped[pick % len(swapped)]
+            assert ex.prefetch_swap_in(rid, tok) == 0.0
+            if all(r != rid for r, _ in staged):
+                staged.append((rid, tok))
+        elif op == "cancel" and staged:
+            rid, tok = staged.pop(pick % len(staged))
+            swapped = [(r, t) for r, t in swapped if r != rid]
+            assert ex.cancel_swap_prefetch(rid, tok) == 0.0
+        led = ex.swap_ledger()
+        assert led["busy_s"] >= -1e-9 and led["bytes"] >= -1e-9
+        assert led["tick_charged_s"] >= -1e-9
+        assert abs(led["busy_s"] * bw - led["bytes"]) < 1e-3, \
+            "bandwidth ledger out of conservation: busy x budget != bytes"
+
+
+@given(st.integers(0, 7), st.sampled_from(["relserve", "vllm"]),
+       st.floats(0.01, 4.0))
+@settings(max_examples=10, deadline=None)
+def test_proactive_offload_never_evicts_scheduled_request(seed, name, horizon):
+    """Whatever the trace, scheduler and idle horizon: a request the current
+    tick's chosen batch schedules is never a proactive-offload victim (the
+    offload pass runs before batch choice and removes victims from the
+    running list, so the batch cannot contain one — this pins that ordering
+    against regression)."""
+    import copy
+
+    from repro.core.latency_model import a100_opt13b
+    from repro.core.policies import SCHEDULERS
+    from repro.core.priority import BatchLimits
+    from repro.data.trace import quick_trace
+    from repro.engine.engine import ServingEngine
+    from repro.engine.simulator import SimulatedExecutor
+
+    trace = quick_trace("rotten", num_relqueries=4, rate=4.0, seed=seed,
+                        max_requests=6)
+    max_fp = max(r.num_prompt_tokens + r.max_output_tokens
+                 for rq in trace for r in rq.requests)
+    cap = int(max_fp * 1.2)
+
+    class Guard(SCHEDULERS[name]):
+        def schedule(self, now):
+            before = set(self._proactive_out)
+            batch = super().schedule(now)
+            victims = self._proactive_out - before
+            if batch is not None and victims:
+                ids = {r.req_id for r in batch.all_requests()}
+                assert not (victims & ids), \
+                    "proactive offload evicted a scheduled request"
+            return batch
+
+    lm = a100_opt13b()
+    sched = Guard(limits=BatchLimits(cap=cap), latency_model=lm,
+                  kv_admission="optimistic", kv_tiering=True,
+                  host_kv_cap=8 * cap, proactive_offload=True,
+                  idle_horizon_s=horizon, swap_prefetch=True)
+    ServingEngine(sched, SimulatedExecutor(lm),
+                  debug_invariants=True).run_trace(copy.deepcopy(trace))
+    assert sched.tokens_in_use == 0 and sched.committed_tokens == 0
+    assert sched.host_tokens_in_use == 0
 
 
 def test_shared_ledger_victim_never_frees_sibling_blocks():

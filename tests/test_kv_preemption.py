@@ -530,6 +530,240 @@ def test_tiering_param_validation():
                           host_kv_cap=100, swap_bandwidth_gbps=0.0)
 
 
+# ------------------------------------------------------------ proactive tiering
+def test_proactive_param_validation():
+    with pytest.raises(ValueError, match="proactive_offload requires"):
+        RelServeScheduler(kv_admission="optimistic", proactive_offload=True)
+    with pytest.raises(ValueError, match="swap_prefetch requires"):
+        RelServeScheduler(kv_admission="optimistic", swap_prefetch=True)
+    with pytest.raises(ValueError, match="idle_horizon_s"):
+        _tiered_sched(idle_horizon_s=5.0)          # without proactive_offload
+    with pytest.raises(ValueError, match="idle_horizon_s"):
+        _tiered_sched(proactive_offload=True, idle_horizon_s=0.0)
+    # a sane straggler horizon attaches by default when proactive is on
+    sched = _tiered_sched(proactive_offload=True)
+    assert sched.idle_horizon_s == 8.0
+    assert _tiered_sched().idle_horizon_s is None  # reactive: no horizon
+
+
+def test_parked_relquery_proactively_offloaded_until_unparked():
+    """Class-1 victim: a parked relQuery's device KV is dead weight — the
+    proactive tick swaps it out, the resume scan passes over it while
+    parked, and unparking resumes the exact decode (no re-prefill)."""
+    sched = _tiered_sched(proactive_offload=True)
+    rq = make_relquery("A", [[1] * 40], 0.0, 20)
+    sched.add_relquery(rq, 0.0)
+    r = rq.requests[0]
+    b = sched.schedule(0.0)
+    sched.complete_batch(b, BatchResult({r.req_id: (5, False)}), 0.0, 1.0)
+    assert sched.drain_swap_ops() == []
+
+    rq.parked = True
+    assert sched.schedule(1.0) is None
+    assert r.state == RequestState.SWAPPED
+    assert sched.proactive_offloads == 1
+    assert sched.host_tokens_in_use == r.total_tokens
+    assert sched.drain_swap_ops() == [("out", r.req_id, r.total_tokens)]
+    assert sched.schedule(2.0) is None            # parked: resume blocked
+    assert r.state == RequestState.SWAPPED
+
+    rq.parked = False
+    b = sched.schedule(3.0)
+    assert r.state == RequestState.RUNNING
+    assert b.kind == "decode" and b.decode_requests == [r]
+    assert sched.drain_swap_ops() == [("in", r.req_id, r.total_tokens)]
+    assert sched.proactive_offloads == 1          # resumed, not re-offloaded
+    sched.complete_batch(b, BatchResult({r.req_id: (7, False)}), 3.0, 4.0)
+    assert r.output_tokens == [5, 7]              # generation survived
+
+
+def test_idle_horizon_offload_makes_headroom_for_admission():
+    """Class-3 victim: under pre-pressure (head-of-line admission need does
+    not fit the cap) the running request with the largest predicted
+    remaining work is offloaded before the batch is chosen, so the prefill
+    is admitted this tick instead of waiting for a forced reclaim."""
+    sched = _tiered_sched(cap=1200, proactive_offload=True,
+                          idle_horizon_s=1e-3)
+    rq_a = make_relquery("A", [[1] * 600], 0.0, 300)
+    sched.add_relquery(rq_a, 0.0)
+    a = rq_a.requests[0]
+    b1 = sched.schedule(0.0)
+    sched.complete_batch(b1, BatchResult({a.req_id: (5, False)}), 0.0, 1.0)
+
+    rq_b = make_relquery("B", [[2] * 600], 1.0, 300)
+    sched.add_relquery(rq_b, 1.0)
+    b2 = sched.schedule(1.0)
+    assert a.state == RequestState.SWAPPED        # straggler offloaded first
+    assert sched.proactive_offloads == 1
+    assert b2 is not None and rq_b.requests[0] in b2.prefill_requests
+    assert a.req_id not in {r.req_id for r in b2.all_requests()}
+
+
+def _prefetch_pair(**kw):
+    """Two single-request relQueries driven to RUNNING, then the cap shrunk
+    to just cover the resident pair: swapping A out afterwards leaves it
+    unable to resume beside B (fits needs +growth headroom the cap now
+    denies) — the canonical 'prefetch pending' setup."""
+    sched = _tiered_sched(cap=100_000, **kw)
+    reqs = {}
+    for rel_id, fill in (("A", 1), ("B", 2)):
+        rq = make_relquery(rel_id, [[fill] * 400], 0.0, 20)
+        sched.add_relquery(rq, 0.0)
+        reqs[rel_id] = rq.requests[0]
+    now = 0.0
+    while not all(r.prefilled and r.output_tokens for r in reqs.values()):
+        batch = sched.schedule(now)
+        assert batch is not None
+        sched.complete_batch(batch, BatchResult(
+            {r.req_id: (5, False) for r in batch.all_requests()}),
+            now, now + 1.0)
+        now += 1.0
+    sched.drain_swap_ops()
+    sched.limits = BatchLimits(cap=sched.kv_demand() + 1)
+    return sched, reqs["A"], reqs["B"], now
+
+
+def test_swap_prefetch_issued_tick_early_and_consumed_on_resume():
+    """The resume candidate's host->device copy is issued the tick before
+    its swap-in: one ("prefetch", ...) op while it still cannot fit, then a
+    single ("in", ...) op — with no second prefetch — when it resumes."""
+    sched, a, b, now = _prefetch_pair(swap_prefetch=True)
+    sched.swap_out_request(a, now)
+    assert sched.drain_swap_ops() == [("out", a.req_id, a.total_tokens)]
+
+    batch = sched.schedule(now + 1)
+    assert a.state == RequestState.SWAPPED        # cannot fit beside B
+    assert batch.kind == "decode" and batch.decode_requests == [b]
+    assert sched.swap_prefetches == 1
+    assert sched.drain_swap_ops() == [("prefetch", a.req_id, a.total_tokens)]
+    sched.complete_batch(batch, BatchResult({b.req_id: (6, True)}),
+                         now + 1, now + 2)
+
+    batch = sched.schedule(now + 3)               # B done: A resumes
+    assert a.state == RequestState.RUNNING
+    assert batch.decode_requests == [a]
+    assert sched.drain_swap_ops() == [("in", a.req_id, a.total_tokens)]
+    assert sched.swap_prefetches == 1             # prefetch not re-issued
+    assert not sched._prefetch_inflight
+
+
+def test_cancel_while_prefetching_releases_and_refunds():
+    """Satellite regression (beside the cancel-while-swapped lane): a
+    relQuery cancelled between prefetch issue and swap-in commit must emit a
+    ("prefetch_cancel", ...) op for the executor's staged copy, refund the
+    tick's bandwidth ledger, and leave every ledger drained."""
+    sched, a, b, now = _prefetch_pair(swap_prefetch=True)
+    sched.swap_out_request(a, now)
+    sched.drain_swap_ops()
+    batch = sched.schedule(now + 1)
+    assert sched.swap_prefetches == 1
+    assert sched.drain_swap_ops() == [("prefetch", a.req_id, a.total_tokens)]
+
+    queued_before = sched._tick_swap_queue_s
+    cancelled = sched.cancel_relquery("A", now + 1.5)
+    assert [r.req_id for r in cancelled] == [a.req_id]
+    assert sched.prefetch_cancelled == 1
+    assert not sched._prefetch_inflight
+    assert sched._tick_swap_queue_s <= queued_before
+    assert sched._tick_swap_queue_s >= 0.0
+    assert sched.drain_swap_ops() == \
+        [("prefetch_cancel", a.req_id, a.total_tokens)]
+    assert sched.host_tokens_in_use == 0
+    sched.complete_batch(batch, BatchResult({b.req_id: (6, True)}),
+                         now + 1, now + 2)
+    assert sched.schedule(now + 3) is None and not sched.has_work()
+    assert sched.tokens_in_use == 0 and sched.committed_tokens == 0
+
+
+def test_cancel_before_prefetch_op_drained_purges_it():
+    """If the cancel lands before the engine mirrored the prefetch op, the
+    op is purged outright — the executor never staged anything, so no
+    ("prefetch_cancel", ...) must reach it either."""
+    sched, a, b, now = _prefetch_pair(swap_prefetch=True)
+    sched.swap_out_request(a, now)
+    sched.drain_swap_ops()
+    sched.schedule(now + 1)                       # prefetch op NOT drained
+    assert sched.swap_prefetches == 1
+    sched.cancel_relquery("A", now + 1.5)
+    assert sched.prefetch_cancelled == 1
+    assert sched.drain_swap_ops() == []           # purged, nothing to undo
+    assert sched.host_tokens_in_use == 0
+
+
+def test_cancel_while_prefetching_refunds_bandwidth_ledger():
+    """SimulatedExecutor side of the regression: cancelling a staged copy
+    rolls the shared channel back — bytes that never moved are not billed —
+    while a copy another op already queued behind stays sunk cost. The
+    busy-seconds x budget == bytes-moved conservation law holds throughout."""
+    ex = SimulatedExecutor(a100_opt13b(), swap_bandwidth_gbps=8.0)
+    bw = ex.swap_bandwidth_bytes
+
+    def conserved():
+        led = ex.swap_ledger()
+        assert led["busy_s"] >= 0.0 and led["bytes"] >= 0.0
+        assert abs(led["busy_s"] * bw - led["bytes"]) < 1e-3
+        return led
+
+    ex.begin_swap_tick(0.0)
+    ex.swap_out("a", 400)
+    before = conserved()
+    assert ex.prefetch_swap_in("a", 400) == 0.0   # issue bills nothing
+    conserved()
+    assert ex.cancel_swap_prefetch("a", 400) == 0.0
+    after = conserved()
+    assert after["channel_free_at"] == before["channel_free_at"]  # full refund
+    assert after["bytes"] == before["bytes"]
+    assert after["prefetch_cancels"] == 1
+
+    # queued-behind case: another op lands after the staged copy, so the
+    # cancel cannot reclaim the channel time — sunk, but still conserved
+    ex.prefetch_swap_in("b", 400)
+    ex.swap_out("c", 100)
+    mid = conserved()
+    ex.cancel_swap_prefetch("b", 400)
+    sunk = conserved()
+    assert sunk["channel_free_at"] == mid["channel_free_at"]
+    assert sunk["bytes"] == mid["bytes"]
+
+
+@pytest.mark.parametrize("name", ["relserve", "vllm"])
+@pytest.mark.parametrize("loop", ["serial", "pipelined"])
+def test_proactive_prefetch_streams_identical(name, loop):
+    """Proactive offload + swap-in prefetch are timing-only: across both
+    schedulers and both engine loops the token streams are bit-identical to
+    the reactive tiered run, with the prefetch machinery demonstrably
+    engaged (issues > 0 and zero-stall hits > 0)."""
+    trace = quick_trace("rotten", num_relqueries=10, rate=3.0, seed=3,
+                        max_requests=10)
+    max_fp = max(r.num_prompt_tokens + r.max_output_tokens
+                 for rq in trace for r in rq.requests)
+    cap = int(max_fp * 1.2)
+
+    def run(proactive):
+        lm = a100_opt13b()
+        kw = dict(limits=BatchLimits(cap=cap), latency_model=lm,
+                  kv_admission="optimistic", kv_tiering=True,
+                  host_kv_cap=8 * cap)
+        if proactive:
+            kw.update(proactive_offload=True, swap_prefetch=True)
+        sched = SCHEDULERS[name](**kw)
+        engine = ServingEngine(sched, SimulatedExecutor(lm),
+                               engine_loop=loop, debug_invariants=True)
+        ran = copy.deepcopy(trace)
+        report = engine.run_trace(ran)
+        return sched, report, {r.req_id: tuple(r.output_tokens)
+                               for rq in ran for r in rq.requests}
+
+    off_sched, _, off_streams = run(False)
+    on_sched, on_report, on_streams = run(True)
+    assert off_sched.swap_outs > 0, "cap not tight enough to tier"
+    assert on_sched.swap_prefetches > 0, "prefetch never engaged"
+    assert on_report.prefetch_hits > 0, "no prefetch landed zero-stall"
+    assert on_streams == off_streams
+    assert on_sched.host_tokens_in_use == 0
+    assert on_sched.tokens_in_use == 0 and on_sched.committed_tokens == 0
+
+
 # ------------------------------------------------------- predicted admission
 def test_predicted_admission_charges_predicted_footprint():
     """The per-template predictor shrinks the admission charge from the
